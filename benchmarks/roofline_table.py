@@ -1,0 +1,61 @@
+"""Render the roofline table from the dry-run JSON records (§Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(results_dir: str = RESULTS) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def table(recs: List[Dict], mesh: str = "16x16") -> str:
+    hdr = (f"| arch | shape | compute s | memory s | collective s | "
+           f"bottleneck | useful | roofline frac | HBM GiB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                         f"{r['error'][:60]} | | | | | | |")
+            continue
+        rf = r["roofline"]
+        hbm = r.get("hbm_bytes_per_device", 0) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} | "
+            f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+            f"{rf['bottleneck']} | {rf['useful_flops_fraction']:.3f} | "
+            f"{rf['roofline_fraction']:.4f} | {hbm:.2f} |")
+    return "\n".join(lines)
+
+
+def run(csv=None):
+    from .harness import Csv
+    csv = csv or Csv("Roofline terms per dry-run cell")
+    for r in load():
+        if "error" in r:
+            csv.row(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}", 0.0,
+                    "ERROR")
+            continue
+        rf = r["roofline"]
+        csv.row(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}",
+                rf["step_time_s"],
+                f"bottleneck={rf['bottleneck']};"
+                f"useful={rf['useful_flops_fraction']:.3f};"
+                f"frac={rf['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### mesh {mesh}\n")
+        print(table(load(), mesh))

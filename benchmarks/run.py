@@ -1,0 +1,43 @@
+"""Benchmark driver — one section per paper table/figure. Prints
+``name,us_per_call,derived`` CSV (see harness.Csv)."""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: low,high,skewed,"
+                         "conversion,breakeven,sweep,moe,roofline")
+    ap.add_argument("--scale", type=float, default=0.12,
+                    help="matrix suite scale factor")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import conversion, grid_sweep, moe_dispatch, roofline_table, \
+        spmv_tables
+
+    def want(name):
+        return only is None or name in only
+
+    if want("low"):
+        spmv_tables.run_low()
+    if want("high"):
+        spmv_tables.run_high()
+    if want("skewed"):
+        spmv_tables.run_skewed()
+    if want("conversion"):
+        conversion.run(suite_scale=args.scale)
+    if want("breakeven"):
+        conversion.run_break_even()
+    if want("sweep"):
+        grid_sweep.run()
+    if want("moe"):
+        moe_dispatch.run()
+    if want("roofline"):
+        roofline_table.run()
+
+
+if __name__ == "__main__":
+    main()

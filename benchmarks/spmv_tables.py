@@ -1,0 +1,126 @@
+"""Paper Tables 6.1 / 6.2 / 6.3 analogues: SpMV algorithm comparison.
+
+Two levels per (algorithm x matrix):
+  * measured: wall time of the jitted XLA realization on this host (the
+    paper's protocol: min over repetitions), reported as speedup vs the
+    sequential-equivalent baseline (ParCRS XLA path);
+  * derived (TPU roofline model): the TiledSparse visit stream gives
+    #tiles (uniform MXU quanta), fill ratio, and x/y window switches; the
+    modelled TPU time = max(compute, memory) with
+      compute = tiles * 8*128*2 / peak,  memory = (tile bytes + switch
+      slab traffic) / HBM_bw
+    — this is where the paper's ordering/blocking effects show up on TPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ALGORITHM_SPECS, convert, coo_to_csr, spmv, to_coo)
+from repro.data import matrices
+from repro.kernels import coo_to_tiled, merge_plan
+from repro.kernels.ref import merge_spmv_xla
+from repro.kernels.tiling import TILE_C, TILE_R
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS_BF16
+
+from .harness import Csv, time_fn
+
+ALGOS = ["parcrs", "merge", "csb", "csbh", "bcoh", "bcohc", "bcohch",
+         "bcohchp", "mergeb", "mergebh"]
+
+
+def tpu_model_time(ts) -> float:
+    """Roofline-modelled TPU time for one SpMV over the tile stream."""
+    tiles = ts.num_tiles
+    compute = tiles * (2 * TILE_R * TILE_C) / PEAK_FLOPS_BF16
+    xsw, ysw = ts.window_switches()
+    traffic = tiles * (TILE_R * TILE_C * ts.tiles.dtype.itemsize + 8) \
+        + xsw * TILE_C * 4 + ysw * TILE_R * 4 * 2
+    memory = traffic / HBM_BW
+    return max(compute, memory)
+
+
+def _spmv_time(coo, algo: str, x) -> float:
+    """Measured XLA wall time for the algorithm's storage format."""
+    if algo == "parcrs":
+        mat = coo_to_csr(coo)
+        return time_fn(lambda: spmv(mat, x, impl="ref"))
+    if algo == "merge":
+        csr = coo_to_csr(coo)
+        P = max(min((csr.shape[0] + csr.nnz) // 4096, 256), 8)
+        plan = merge_plan(csr, P)
+        return time_fn(lambda: merge_spmv_xla(
+            plan.cols, plan.vals, plan.seg, plan.row_starts,
+            jnp.pad(x, (0, 128 - x.shape[0] % 128)),
+            r_width=plan.r_width, m=csr.shape[0]))
+    kw = dict(beta=512)
+    if ALGORITHM_SPECS[algo].scheduling == "static_rows":
+        kw["num_bands"] = 8
+    mat = convert(coo, algo, **kw)
+    return time_fn(lambda: spmv(mat, x, impl="ref"))
+
+
+def run(csv: Csv, suite_scale: float = 0.12, density_class: str = "low"):
+    suite = matrices.test_suite(suite_scale)
+    base_times = {}
+    for name, tm in suite.items():
+        if tm.density_class != density_class:
+            continue
+        coo = to_coo(*tm.make())
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(
+            coo.shape[1]).astype(np.float32))
+        t_base = _spmv_time(coo, "parcrs", x)
+        base_times[name] = t_base
+        for algo in ALGOS:
+            t = _spmv_time(coo, algo, x) if algo != "parcrs" else t_base
+            derived = f"speedup_vs_parcrs={t_base / t:.3f}"
+            if ALGORITHM_SPECS[algo].blocked:
+                ts = coo_to_tiled(coo, algo, beta=512)
+                xsw, ysw = ts.window_switches()
+                derived += (f";tpu_model_us={tpu_model_time(ts)*1e6:.1f}"
+                            f";fill={ts.fill_ratio:.4f}"
+                            f";xswitch={xsw};yswitch={ysw}")
+            csv.row(f"{density_class}.{name}.{algo}", t, derived)
+
+
+def run_low(csv=None):
+    run(csv or Csv("Table 6.1: low-density SpMV"), density_class="low")
+
+
+def run_high(csv=None):
+    run(csv or Csv("Table 6.2: higher-density SpMV"), density_class="high")
+
+
+def run_skewed(csv=None):
+    """Table 6.3: the mawi pathology. Also reports the worker-balance ratio
+    (max work / mean work) for row-banded vs merge-path partitioning — the
+    structural reason the row-distributed family collapses."""
+    csv = csv or Csv("Table 6.3: mawi-like skewed matrix")
+    from repro.core.mergepath import balanced_row_bands, \
+        merge_path_partition_np
+    suite = matrices.test_suite(0.12)
+    tm = suite["mawi_like"]
+    coo = to_coo(*tm.make())
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        coo.shape[1]).astype(np.float32))
+    csr = coo_to_csr(coo)
+    row_ptr = np.asarray(csr.row_ptr)
+    P = 64
+    bands = balanced_row_bands(row_ptr, P)
+    nnz_band = np.diff(row_ptr[bands])
+    rs, js = merge_path_partition_np(row_ptr, P)
+    work_merge = np.diff(rs) + np.diff(js)
+    t_base = _spmv_time(coo, "parcrs", x)
+    for algo in ALGOS:
+        t = _spmv_time(coo, algo, x) if algo != "parcrs" else t_base
+        sched = ALGORITHM_SPECS[algo].scheduling
+        if sched == "merge":
+            bal = work_merge.max() / max(work_merge.mean(), 1)
+        elif sched == "static_rows":
+            bal = nnz_band.max() / max(nnz_band.mean(), 1)
+        else:
+            bal = 1.0   # dynamic over-decomposition bounds it by one block
+        csv.row(f"skewed.mawi.{algo}", t,
+                f"speedup_vs_parcrs={t_base / t:.3f};"
+                f"worker_balance_max_over_mean={bal:.2f}")

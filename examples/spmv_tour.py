@@ -1,0 +1,50 @@
+"""Storage-format tour: how each paper format encodes the SAME 8x8 matrix,
+printed for inspection (the didactic companion to quickstart.py).
+
+Run:  PYTHONPATH=src python examples/spmv_tour.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (convert, coo_to_bicrs, coo_to_csr, coo_to_icrs,
+                        curve_key, hilbert_decode, to_coo)
+
+# the 8x8 example matrix
+rows = [0, 0, 1, 2, 3, 3, 4, 5, 6, 7, 7]
+cols = [1, 7, 2, 0, 3, 4, 6, 5, 2, 0, 7]
+vals = [float(v) for v in range(1, 12)]
+coo = to_coo(rows, cols, np.asarray(vals, np.float32), (8, 8))
+print("dense:\n", np.asarray(coo.todense()).astype(int))
+
+csr = coo_to_csr(coo)
+print("\nCSR  row_ptr:", np.asarray(csr.row_ptr).tolist())
+print("CSR  col_ind:", np.asarray(csr.col_ind).tolist())
+
+icrs = coo_to_icrs(coo)
+print("\nICRS col_start:", int(icrs.col_start),
+      "col_inc:", np.asarray(icrs.col_inc).tolist())
+print("ICRS row_jump:", np.asarray(icrs.row_jump).tolist(),
+      " (overflow past n=8 signals a row change)")
+
+bic = coo_to_bicrs(coo, order="hilbert")
+print("\nBICRS (Hilbert order) col_inc:",
+      np.asarray(bic.col_inc).tolist())
+print("BICRS row_jump:", np.asarray(bic.row_jump).tolist(),
+      " (negative jumps = bidirectional)")
+
+hk = curve_key(np.asarray(rows), np.asarray(cols), "hilbert", 3)
+order = np.argsort(np.asarray(hk))
+print("\nHilbert visit order of the nonzeros:",
+      [(rows[i], cols[i]) for i in order])
+
+bs = convert(coo, "csb", beta=4)
+print(f"\nCSB: grid {bs.grid}, beta={bs.beta}, "
+      f"{bs.num_blocks} non-empty blocks")
+print("  block coords:", list(zip(np.asarray(bs.block_rows).tolist(),
+                                  np.asarray(bs.block_cols).tolist())))
+lr, lc = bs.local_rows_cols()
+print("  packed in-block (row,col):",
+      list(zip(np.asarray(lr).tolist(), np.asarray(lc).tolist())))
+print("  storage bytes:", bs.storage_bytes(), "vs CSR:",
+      csr.storage_bytes())
+print("\nspmv_tour OK")

@@ -1,0 +1,43 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps
+on the synthetic bigram-structured pipeline and watch the loss fall well
+below the unigram entropy (proof of learning, not just running).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(~100M params; on this 1-core CPU container use --small for a quick pass.)
+"""
+import argparse
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.launch import train as train_cli
+from repro.models.model import ModelConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--small", action="store_true",
+                help="8M params / fewer steps (CI-friendly)")
+args = ap.parse_args()
+
+if args.small:
+    # ~8M params
+    cfg_args = ["--arch", "llama3.2-1b", "--reduced",
+                "--steps", str(min(args.steps, 60)),
+                "--batch", "8", "--seq", "64", "--lr", "3e-3"]
+else:
+    # ~100M params: register an ad-hoc config through the llama file's
+    # REDUCED slot is not enough — drive train.py with a custom config
+    import repro.configs.llama3_2_1b as mod
+    cfg100 = ModelConfig(
+        name="llama-100m", n_layers=8, d_model=512, n_heads=8, kv_heads=4,
+        d_ff=2048, vocab=32768, head_dim=64, tie_embeddings=True,
+        block_pattern=("attn",), mlp_pattern=("dense",),
+        compute_dtype=jnp.float32, loss_chunk=64)
+    mod.REDUCED = cfg100          # temporarily alias for the CLI
+    cfg_args = ["--arch", "llama3.2-1b", "--reduced",
+                "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+                "--lr", "1e-3", "--log-every", "10"]
+
+final_loss = train_cli.main(cfg_args + ["--ckpt-dir", "/tmp/train_lm_ckpt",
+                                        "--save-every", "50"])
+print(f"[example] final loss: {final_loss:.3f}")

@@ -1,0 +1,5 @@
+"""repro.checkpoint — atomic sharded checkpointing."""
+from . import checkpoint
+from .checkpoint import latest_step, restore, restore_meta, save
+
+__all__ = ["checkpoint", "save", "restore", "restore_meta", "latest_step"]

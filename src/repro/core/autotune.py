@@ -1,0 +1,97 @@
+"""Automatic parameter tuning — the paper's §8 future work, implemented.
+
+"We suspect that these optimizations can still provide a relevant speedup,
+ but they will be largely machine-specific ... it would be interesting to
+ look into automatically tuning these parameters, like performed in the
+ pOSKI library." (paper, §8)
+
+The tuner sweeps (algorithm, block size beta) over a measurement budget,
+scoring each candidate with the paper's own economics: total cost =
+conversion + num_spmvs × per-multiply, where per-multiply is either
+measured (jitted XLA wall time on this backend) or modelled (the TPU
+tile-stream roofline from benchmarks.spmv_tables) — pOSKI-style hybrid
+offline/online tuning.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .convert import ALGORITHM_SPECS, block_size_for, convert
+from .formats import COO
+from .spmv import spmv
+
+DEFAULT_ALGOS = ("parcrs", "csb", "csbh", "bcohc", "bcohch", "mergeb")
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    algorithm: str
+    beta: Optional[int]
+    convert_s: float
+    spmv_s: float
+    total_s: float               # convert + num_spmvs * spmv
+    tpu_model_s: Optional[float] = None
+
+
+def _measure(fn: Callable, reps: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune(coo: COO, *, num_spmvs: int = 100,
+             algorithms: Tuple[str, ...] = DEFAULT_ALGOS,
+             betas: Optional[List[int]] = None,
+             reps: int = 5, tpu_model: bool = False
+             ) -> Tuple[TuneResult, List[TuneResult]]:
+    """Return (best, all_results) over the candidate grid."""
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        coo.shape[1]).astype(np.float32))
+    results: List[TuneResult] = []
+    for algo in algorithms:
+        spec = ALGORITHM_SPECS[algo]
+        if not spec.blocked:
+            t0 = time.perf_counter()
+            mat = convert(coo, algo)
+            conv_s = time.perf_counter() - t0
+            spmv_s = _measure(lambda: spmv(mat, x, impl="ref"), reps)
+            results.append(TuneResult(algo, None, conv_s, spmv_s,
+                                      conv_s + num_spmvs * spmv_s))
+            continue
+        base = block_size_for(coo.shape,
+                              in_block_format=spec.in_block_format)
+        cand = betas or sorted({max(base // 4, 16), max(base // 2, 16),
+                                base, min(base * 2, 1 << 16)})
+        for beta in cand:
+            kw = dict(beta=beta)
+            if spec.scheduling == "static_rows":
+                kw["num_bands"] = 8
+            t0 = time.perf_counter()
+            mat = convert(coo, algo, **kw)
+            conv_s = time.perf_counter() - t0
+            spmv_s = _measure(lambda: spmv(mat, x, impl="ref"), reps)
+            model_s = None
+            if tpu_model:
+                from repro.kernels.tiling import coo_to_tiled
+                from benchmarks.spmv_tables import tpu_model_time
+                try:
+                    model_s = tpu_model_time(
+                        coo_to_tiled(coo, algo, beta=max(beta, 128)))
+                except MemoryError:
+                    model_s = float("inf")
+            results.append(TuneResult(algo, beta, conv_s, spmv_s,
+                                      conv_s + num_spmvs * spmv_s,
+                                      model_s))
+    best = min(results, key=lambda r: r.total_s)
+    return best, results

@@ -1,0 +1,147 @@
+"""Space-filling curves used to order nonzeros / blocks for locality.
+
+The paper (§3.1, §3.2, §4) uses two curves:
+  * Z-Morton  — bit interleave of (row, col); used by CSB.
+  * Hilbert   — orientation-preserving curve; used by BCOH and the *H hybrids.
+
+Both are implemented as vectorized jnp bit manipulations so they can run
+inside jit (conversion is benchmarked as a first-class operation, Tables
+6.4/6.5 of the paper). All functions accept/return integer arrays and are
+exact for coordinates < 2**MAX_ORDER.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# 16 bits per coordinate == the paper's compressed-index width (16+16 packed
+# into a 32-bit integer, §3.1). Curve keys therefore fit in uint32/int64.
+MAX_ORDER = 16
+
+
+def _part1by1(v):
+    """Spread the low 16 bits of ``v`` so there is a zero between each bit."""
+    v = v.astype(jnp.uint32)
+    v = (v | (v << 8)) & jnp.uint32(0x00FF00FF)
+    v = (v | (v << 4)) & jnp.uint32(0x0F0F0F0F)
+    v = (v | (v << 2)) & jnp.uint32(0x33333333)
+    v = (v | (v << 1)) & jnp.uint32(0x55555555)
+    return v
+
+
+def _compact1by1(v):
+    """Inverse of :func:`_part1by1`."""
+    v = v.astype(jnp.uint32) & jnp.uint32(0x55555555)
+    v = (v | (v >> 1)) & jnp.uint32(0x33333333)
+    v = (v | (v >> 2)) & jnp.uint32(0x0F0F0F0F)
+    v = (v | (v >> 4)) & jnp.uint32(0x00FF00FF)
+    v = (v | (v >> 8)) & jnp.uint32(0x0000FFFF)
+    return v
+
+
+def morton_key(row, col):
+    """Z-Morton key. Row bits are the *high* bits of each interleaved pair so
+    the curve sweeps quadrants top-left, top-right, bottom-left, bottom-right
+    (Fig. 3.1 of the paper)."""
+    r = _part1by1(jnp.asarray(row))
+    c = _part1by1(jnp.asarray(col))
+    return ((r << 1) | c).astype(jnp.uint32)
+
+
+def morton_decode(key):
+    """Inverse of :func:`morton_key` -> (row, col)."""
+    key = jnp.asarray(key).astype(jnp.uint32)
+    row = _compact1by1(key >> 1)
+    col = _compact1by1(key)
+    return row.astype(jnp.int32), col.astype(jnp.int32)
+
+
+def hilbert_key(row, col, order: int = MAX_ORDER):
+    """Hilbert curve index of (row, col) on a 2**order x 2**order grid.
+
+    Vectorized version of the classic xy->d algorithm [Hilbert 1891; see the
+    paper Fig. 3.2]. ``order`` iterations of rotate-and-accumulate; each
+    iteration is branch-free (jnp.where) so the whole thing jit-compiles to
+    pure VPU bit ops.
+    """
+    if order > 16:
+        raise ValueError("order > 16 would overflow the uint32 key")
+    u = jnp.uint32
+    x = jnp.asarray(col).astype(u)
+    y = jnp.asarray(row).astype(u)
+    d = jnp.zeros_like(x, dtype=u)
+    n = u(1 << order)
+    s = 1 << (order - 1)
+    for _ in range(order):
+        su = u(s)
+        rx = jnp.where((x & su) > 0, u(1), u(0))
+        ry = jnp.where((y & su) > 0, u(1), u(0))
+        # true key < 2**32, so uint32 modular accumulation is exact
+        d = d + u(s) * u(s) * ((u(3) * rx) ^ ry)
+        # rotate quadrant: when ry == 0, optionally flip (within the full
+        # n-grid — high bits are already consumed so flipping them is
+        # harmless, and this keeps coordinates non-negative), then swap x/y.
+        x_new = jnp.where(ry == 0, jnp.where(rx == 1, n - u(1) - y, y), x)
+        y_new = jnp.where(ry == 0, jnp.where(rx == 1, n - u(1) - x, x), y)
+        x, y = x_new, y_new
+        s >>= 1
+    return d
+
+
+def hilbert_decode(key, order: int = MAX_ORDER):
+    """Inverse of :func:`hilbert_key` -> (row, col)."""
+    u = jnp.uint32
+    t = jnp.asarray(key).astype(u)
+    x = jnp.zeros_like(t)
+    y = jnp.zeros_like(t)
+    s = 1
+    for _ in range(order):
+        su = u(s)
+        rx = (t >> 1) & u(1)
+        ry = (t ^ rx) & u(1)
+        # rotate (x, y < s here, so flipping within the s-square is exact)
+        flip = (ry == 0) & (rx == 1)
+        x_f = jnp.where(flip, su - u(1) - x, x)
+        y_f = jnp.where(flip, su - u(1) - y, y)
+        x, y = jnp.where(ry == 0, y_f, x_f), jnp.where(ry == 0, x_f, y_f)
+        x = x + su * rx
+        y = y + su * ry
+        t = t >> 2
+        s <<= 1
+    return y.astype(jnp.int32), x.astype(jnp.int32)  # (row, col)
+
+
+def curve_key(row, col, order: str = "hilbert", bits: int = MAX_ORDER):
+    """Uniform entry point: ``order`` in {"row", "morton", "hilbert"}.
+
+    "row" returns the row-major key (row * 2**bits + col), matching the
+    paper's row-wise nonzero ordering used by CRS/BCOHC/MergeB.
+    """
+    row = jnp.asarray(row)
+    col = jnp.asarray(col)
+    if order == "row":
+        # coordinates < 2**bits (bits <= 16), so the packed key fits uint32
+        return (row.astype(jnp.uint32) << bits) | col.astype(jnp.uint32)
+    if order == "morton":
+        return morton_key(row, col)
+    if order == "hilbert":
+        return hilbert_key(row, col, bits)
+    raise ValueError(f"unknown curve order {order!r}")
+
+
+# numpy twin (used on the host-side conversion path and in tests)
+def hilbert_key_np(row, col, order: int = MAX_ORDER):
+    x = np.asarray(col, dtype=np.int64).copy()
+    y = np.asarray(row, dtype=np.int64).copy()
+    d = np.zeros_like(x)
+    n = np.int64(1 << order)
+    s = np.int64(1 << (order - 1))
+    while s > 0:
+        rx = ((x & s) > 0).astype(np.int64)
+        ry = ((y & s) > 0).astype(np.int64)
+        d += s * s * ((3 * rx) ^ ry)
+        x_new = np.where(ry == 0, np.where(rx == 1, n - 1 - y, y), x)
+        y_new = np.where(ry == 0, np.where(rx == 1, n - 1 - x, x), y)
+        x, y = x_new, y_new
+        s >>= 1
+    return d

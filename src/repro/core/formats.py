@@ -1,0 +1,274 @@
+"""Sparse matrix storage formats (paper §2, §3, §4), as JAX pytrees.
+
+Flat formats
+------------
+``COO``     triplet format (row_ind, col_ind, data)                   [§2]
+``CSR``     compressed row storage (row_ptr, col_ind, data)           [§2]
+``ICRS``    incremental CRS (col_inc with overflow row signaling)     [§2]
+``BICRS``   bidirectional ICRS (negative increments allowed)          [§2]
+
+Blocked formats
+---------------
+``BlockedSparse`` is a single parameterized container covering the paper's
+CSB / BCOH families and all six hybrids. The *canonical* runtime arrays
+(``block_rows``, ``block_cols``, ``block_ptr``, ``packed``, ``data``) are what
+the Pallas kernel consumes; the storage-scheme-specific arrays (dense grid
+pointer / block-level BICRS increments) are kept alongside so that storage
+cost is measured faithfully per paper variant.
+
+TPU note (DESIGN.md §2.4): in-block ICRS is kept as a *reference* encoding
+(validated by a ``lax.scan`` decoder) but is not a compute format on TPU —
+increment decoding is serial and cannot feed the VPU/MXU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _pytree_dataclass(cls):
+    """Register a dataclass as a pytree; fields with metadata static=True are
+    aux data."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    data_fields = [f.name for f in dataclasses.fields(cls)
+                   if not f.metadata.get("static", False)]
+    meta_fields = [f.name for f in dataclasses.fields(cls)
+                   if f.metadata.get("static", False)]
+    return jax.tree_util.register_dataclass(
+        cls, data_fields=data_fields, meta_fields=meta_fields)
+
+
+def static_field(**kw):
+    return dataclasses.field(metadata={"static": True}, **kw)
+
+
+# --------------------------------------------------------------------------
+# Flat formats
+# --------------------------------------------------------------------------
+@_pytree_dataclass
+class COO:
+    rows: Array            # int32[nnz]
+    cols: Array            # int32[nnz]
+    data: Array            # float[nnz]
+    shape: Tuple[int, int] = static_field()
+
+    @property
+    def nnz(self) -> int:
+        return self.data.shape[0]
+
+    def storage_bytes(self) -> int:
+        return self.nnz * (4 + 4 + self.data.dtype.itemsize)
+
+    def todense(self) -> Array:
+        m, n = self.shape
+        out = jnp.zeros((m, n), self.data.dtype)
+        return out.at[self.rows, self.cols].add(self.data)
+
+
+@_pytree_dataclass
+class CSR:
+    row_ptr: Array         # int32[m+1]
+    col_ind: Array         # int32[nnz]
+    data: Array            # float[nnz]
+    shape: Tuple[int, int] = static_field()
+
+    @property
+    def nnz(self) -> int:
+        return self.data.shape[0]
+
+    def storage_bytes(self) -> int:
+        return (self.row_ptr.shape[0] + self.col_ind.shape[0]) * 4 \
+            + self.nnz * self.data.dtype.itemsize
+
+    def row_of_nnz(self) -> Array:
+        """int32[nnz] row index of each stored element (decompression)."""
+        k = jnp.arange(self.nnz, dtype=jnp.int32)
+        return (jnp.searchsorted(self.row_ptr, k, side="right") - 1
+                ).astype(jnp.int32)
+
+    def to_coo(self) -> COO:
+        return COO(self.row_of_nnz(), self.col_ind, self.data, self.shape)
+
+
+@_pytree_dataclass
+class ICRS:
+    """Incremental CRS [Koster 2002]. ``col_start`` is the column index of the
+    first nonzero; ``col_inc[k]`` is the (possibly overflowed) increment
+    applied *after* consuming nonzero k. ``row_jump[0]`` is the starting row;
+    subsequent entries are row increments consumed at each overflow."""
+    col_start: Array       # int32[] — column of first nonzero
+    col_inc: Array         # int32[nnz] — increment applied after nnz k
+    row_jump: Array        # int32[njumps] — [start_row, jump1, jump2, ...]
+    data: Array            # float[nnz]
+    shape: Tuple[int, int] = static_field()
+
+    @property
+    def nnz(self) -> int:
+        return self.data.shape[0]
+
+    def storage_bytes(self, index_bytes: int = 4) -> int:
+        return (1 + self.col_inc.shape[0] + self.row_jump.shape[0]) \
+            * index_bytes + self.nnz * self.data.dtype.itemsize
+
+    def to_coo(self) -> COO:
+        return _incremental_decode(self.col_start, self.col_inc,
+                                   self.row_jump, self.data, self.shape)
+
+
+@_pytree_dataclass
+class BICRS:
+    """Bidirectional ICRS [Yzelman & Bisseling 2012]: same encoding as ICRS
+    but increments may be negative, enabling arbitrary nonzero orderings
+    (Hilbert, Morton, ...)."""
+    col_start: Array
+    col_inc: Array         # int32[nnz] (signed)
+    row_jump: Array        # int32[njumps] (signed; [start_row, ...])
+    data: Array
+    shape: Tuple[int, int] = static_field()
+
+    @property
+    def nnz(self) -> int:
+        return self.data.shape[0]
+
+    def storage_bytes(self, index_bytes: int = 4) -> int:
+        return (1 + self.col_inc.shape[0] + self.row_jump.shape[0]) \
+            * index_bytes + self.nnz * self.data.dtype.itemsize
+
+    def to_coo(self) -> COO:
+        return _incremental_decode(self.col_start, self.col_inc,
+                                   self.row_jump, self.data, self.shape)
+
+
+def _incremental_decode(col_start, col_inc, row_jump, data, shape) -> COO:
+    """Faithful Algorithm 2.2 decoder via lax.scan: reconstruct (row, col) of
+    every nonzero from the increment encoding. One overflow per row change
+    (the encoder adds n exactly once per transition)."""
+    m, n = shape
+    nnz = data.shape[0]
+    if nnz == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return COO(z, z, data, shape)
+
+    def step(carry, k):
+        j, i, r = carry
+        # consume nonzero k at (i, j); then apply increment and handle
+        # overflow by consuming a row jump.
+        row_k, col_k = i, j
+        j = j + col_inc[k]
+        overflow = j >= n
+        j = jnp.where(overflow, j - n, j)
+        i = jnp.where(overflow, i + row_jump[jnp.minimum(r + 1,
+                      row_jump.shape[0] - 1)], i)
+        r = jnp.where(overflow, r + 1, r)
+        return (j, i, r), (row_k, col_k)
+
+    init = (col_start.astype(jnp.int32), row_jump[0].astype(jnp.int32),
+            jnp.int32(0))
+    _, (rows, cols) = jax.lax.scan(step, init,
+                                   jnp.arange(nnz, dtype=jnp.int32))
+    return COO(rows.astype(jnp.int32), cols.astype(jnp.int32), data, shape)
+
+
+# --------------------------------------------------------------------------
+# Blocked formats (CSB / BCOH families and hybrids)
+# --------------------------------------------------------------------------
+# block-level storage schemes (paper §3.1, §3.2, §4.2, §4.3)
+BLOCK_STORAGE_DENSE_PTR = "dense_ptr"   # CSB / CSBH / BCOHCHP
+BLOCK_STORAGE_BICRS = "bicrs"           # BCOH / BCOHC / BCOHCH
+BLOCK_STORAGE_CSR = "csr"               # MergeB / MergeBH
+
+IN_BLOCK_PACKED_COO = "packed_coo"      # 16+16 packed indices (CSB + hybrids)
+IN_BLOCK_ICRS = "icrs"                  # compressed ICRS (original BCOH)
+
+
+@_pytree_dataclass
+class BlockedSparse:
+    """Unified blocked sparse format.
+
+    Canonical arrays (always present, consumed by kernels):
+      block_rows/block_cols int32[nb] — block grid coordinates of the stored
+        (non-empty, unless dense_ptr) blocks, in *storage order*;
+      block_ptr int32[nb+1] — nnz offsets per block (prefix sum);
+      packed uint32[nnz] — (local_row << 16) | local_col per nonzero;
+      data float[nnz].
+
+    Variant-specific storage (for faithful storage accounting + validation):
+      dense_ptr: grid_ptr int32[Mb*Nb+1] in the chosen block order;
+      bicrs: blk_col_inc / blk_row_jump int32 block-level increments;
+      csr: blk_row_ptr int32[Mb+1] + block_cols acts as col_ind;
+      icrs in-block: icrs_col_start/icrs_col_inc/icrs_row_jump_ptr/... arrays.
+    """
+    block_rows: Array
+    block_cols: Array
+    block_ptr: Array
+    packed: Array
+    data: Array
+    # variant-specific (any may be zero-length placeholders)
+    grid_ptr: Optional[Array]
+    blk_col_inc: Optional[Array]
+    blk_row_jump: Optional[Array]
+    blk_row_ptr: Optional[Array]
+    # static descriptors
+    shape: Tuple[int, int] = static_field()
+    beta: int = static_field()
+    grid: Tuple[int, int] = static_field()          # (Mb, Nb)
+    block_storage: str = static_field()
+    block_order: str = static_field()               # "row"|"hilbert"|"morton"
+    in_block_format: str = static_field()
+    in_block_order: str = static_field()
+    # thread bands for the BCOH static row distribution (start block-row per
+    # band; length P+1). Stored as a plain tuple because it parameterizes
+    # scheduling, not values.
+    row_bands: Tuple[int, ...] = static_field(default=())
+
+    @property
+    def nnz(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def num_blocks(self) -> int:
+        return self.block_rows.shape[0]
+
+    def local_rows_cols(self) -> Tuple[Array, Array]:
+        lr = (self.packed >> 16).astype(jnp.int32)
+        lc = (self.packed & jnp.uint32(0xFFFF)).astype(jnp.int32)
+        return lr, lc
+
+    def block_of_nnz(self) -> Array:
+        k = jnp.arange(self.nnz, dtype=jnp.int32)
+        return (jnp.searchsorted(self.block_ptr, k, side="right") - 1
+                ).astype(jnp.int32)
+
+    def to_coo(self) -> COO:
+        bid = self.block_of_nnz()
+        lr, lc = self.local_rows_cols()
+        rows = self.block_rows[bid] * self.beta + lr
+        cols = self.block_cols[bid] * self.beta + lc
+        return COO(rows, cols, self.data, self.shape)
+
+    def storage_bytes(self) -> int:
+        """Paper-faithful storage cost of the *variant's own* scheme (not the
+        canonical arrays): data + in-block indices + block-level structure."""
+        b = self.nnz * self.data.dtype.itemsize
+        if self.in_block_format == IN_BLOCK_PACKED_COO:
+            b += self.nnz * 4                          # 16+16 packed
+        else:                                          # in-block ICRS
+            b += self.nnz * 2                          # 16-bit col_inc
+            b += self.num_blocks * 2 * 2               # start + avg jumps
+        if self.block_storage == BLOCK_STORAGE_DENSE_PTR:
+            b += (self.grid[0] * self.grid[1] + 1) * 4
+        elif self.block_storage == BLOCK_STORAGE_BICRS:
+            b += self.num_blocks * 4                   # block_nnz 32-bit
+            b += self.blk_col_inc.shape[0] * 2         # 16-bit increments
+            b += self.blk_row_jump.shape[0] * 2
+        else:                                          # block CSR
+            b += (self.grid[0] + 1) * 4 + self.num_blocks * 4
+            b += self.num_blocks * 4                   # block ptr data array
+        return int(b)

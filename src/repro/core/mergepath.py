@@ -1,0 +1,96 @@
+"""Merge-path load balancing (paper §3.3, Merrill & Garland 2016).
+
+The merge path runs over two "lists": A = row_ptr[1:] (row end offsets,
+length m) and B = the natural numbers 0..nnz-1 (nonzero indices). Total path
+length is m + nnz; cutting it into P equal diagonals gives every worker the
+same number of (multiply-add | row-output) operations — *perfect* static load
+balance for arbitrary row distributions, including the mawi-like single dense
+row that breaks row-distributed schemes (paper Table 6.3).
+
+At diagonal d the split (i, j), i + j = d, is the smallest i such that
+A[i] + i >= d (g(i) = A[i] + i is strictly increasing, so a binary search /
+``searchsorted`` finds it). This runs in O(P log m) once per matrix, not per
+multiply — on TPU it is executed at convert time and the resulting spans are
+scalar-prefetched into the kernel grid.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class MergePartition(NamedTuple):
+    """Start coordinates per worker (length P+1; worker p owns
+    [starts[p], starts[p+1]) on both axes)."""
+    row_starts: Array    # int32[P+1] — first row each worker touches
+    nnz_starts: Array    # int32[P+1] — first nonzero each worker consumes
+    diagonals: Array     # int32[P+1] — the cut diagonals
+
+
+def merge_path_partition(row_ptr: Array, num_parts: int) -> MergePartition:
+    """Cut the merge path of a CSR structure into ``num_parts`` equal spans."""
+    m = row_ptr.shape[0] - 1
+    row_ptr = jnp.asarray(row_ptr, jnp.int32)
+    nnz = row_ptr[-1]
+    total = m + nnz
+    p = jnp.arange(num_parts + 1, dtype=jnp.int32)
+    # equal diagonals (last one clipped to the path end)
+    diag = jnp.minimum(p * ((total + num_parts - 1) // num_parts),
+                       total).astype(jnp.int32)
+    keys = row_ptr[1:] + jnp.arange(m, dtype=jnp.int32)   # g(i) = A[i] + i
+    i = jnp.searchsorted(keys, diag, side="left").astype(jnp.int32)
+    j = diag - i
+    return MergePartition(row_starts=i, nnz_starts=j, diagonals=diag)
+
+
+def merge_path_partition_np(row_ptr: np.ndarray,
+                            num_parts: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Host twin used at convert time; returns (row_starts, nnz_starts)."""
+    row_ptr = np.asarray(row_ptr, np.int64)
+    m = row_ptr.shape[0] - 1
+    nnz = int(row_ptr[-1])
+    total = m + nnz
+    step = -(-total // num_parts)
+    diag = np.minimum(np.arange(num_parts + 1, dtype=np.int64) * step, total)
+    keys = row_ptr[1:] + np.arange(m, dtype=np.int64)
+    i = np.searchsorted(keys, diag, side="left")
+    j = diag - i
+    return i.astype(np.int32), j.astype(np.int32)
+
+
+def balanced_row_bands(row_ptr: np.ndarray, num_bands: int) -> np.ndarray:
+    """BCOH-style static distribution (paper §3.2): split *rows* so every band
+    holds ~nnz/P nonzeros. Returns int32[num_bands+1] row boundaries.
+
+    Unlike merge-path this never splits a row — a single dense row defeats it
+    (paper Table 6.3) — but it needs no carry-out fixup and writes y
+    shard-locally, which is why BCOH wins on NUMA machines (→ on the `data`
+    mesh axis, row bands mean **zero collectives on y**)."""
+    row_ptr = np.asarray(row_ptr, np.int64)
+    nnz = int(row_ptr[-1])
+    m = row_ptr.shape[0] - 1
+    targets = (np.arange(num_bands + 1, dtype=np.int64) * nnz) // num_bands
+    bounds = np.searchsorted(row_ptr, targets, side="left")
+    bounds[0], bounds[-1] = 0, m
+    return np.maximum.accumulate(bounds).astype(np.int32)
+
+
+def span_block_aligned(block_ptr: np.ndarray, num_parts: int) -> np.ndarray:
+    """Equal-nnz spans over *blocks* (never splits a block): for blocked
+    kernels, worker p processes blocks [spans[p], spans[p+1]).
+
+    This is the TPU replacement for CSB's dynamic tasking: over-decompose into
+    num_parts ≫ cores spans; balance is static but the variance per span is
+    bounded by the largest block, mirroring the paper's task-split rule."""
+    block_ptr = np.asarray(block_ptr, np.int64)
+    nb = block_ptr.shape[0] - 1
+    nnz = int(block_ptr[-1])
+    targets = (np.arange(num_parts + 1, dtype=np.int64) * nnz) // num_parts
+    spans = np.searchsorted(block_ptr, targets, side="left")
+    spans[0], spans[-1] = 0, nb
+    return np.maximum.accumulate(spans).astype(np.int32)

@@ -1,0 +1,139 @@
+"""Algorithm auto-selection — the paper's §7 decision procedure as code.
+
+The paper's conclusion: the best algorithm depends on (a) matrix density,
+(b) row-length skew (the mawi case), (c) machine topology (UMA vs NUMA), and
+(d) how many SpMVs will amortize the conversion cost (the "472
+multiplications" rule for BCOHC on Sapphire Rapids).
+
+TPU translation: "UMA" = a single device / single-core grid; "NUMA" = a
+multi-device mesh where y-locality (static row bands, no collectives on y)
+matters the way socket-locality did on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+from .formats import COO
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixStats:
+    m: int
+    n: int
+    nnz: int
+    max_row_nnz: int
+    row_var: float
+
+    @property
+    def density(self) -> float:
+        return self.nnz / max(self.m * self.n, 1)
+
+    @property
+    def has_dense_row(self) -> bool:
+        """mawi_0130-style pathology: one row holding a large fraction of all
+        nonzeros (paper Table 6.3)."""
+        return self.max_row_nnz > max(0.01 * self.nnz, 10 * self.nnz /
+                                      max(self.m, 1))
+
+
+def matrix_stats(coo: COO) -> MatrixStats:
+    rows = np.asarray(coo.rows)
+    counts = np.bincount(rows, minlength=coo.shape[0]) if rows.size else \
+        np.zeros(coo.shape[0], np.int64)
+    return MatrixStats(
+        m=coo.shape[0], n=coo.shape[1], nnz=int(rows.size),
+        max_row_nnz=int(counts.max()) if counts.size else 0,
+        row_var=float(counts.var()) if counts.size else 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineSpec:
+    num_devices: int = 1          # mesh size; 1 == "UMA"
+    fast_memory: bool = True      # HBM-class vs DDR-class bandwidth
+
+    @property
+    def numa_like(self) -> bool:
+        return self.num_devices > 1
+
+
+# Relative conversion cost in units of ParCRS SpMVs, averaged from the
+# paper's Tables 6.4/6.5 (Sapphire Rapids column; used as priors when no
+# measured table is supplied).
+DEFAULT_CONVERSION_COST: Dict[str, float] = {
+    "parcrs": 100.0, "merge": 98.0, "csb": 95.0, "csbh": 370.0,
+    "bcoh": 230.0, "bcohc": 225.0, "bcohch": 520.0, "bcohchp": 520.0,
+    "mergeb": 85.0, "mergebh": 480.0,
+}
+
+# Relative SpMV throughput priors (higher is better), from Tables 6.1/6.2:
+# {(numa_like, low_density): {algo: speedup}}
+DEFAULT_THROUGHPUT: Dict[tuple, Dict[str, float]] = {
+    (True, True): {"parcrs": 42.2, "merge": 43.6, "csb": 29.4, "csbh": 30.4,
+                   "bcoh": 45.8, "bcohc": 49.6, "bcohch": 49.7,
+                   "bcohchp": 26.7, "mergeb": 22.6, "mergebh": 23.3},
+    (True, False): {"parcrs": 55.2, "merge": 71.3, "csb": 33.7, "csbh": 37.1,
+                    "bcoh": 59.5, "bcohc": 81.9, "bcohch": 84.6,
+                    "bcohchp": 72.1, "mergeb": 33.3, "mergebh": 37.1},
+    (False, True): {"parcrs": 18.8, "merge": 18.0, "csb": 18.9, "csbh": 19.1,
+                    "bcoh": 13.7, "bcohc": 14.5, "bcohch": 14.2,
+                    "bcohchp": 11.2, "mergeb": 15.0, "mergebh": 15.6},
+    (False, False): {"parcrs": 25.8, "merge": 24.4, "csb": 20.5, "csbh": 21.3,
+                     "bcoh": 18.0, "bcohc": 24.4, "bcohch": 25.6,
+                     "bcohchp": 23.6, "mergeb": 14.8, "mergebh": 17.3},
+}
+
+# Algorithms able to split a single row across workers (paper Table 6.3).
+ROW_SPLITTING = ("merge", "csb", "csbh")
+
+DENSITY_THRESHOLD = 1e-6   # the paper's low/high density split
+
+
+def amortized_cost(algo: str, num_spmvs: int, *, numa_like: bool,
+                   low_density: bool,
+                   conversion_cost: Optional[Dict[str, float]] = None,
+                   throughput: Optional[Dict[str, float]] = None) -> float:
+    """Total cost of `num_spmvs` multiplications + one conversion, in units
+    of ParCRS SpMV time (the paper's break-even arithmetic)."""
+    conv = (conversion_cost or DEFAULT_CONVERSION_COST)[algo]
+    thr = (throughput or DEFAULT_THROUGHPUT[(numa_like, low_density)])
+    per_spmv = thr["parcrs"] / thr[algo]      # time relative to ParCRS
+    return conv + num_spmvs * per_spmv
+
+
+def break_even_spmvs(algo: str, *, numa_like: bool, low_density: bool,
+                     baseline: str = "parcrs", **kw) -> float:
+    """How many SpMVs before `algo` beats `baseline` including conversion
+    (e.g. ~472 for bcohc on a NUMA/high-density setting in the paper)."""
+    thr = kw.get("throughput") or DEFAULT_THROUGHPUT[(numa_like, low_density)]
+    conv = kw.get("conversion_cost") or DEFAULT_CONVERSION_COST
+    gain = thr["parcrs"] / thr[baseline] - thr["parcrs"] / thr[algo]
+    if gain <= 0:
+        return math.inf
+    return max((conv[algo] - conv[baseline]) / gain, 0.0)
+
+
+def select_algorithm(stats: MatrixStats, machine: MachineSpec,
+                     num_spmvs: int = 1000,
+                     conversion_cost: Optional[Dict[str, float]] = None,
+                     throughput: Optional[Dict[str, float]] = None) -> str:
+    """The §7 decision procedure."""
+    low = stats.density < DENSITY_THRESHOLD
+    key = (machine.numa_like, low)
+    thr = throughput or DEFAULT_THROUGHPUT[key]
+    candidates = list(thr)
+    if stats.has_dense_row:
+        # only row-splitting algorithms survive the mawi pathology
+        candidates = [a for a in candidates if a in ROW_SPLITTING]
+    best, best_cost = None, math.inf
+    for algo in candidates:
+        cost = amortized_cost(algo, num_spmvs, numa_like=machine.numa_like,
+                              low_density=low,
+                              conversion_cost=conversion_cost,
+                              throughput=thr)
+        if cost < best_cost:
+            best, best_cost = algo, cost
+    return best

@@ -1,0 +1,5 @@
+"""repro.data — deterministic data pipeline + synthetic matrix generators."""
+from .pipeline import TokenPipeline, make_batch_iterator
+from . import matrices
+
+__all__ = ["TokenPipeline", "make_batch_iterator", "matrices"]

@@ -1,0 +1,10 @@
+"""repro.kernels — Pallas TPU kernels for the perf-critical compute paths:
+blocked SpMV (bsr_spmv), merge-path SpMV (merge_spmv) and the MoE grouped
+GEMM (moe_group_matmul). Each ships a jit wrapper (ops) and a pure-jnp
+oracle (ref)."""
+from . import ops, ref
+from .tiling import TILE_C, TILE_R, TiledSparse, coo_to_tiled
+from .merge_spmv import MergePlan, merge_plan
+
+__all__ = ["ops", "ref", "TiledSparse", "coo_to_tiled", "TILE_R", "TILE_C",
+           "MergePlan", "merge_plan"]

@@ -1,0 +1,98 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret=True`` executes kernel bodies in Python on CPU (how this repo
+validates them); on a TPU backend pass interpret=False for Mosaic lowering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import CSR
+from . import merge_spmv as _merge
+from . import moe_group_matmul as _moe
+from .bsr_spmv import bsr_spmm as _bsr_spmm
+from .bsr_spmv import bsr_spmv as _bsr_spmv
+from .tiling import TiledSparse
+
+M_TILE = _moe.M_TILE
+
+
+def bsr_spmv(ts: TiledSparse, x: jax.Array, *, interpret: bool = False,
+             tiles_per_step: int = 8) -> jax.Array:
+    return _bsr_spmv(ts, x, tiles_per_step=tiles_per_step,
+                     interpret=interpret)
+
+
+def bsr_spmm(ts: TiledSparse, x: jax.Array, *, interpret: bool = False,
+             tiles_per_step: int = 8) -> jax.Array:
+    return _bsr_spmm(ts, x, tiles_per_step=tiles_per_step,
+                     interpret=interpret)
+
+
+def merge_spmv(csr: CSR, x: jax.Array, *, num_spans: Optional[int] = None,
+               plan: Optional[_merge.MergePlan] = None,
+               interpret: bool = False) -> jax.Array:
+    """Merge-path SpMV. Build the plan once (convert time) and reuse it —
+    that is the paper's conversion/multiplication split."""
+    m, n = csr.shape
+    if plan is None:
+        if num_spans is None:
+            num_spans = max(min((m + csr.nnz) // 4096, 1024), 8)
+        plan = _merge.merge_plan(csr, num_spans)
+    np_ = -(-n // 128) * 128
+    x_pad = jnp.zeros((np_,), x.dtype).at[:n].set(x)
+    partials = _merge.merge_spmv_partials(
+        plan.cols, plan.vals, plan.seg, x_pad, r_width=plan.r_width,
+        interpret=interpret)                       # (P, R)
+    # the paper's sequential carry-out fixup: scatter-add each span's local
+    # rows at its row_start offset (span boundaries overlap by <= 1 row)
+    P, R = partials.shape
+    idx = plan.row_starts[:-1, None] + jnp.arange(R, dtype=jnp.int32)[None]
+    y = jnp.zeros((m + R,), jnp.float32).at[idx].add(partials)
+    return y[:m]
+
+
+def moe_group_matmul(tokens: jax.Array, weights: jax.Array,
+                     group_sizes: jax.Array, *,
+                     interpret: bool = False) -> jax.Array:
+    """tokens f[T, K] sorted by expert; group_sizes int32[E]; weights
+    [E, K, N] -> out f32[T, N].
+
+    Handles group padding to M_TILE internally (static worst-case padded
+    length T + E*M_TILE, zero-filled rows compute zeros)."""
+    T, K = tokens.shape
+    E, K2, N = weights.shape
+    Kp = -(-K // _moe.K_TILE) * _moe.K_TILE
+    Np = -(-N // _moe.N_TILE) * _moe.N_TILE
+    if Kp != K:
+        tokens = jnp.pad(tokens, ((0, 0), (0, Kp - K)))
+        weights = jnp.pad(weights, ((0, 0), (0, Kp - K), (0, 0)))
+    if Np != N:
+        weights = jnp.pad(weights, ((0, 0), (0, 0), (0, Np - N)))
+    T_pad = (-(-T // M_TILE) * M_TILE) + E * M_TILE
+
+    sizes = group_sizes.astype(jnp.int32)
+    ptr = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(sizes)])
+    padded_sizes = -(-sizes // M_TILE) * M_TILE
+    padded_ptr = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(padded_sizes)])
+
+    tok_idx = jnp.arange(T, dtype=jnp.int32)
+    expert_of_token = (jnp.searchsorted(ptr[1:], tok_idx, side="right")
+                       ).astype(jnp.int32)
+    pos = padded_ptr[expert_of_token] + (tok_idx - ptr[expert_of_token])
+    lhs = jnp.zeros((T_pad, Kp), tokens.dtype).at[pos].set(tokens)
+
+    tile_idx = jnp.arange(T_pad // M_TILE, dtype=jnp.int32)
+    tile_expert = (jnp.searchsorted(padded_ptr[1:], tile_idx * M_TILE,
+                                    side="right")).astype(jnp.int32)
+    tile_expert = jnp.minimum(tile_expert, E - 1)
+
+    out_pad = _moe.moe_group_matmul_padded(lhs, weights, tile_expert,
+                                           interpret=interpret)
+    return out_pad[pos, :N]

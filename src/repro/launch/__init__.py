@@ -1,0 +1,6 @@
+"""repro.launch — mesh, sharding rules, step builders, dry-run, train/serve
+entry points. NOTE: dryrun must be imported/run as __main__ first in a fresh
+process (it sets XLA device-count flags)."""
+from .mesh import dp_axes, make_mesh, make_production_mesh, model_axis
+
+__all__ = ["make_production_mesh", "make_mesh", "dp_axes", "model_axis"]

@@ -1,0 +1,157 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell for the production meshes and record memory/cost/collective analysis.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run needs 512 placeholder host devices for the 2x16x16
+multi-pod mesh (smoke tests and benches see 1 device — this env var is set
+here only, never globally).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --arch all [--multi-pod both] --out DIR
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_cell
+from repro.models.accounting import (attn_extra_flops, decode_model_flops,
+                                     train_model_flops)
+from repro.roofline import analysis as ra
+
+
+def model_flops_for(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    s = SHAPES[shape_name]
+    if s.kind == "train":
+        return train_model_flops(cfg, s.batch * s.seq) + \
+            attn_extra_flops(cfg, s.batch, s.seq, train=True)
+    if s.kind == "prefill":
+        return train_model_flops(cfg, s.batch * s.seq) / 3.0 + \
+            attn_extra_flops(cfg, s.batch, s.seq, train=False)
+    return decode_model_flops(cfg, s.batch, s.seq)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             profile: str = "tp", grad_accum: int = 1) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name, "profile": profile,
+           "grad_accum": grad_accum,
+           "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips}
+    lowered = lower_cell(arch, shape_name, mesh, profile=profile,
+                         grad_accum=grad_accum)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                rec[k] = int(v)
+        # bytes that must fit HBM per device: args (params/opt/cache shards)
+        # + temps + outputs
+        rec["hbm_bytes_per_device"] = sum(
+            rec.get(k, 0) for k in ("argument_size_in_bytes",
+                                    "output_size_in_bytes",
+                                    "temp_size_in_bytes"))
+    print(f"[{arch} x {shape_name} x {rec['mesh']}] memory_analysis:")
+    print(" ", mem)
+
+    hlo_text = compiled.as_text()
+    roof = ra.from_compiled(compiled, chips,
+                            model_flops=model_flops_for(arch, shape_name),
+                            hlo_text=hlo_text)
+    from repro.roofline import hlo_parse
+    rec["collectives"] = hlo_parse.analyze(hlo_text)["collectives"]
+    rec["roofline"] = roof.to_dict()
+    # XLA's own numbers, recorded as a cross-check (known to undercount
+    # while bodies — see EXPERIMENTS §Dry-run)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    rec["xla_cost_analysis"] = {"flops": float(cost.get("flops", 0.0)),
+                                "bytes": float(cost.get(
+                                    "bytes accessed", 0.0))}
+    print(f"[{arch} x {shape_name} x {rec['mesh']}] parsed: "
+          f"flops={roof.flops_per_device:.3e} "
+          f"bytes={roof.bytes_per_device:.3e} "
+          f"(xla-once: flops={cost.get('flops', 0):.3e})")
+    print(f"  roofline: compute={roof.compute_s:.4f}s "
+          f"memory={roof.memory_s:.4f}s collective={roof.collective_s:.4f}s"
+          f" bottleneck={roof.bottleneck} "
+          f"useful={roof.useful_flops_fraction:.3f} "
+          f"roofline_fraction={roof.roofline_fraction:.3f}")
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--multi-pod", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None,
+                    help="directory for per-cell JSON records")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose JSON already exists (resume)")
+    ap.add_argument("--profile", default="tp",
+                    choices=["tp", "fsdp", "fsdp_seqp"],
+                    help="sharding profile (fsdp = no TP, §Perf iter 2)")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="microbatches per step (§Perf iter 7)")
+    args = ap.parse_args()
+
+    if args.arch == "all":
+        todo = [(a, s) for a, s, skip in cells() ]
+    else:
+        shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+        todo = [(args.arch, s) for s in shapes
+                if (args.arch, s, False) in cells()]
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.multi_pod]
+
+    failures = 0
+    for arch, shape in todo:
+        for mp in pods:
+            mesh_tag = "2_16_16" if mp else "16_16"
+            if args.skip_existing and args.out and os.path.exists(
+                    os.path.join(args.out,
+                                 f"{arch}__{shape}__{mesh_tag}.json")):
+                continue
+            try:
+                rec = run_cell(arch, shape, mp, profile=args.profile,
+                               grad_accum=args.grad_accum)
+            except Exception as e:
+                failures += 1
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": repr(e)}
+                traceback.print_exc()
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                name = f"{arch}__{shape}__{rec['mesh'].replace('x', '_')}"
+                with open(os.path.join(args.out, name + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

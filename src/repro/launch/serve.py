@@ -1,0 +1,73 @@
+"""Serving entry point: batched prefill + greedy decode with KV caches.
+
+CPU-scale demo (reduced config, real execution):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models.model import decode_step, init_params, prefill
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    S_max = P + G + (cfg.vision_tokens if cfg.frontend == "vision" else 0)
+    rng = jax.random.PRNGKey(args.seed + 1)
+    prompts = jax.random.randint(rng, (B, P), 0, cfg.vocab)
+    vis = None
+    if cfg.frontend == "vision":
+        vis = jax.random.normal(rng, (B, cfg.vision_tokens, cfg.vision_dim))
+
+    prefill_fn = jax.jit(lambda p, t, v: prefill(
+        p, cfg, t, S_max, cache_dtype=jnp.float32, vision_embeds=v))
+    decode_fn = jax.jit(lambda p, tok, c, pos: decode_step(
+        p, cfg, tok, c, pos))
+
+    t0 = time.perf_counter()
+    logits, caches = prefill_fn(params, prompts, vis)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    offset = cfg.vision_tokens if cfg.frontend == "vision" else 0
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.perf_counter()
+    for i in range(G - 1):
+        pos = jnp.full((B,), offset + P + i, jnp.int32)
+        logits, caches = decode_fn(params, tok, caches, pos)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
+    tok.block_until_ready()
+    t_decode = time.perf_counter() - t0
+
+    gen = np.asarray(jnp.concatenate(out_tokens, axis=1))
+    tps = B * (G - 1) / max(t_decode, 1e-9)
+    print(f"[serve] arch={cfg.name} batch={B} prompt={P} gen={G}")
+    print(f"[serve] prefill {t_prefill*1e3:.1f} ms; decode "
+          f"{t_decode*1e3:.1f} ms ({tps:.1f} tok/s incl. compile)")
+    print(f"[serve] sample generations (first 2 rows): {gen[:2].tolist()}")
+    assert np.all(gen >= 0) and np.all(gen < cfg.vocab)
+    return gen
+
+
+if __name__ == "__main__":
+    main()

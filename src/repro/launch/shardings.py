@@ -1,0 +1,219 @@
+"""Sharding rules: param-path -> PartitionSpec (2D TP x FSDP), batch and
+cache specs per input shape.
+
+Conventions (single pod; the multi-pod "pod" axis is pure DP and only
+carries the batch):
+  * weights are 2D-sharded: the TP dimension (heads / ffn / experts / vocab)
+    over "model", the other matrix dimension over "data" (FSDP — GSPMD
+    all-gathers shards at use, reduce-scatters grads, so optimizer state is
+    ZeRO-sharded for free);
+  * any dimension not divisible by its axis size falls back to replication
+    on that axis (guarded here, so every assigned arch lowers);
+  * decode KV caches shard batch over DP and sequence over "model"
+    (context-parallel decode); for long_500k (batch=1) sequence is sharded
+    over EVERY axis.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.model import ModelConfig
+from .mesh import dp_axes
+
+
+def path_str(path) -> str:
+    """Normalize a jax key path to 'a/b/0/c' (rules match on this form)."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _axis_size(mesh, n)
+        return out
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def _guard(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axes that don't divide their dimension."""
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            fixed.append(None)
+        elif dim % _axis_size(mesh, ax) == 0:
+            fixed.append(ax)
+        else:
+            fixed.append(None)
+    return P(*fixed)
+
+
+# rules: regex on the jax keystr path; entries are spec TEMPLATES where the
+# leading group-stack dimension is added automatically for group params.
+_PARAM_RULES = [
+    (r"embed", ("model", "data")),
+    (r"unembed/w$", ("data", "model")),
+    (r"vision_proj/w$", (None, "model")),
+    (r"(wq|wk|wv)/w$", ("data", "model")),
+    (r"(wq|wk|wv)/b$", ("model",)),
+    (r"wo/w$", ("model", "data")),
+    (r"wo/b$", (None,)),
+    # MoE experts [E, d, f] / [E, f, d]: expert-parallel over "model" when E
+    # divides, else ffn-parallel (guard handles the fallback ordering below)
+    (r"mlp/w_gate$", ("model", "data", None)),
+    (r"mlp/w_up$", ("model", "data", None)),
+    (r"mlp/w_down$", ("model", None, "data")),
+    (r"router/w$", ("data", None)),
+    # dense MLP
+    (r"mlp/(w_gate|w_up|w_in)/w$", ("data", "model")),
+    (r"mlp/(w_in|w_gate|w_up)/b$", ("model",)),
+    (r"mlp/(w_down|w_out)/w$", ("model", "data")),
+    (r"mlp/(w_down|w_out)/b$", (None,)),
+    # SSM
+    (r"in_proj/w$", ("data", "model")),
+    (r"out_proj/w$", ("model", "data")),
+    (r"conv/w$", (None, "model")),
+    (r"conv/b$", ("model",)),
+    (r"(A_log|D|dt_bias|norm_scale)$", ("model",)),
+]
+
+
+def _moe_fallback(template, shape, mesh):
+    """If experts don't divide "model", switch to ffn-parallel."""
+    if len(shape) == 3 and shape[0] % _axis_size(mesh, "model") != 0:
+        if template == ("model", "data", None):       # w_gate/w_up [E,d,f]
+            return (None, "data", "model")
+        if template == ("model", None, "data"):       # w_down [E,f,d]
+            return (None, "model", "data")
+    return template
+
+
+def param_spec_for(key: str, leaf_shape: Tuple[int, ...], mesh: Mesh,
+                   grouped: bool, profile: str = "tp") -> P:
+    core_shape = leaf_shape[1:] if grouped else leaf_shape
+    if profile == "fsdp":
+        # FSDP-only: no tensor parallelism — every >=2D weight shards its
+        # largest dimension over the WHOLE mesh (ZeRO-3); activations are
+        # fully batch-parallel. Right trade for models whose per-layer
+        # matmuls are too small to amortize TP collectives (§Perf iter 2).
+        if len(core_shape) >= 2:
+            all_axes = tuple(mesh.axis_names)
+            dim = int(max(range(len(core_shape)),
+                          key=lambda i: core_shape[i]))
+            spec = [None] * len(core_shape)
+            if core_shape[dim] % _axis_size(mesh, all_axes) == 0:
+                spec[dim] = all_axes
+            elif core_shape[dim] % _axis_size(mesh, "model") == 0:
+                spec[dim] = "model"
+            out = P(*spec)
+            return P(*((None,) + tuple(out))) if grouped else out
+        return P(*((None,) * len(leaf_shape)))
+    for pat, template in _PARAM_RULES:
+        if re.search(pat, key):
+            if len(template) != len(core_shape):
+                continue
+            if "mlp" in key and len(core_shape) == 3:
+                template = _moe_fallback(template, core_shape, mesh)
+            spec = _guard(template, core_shape, mesh)
+            return P(*((None,) + tuple(spec))) if grouped else spec
+    # norms, scalars, anything unmatched: replicate
+    return P(*((None,) * len(leaf_shape)))
+
+
+def param_shardings(params_shape: Any, mesh: Mesh,
+                    profile: str = "tp") -> Any:
+    """Map an eval_shape pytree of params -> NamedShardings."""
+    def one(path, leaf):
+        key = path_str(path)
+        grouped = "groups" in key
+        spec = param_spec_for(key, leaf.shape, mesh, grouped, profile)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_state_shardings(opt_state_shape: Any, params_shape: Any,
+                        mesh: Mesh, profile: str = "tp") -> Any:
+    """Optimizer state mirrors param shardings (m/v/vr/vc); scalars
+    replicate. Matching is by shape suffix: a state leaf either has the
+    same shape as some param (m, v) or a reduced shape (adafactor factors,
+    step) -> replicate reduced leaves."""
+    param_specs = {}
+
+    def collect(path, leaf):
+        key = path_str(path)
+        grouped = "groups" in key
+        param_specs[leaf.shape] = param_spec_for(key, leaf.shape, mesh,
+                                                 grouped, profile)
+    jax.tree_util.tree_map_with_path(collect, params_shape)
+
+    def one(path, leaf):
+        spec = param_specs.get(leaf.shape)
+        if spec is None:
+            spec = P(*((None,) * len(leaf.shape)))
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, opt_state_shape)
+
+
+def batch_sharding(mesh: Mesh, batch: int) -> NamedSharding:
+    dp = dp_axes(mesh)
+    if batch % _axis_size(mesh, tuple(dp)) != 0:
+        return NamedSharding(mesh, P())            # e.g. long_500k B=1
+    return NamedSharding(mesh, P(dp, None))
+
+
+def cache_shardings(cache_shape: Any, mesh: Mesh, batch: int) -> Any:
+    """KV caches [G,B,S,Hkv,D] / SSM states [G,B,...]: batch over DP when it
+    divides, else the sequence dimension over everything."""
+    dp = dp_axes(mesh)
+    dp_size = _axis_size(mesh, tuple(dp))
+    batch_sharded = batch % dp_size == 0
+
+    def one(path, leaf):
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        if len(shape) >= 2:
+            if batch_sharded:
+                spec[1] = dp                                 # B over DP
+                if len(shape) == 5 and shape[2] % _axis_size(
+                        mesh, "model") == 0:
+                    spec[2] = "model"                        # KV seq
+                elif len(shape) == 5 and shape[2] % _axis_size(
+                        mesh, "model") != 0:
+                    # ssm_state [G,B,H,P,N]: heads over model
+                    if shape[2] % _axis_size(mesh, "model") == 0:
+                        spec[2] = "model"
+                elif len(shape) == 4 and shape[3] % _axis_size(
+                        mesh, "model") == 0:
+                    spec[3] = "model"                        # conv channels
+            else:
+                # B=1 (long_500k): shard the long axis over every axis
+                all_axes = tuple(mesh.axis_names)
+                long_dim = max(range(len(shape)), key=lambda i: shape[i])
+                if shape[long_dim] % _axis_size(mesh, all_axes) == 0:
+                    spec[long_dim] = all_axes
+                elif shape[long_dim] % _axis_size(mesh, "model") == 0:
+                    spec[long_dim] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def with_shardings(shape_tree: Any, sharding_tree: Any) -> Any:
+    """Attach shardings to a ShapeDtypeStruct pytree."""
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shape_tree, sharding_tree)

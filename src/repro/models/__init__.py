@@ -1,0 +1,10 @@
+"""repro.models — composable decoder LM zoo (attention/SSM/MoE/hybrid)."""
+from .model import (ModelConfig, decode_step, forward, init_cache,
+                    init_params, loss_fn, logits_from_hidden, prefill)
+from .accounting import (attn_extra_flops, count_params, decode_model_flops,
+                         train_model_flops)
+
+__all__ = ["ModelConfig", "decode_step", "forward", "init_cache",
+           "init_params", "loss_fn", "logits_from_hidden", "prefill",
+           "count_params", "train_model_flops", "attn_extra_flops",
+           "decode_model_flops"]

@@ -1,0 +1,228 @@
+"""Grouped-query attention with RoPE, optional QKV bias, qk-norm and sliding
+window; full-sequence (train/prefill) and single-step (decode) paths."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int = 0          # 0 => full causal attention
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.head_dim,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_heads * cfg.head_dim,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_heads * cfg.head_dim,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.head_dim, cfg.d_model,
+                         dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(cfg.head_dim, dtype)
+    return p
+
+
+def _project_qkv(p, cfg: AttnConfig, x: Array, positions: Array):
+    B, S, _ = x.shape
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = dense(p["wk"], x).reshape(B, S, cfg.kv_heads, cfg.head_dim)
+    v = dense(p["wv"], x).reshape(B, S, cfg.kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Array,
+          cfg: AttnConfig) -> Array:
+    """q [B,Sq,H,D]; k,v [B,Sk,Hkv,D]; mask [B or 1, 1, Sq, Sk] bool."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    groups = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, groups, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (D ** -0.5)
+    logits = jnp.where(mask[:, :, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H * D)
+
+
+def flash_sdpa(q: Array, k: Array, v: Array, cfg: AttnConfig, *,
+               q_offset: int = 0, q_chunk: int = 1024,
+               k_chunk: int = 1024, vmap_q: bool = False) -> Array:
+    """Blockwise (FlashAttention-style) causal SDPA in pure JAX: online
+    softmax over key chunks, scanned over query chunks. Memory is
+    O(q_chunk * k_chunk) instead of O(Sq * Sk) — required for the 32k/500k
+    shapes. Fully-masked key blocks are still computed (and masked); skipping
+    them is a recorded §Perf optimization lever."""
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qc = min(q_chunk, Sq)
+    kc = min(k_chunk, Sk)
+    nq, nk = -(-Sq // qc), -(-Sk // kc)
+    Sq_p, Sk_p = nq * qc, nk * kc
+    scale = D ** -0.5
+
+    qf = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    # [B, Hkv, g, nq, qc, D] / [B, Hkv, nk, kc, D]
+    qf = qf.reshape(B, nq, qc, Hkv, g, D).transpose(1, 0, 3, 4, 2, 5)
+    kf = kf.reshape(B, nk, kc, Hkv, D).transpose(1, 0, 3, 2, 4)
+    vf = vf.reshape(B, nk, kc, Hkv, D).transpose(1, 0, 3, 2, 4)
+
+    def one_q_chunk(carry, qi_and_chunk):
+        qi, qb = qi_and_chunk              # qb: [B, Hkv, g, qc, D]
+        qpos = q_offset + qi * qc + jnp.arange(qc)
+
+        def one_k_chunk(state, ki_and_kv):
+            m, l, acc = state
+            ki, kb, vb = ki_and_kv
+            kpos = ki * kc + jnp.arange(kc)
+            logits = jnp.einsum("bhgqd,bhkd->bhgqk",
+                                qb.astype(jnp.float32),
+                                kb.astype(jnp.float32)) * scale
+            mask = kpos[None, :] <= qpos[:, None]
+            if cfg.sliding_window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - cfg.sliding_window
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * corr + p.sum(axis=-1)
+            # PV product in bf16 (f32 accumulate): halves the dominant
+            # traffic term of long prefill (§Perf iteration 4); max/sum
+            # stats stay f32 so the online softmax is unaffected
+            acc_new = acc * corr[..., None] + jax.lax.dot_general(
+                p.astype(jnp.bfloat16), vb.astype(jnp.bfloat16),
+                (((4,), (2,)), ((0, 1), (0, 1))),
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, qc, D), jnp.float32)
+        # checkpoint the chunk body: backward recomputes the [qc, kc] score
+        # block instead of saving one per iteration (the flash memory win
+        # must survive autodiff)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(one_k_chunk), (m0, l0, a0),
+            (jnp.arange(nk), kf, vf))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out
+
+    if vmap_q:
+        # sequence parallelism: q chunks are independent — vmap keeps each
+        # device's chunks local instead of a sequential (gathering) scan
+        outs = jax.vmap(lambda qi, qb: one_q_chunk(None, (qi, qb))[1]
+                        )(jnp.arange(nq), qf)
+    else:
+        _, outs = jax.lax.scan(one_q_chunk, None, (jnp.arange(nq), qf))
+    # outs: [nq, B, Hkv, g, qc, D] -> [B, Sq, H*D]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq_p, H * D)
+    return out[:, :Sq]
+
+
+FLASH_THRESHOLD = 2048
+
+
+def causal_mask(Sq: int, Sk: int, offset: int = 0,
+                sliding_window: int = 0) -> Array:
+    """[1, 1, Sq, Sk] bool; query i attends to keys <= i+offset, and within
+    the window if sliding_window > 0."""
+    qi = jnp.arange(Sq)[:, None] + offset
+    ki = jnp.arange(Sk)[None, :]
+    m = ki <= qi
+    if sliding_window > 0:
+        m &= ki > qi - sliding_window
+    return m[None, None]
+
+
+def attention(p, cfg: AttnConfig, x: Array,
+              positions: Optional[Array] = None,
+              vmap_q: bool = False) -> Array:
+    """Full-sequence causal attention (train / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if S >= FLASH_THRESHOLD:
+        out = flash_sdpa(q, k, v, cfg, vmap_q=vmap_q)
+    else:
+        mask = causal_mask(S, S, 0, cfg.sliding_window)
+        out = _sdpa(q, k, v, mask, cfg)
+    return dense(p["wo"], out.astype(x.dtype))
+
+
+class KVCache(NamedTuple):
+    k: Array        # [B, S_max, Hkv, D]
+    v: Array        # [B, S_max, Hkv, D]
+
+    @classmethod
+    def init(cls, B: int, S_max: int, cfg: AttnConfig, dtype=jnp.bfloat16):
+        shape = (B, S_max, cfg.kv_heads, cfg.head_dim)
+        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attention_decode(p, cfg: AttnConfig, x: Array, cache: KVCache,
+                     pos: Array) -> Tuple[Array, KVCache]:
+    """One new token per sequence. x: [B, 1, d_model]; pos: [B] int32 index
+    of the new token. Attends to cache[0:pos] + itself."""
+    B, S1, _ = x.shape
+    assert S1 == 1
+    S_max = cache.k.shape[1]
+    q, k, v = _project_qkv(p, cfg, x, pos[:, None])
+    new_k = jax.vmap(
+        lambda c, upd, i: jax.lax.dynamic_update_slice(c, upd, (i, 0, 0))
+    )(cache.k, k.astype(cache.k.dtype), pos)
+    new_v = jax.vmap(
+        lambda c, upd, i: jax.lax.dynamic_update_slice(c, upd, (i, 0, 0))
+    )(cache.v, v.astype(cache.v.dtype), pos)
+    ki = jnp.arange(S_max)[None, :]                     # [1, S_max]
+    m = ki <= pos[:, None]
+    if cfg.sliding_window > 0:
+        m &= ki > (pos[:, None] - cfg.sliding_window)
+    mask = m[:, None, None, :]                          # [B, 1, 1, S_max]
+    out = _sdpa(q, new_k, new_v, mask, cfg)
+    return dense(p["wo"], out.astype(x.dtype)), KVCache(new_k, new_v)
+
+
+def prefill_cache(p, cfg: AttnConfig, x: Array, S_max: int,
+                  dtype=jnp.bfloat16, vmap_q: bool = False
+                  ) -> Tuple[Array, KVCache]:
+    """Run full attention over the prompt and return output + primed cache."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if S >= FLASH_THRESHOLD:
+        out = flash_sdpa(q, k, v, cfg, vmap_q=vmap_q)
+    else:
+        mask = causal_mask(S, S, 0, cfg.sliding_window)
+        out = _sdpa(q, k, v, mask, cfg)
+    cache = KVCache.init(B, S_max, cfg, dtype)
+    cache = KVCache(cache.k.at[:, :S].set(k.astype(dtype)),
+                    cache.v.at[:, :S].set(v.astype(dtype)))
+    return dense(p["wo"], out.astype(x.dtype)), cache

@@ -1,0 +1,111 @@
+"""Primitive layers (pure functions over param pytrees, no framework dep)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x: Array, compute_dtype=None) -> Array:
+    """Matmul in the activation dtype: params (stored f32 master) are cast
+    to x.dtype — or to an explicit compute_dtype — at use."""
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    else:
+        w = w.astype(x.dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)            # [half]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                        # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# short causal conv (Mamba)
+# ---------------------------------------------------------------------------
+def causal_conv1d_init(key, channels: int, width: int, dtype=jnp.float32):
+    return {"w": jax.random.normal(key, (width, channels), dtype)
+            * (width ** -0.5),
+            "b": jnp.zeros((channels,), dtype)}
+
+
+def causal_conv1d(p, x: Array, state: Optional[Array] = None
+                  ) -> Tuple[Array, Array]:
+    """x: [B, S, C] -> (y [B, S, C], new_state [B, width-1, C]).
+    state carries the last (width-1) inputs for streaming decode."""
+    w, b = p["w"], p["b"]
+    width = w.shape[0]
+    B, S, C = x.shape
+    if state is None:
+        state = jnp.zeros((B, width - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                # [B, S+w-1, C]
+    y = jnp.zeros((B, S, C), jnp.promote_types(x.dtype, jnp.float32))
+    for i in range(width):
+        y = y + xp[:, i:i + S, :].astype(y.dtype) * w[i].astype(y.dtype)
+    y = (y + b.astype(y.dtype)).astype(x.dtype)
+    new_state = xp[:, S:, :]
+    return y, new_state
+
+
+def softcap(x: Array, cap: float) -> Array:
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,474 @@
+"""Composable decoder LM covering all assigned architectures.
+
+A model is a cycled *group* of layer slots (e.g. jamba = 1 attn + 7 ssm per
+group, MoE on every other slot); parameters are stacked over groups and the
+stack runs under ``lax.scan`` so HLO size is O(group), not O(depth) — a
+512-device jamba-72L compile stays tractable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (AttnConfig, KVCache, attention, attention_decode,
+                        attn_init, prefill_cache)
+from .layers import (dense, dense_init, layernorm, layernorm_init, rmsnorm,
+                     rmsnorm_init)
+from .moe import (MoEConfig, moe_apply, moe_apply_ep,
+                  moe_apply_ep_tp, moe_init)
+from .ssm import SSMCache, SSMConfig, ssm_decode, ssm_forward, ssm_init
+
+Array = jax.Array
+
+
+from jax.sharding import PartitionSpec as _P
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int = 0
+    norm: str = "rms"                      # "rms" | "ln"
+    mlp_act: str = "swiglu"                # "swiglu" | "gelu" | "none"
+    pos: str = "rope"                      # "rope" | "sinusoidal"
+    tie_embeddings: bool = False
+    block_pattern: Tuple[str, ...] = ("attn",)     # cycled mixer kinds
+    mlp_pattern: Tuple[str, ...] = ("dense",)      # "dense"|"moe"|"none"
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_use_kernel: bool = False
+    # SSM (mamba2)
+    ssm_state: int = 128
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+    # frontend stub
+    frontend: str = "none"                 # "none" | "audio" | "vision"
+    vision_tokens: int = 0
+    vision_dim: int = 1024
+    # numerics
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    loss_chunk: int = 512
+    # distribution: when set (by launch.steps), activations are constrained
+    # to shard their batch dim over these mesh axes — GSPMD propagation
+    # alone replicates the batch (observed in the dry-run; EXPERIMENTS §Perf)
+    batch_axes: Tuple[str, ...] = ()
+    # expert-parallel MoE dispatch via shard_map (set by launch.steps when
+    # n_experts divides the model axis; EXPERIMENTS §Perf iteration 1)
+    moe_ep: str = ""            # "" | "ep" | "ep_tp"
+    moe_capacity_factor: float = 1.3
+    # sequence parallelism (context sharding) for long prefill: activations
+    # shard dim 1 over these axes; flash attention switches its q-chunk loop
+    # from scan to vmap so chunks stay device-local (§Perf iteration 3)
+    seq_axes: Tuple[str, ...] = ()
+    seq_axes_size: int = 1
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def group_size(self) -> int:
+        return _lcm(len(self.block_pattern), len(self.mlp_pattern))
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.group_size == 0, \
+            (self.n_layers, self.group_size)
+        return self.n_layers // self.group_size
+
+    def attn_config(self) -> AttnConfig:
+        return AttnConfig(self.d_model, self.n_heads, self.kv_heads,
+                          self.hd, self.rope_theta, self.qkv_bias,
+                          self.qk_norm, self.sliding_window)
+
+    def ssm_config(self) -> SSMConfig:
+        return SSMConfig(self.d_model, self.ssm_state, 4, 2,
+                         self.ssm_headdim, self.ssm_chunk)
+
+    def moe_config(self) -> MoEConfig:
+        return MoEConfig(self.d_model, self.d_ff, self.n_experts,
+                         self.top_k, self.moe_use_kernel)
+
+    def group_slots(self):
+        """[(mixer_kind, mlp_kind)] for one group."""
+        g = self.group_size
+        return [(self.block_pattern[i % len(self.block_pattern)],
+                 self.mlp_pattern[i % len(self.mlp_pattern)])
+                for i in range(g)]
+
+    def param_count(self, params=None) -> int:
+        if params is None:
+            return -1
+        return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def _lcm(a, b):
+    return a * b // math.gcd(a, b)
+
+
+def _constrain_batch(cfg: ModelConfig, x: Array) -> Array:
+    """Pin the leading (batch) dim of an activation to the DP axes, and —
+    when sequence parallelism is on — dim 1 to the seq axes."""
+    if not cfg.batch_axes and not cfg.seq_axes:
+        return x
+    batch = cfg.batch_axes or None
+    rest = [None] * (x.ndim - 1)
+    if cfg.seq_axes and x.ndim >= 2 and             x.shape[1] % max(cfg.seq_axes_size, 1) == 0 and x.shape[1] > 1:
+        rest[0] = cfg.seq_axes
+    return jax.lax.with_sharding_constraint(x, _P(batch, *rest))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _norm_init(cfg, d):
+    return rmsnorm_init(d, cfg.param_dtype) if cfg.norm == "rms" \
+        else layernorm_init(d, cfg.param_dtype)
+
+
+def _norm(cfg, p, x):
+    return rmsnorm(p, x) if cfg.norm == "rms" else layernorm(p, x)
+
+
+def _mlp_init(key, cfg: ModelConfig):
+    if cfg.mlp_act == "swiglu":
+        ks = jax.random.split(key, 3)
+        return {"w_gate": dense_init(ks[0], cfg.d_model, cfg.d_ff,
+                                     dtype=cfg.param_dtype),
+                "w_up": dense_init(ks[1], cfg.d_model, cfg.d_ff,
+                                   dtype=cfg.param_dtype),
+                "w_down": dense_init(ks[2], cfg.d_ff, cfg.d_model,
+                                     dtype=cfg.param_dtype)}
+    ks = jax.random.split(key, 2)
+    return {"w_in": dense_init(ks[0], cfg.d_model, cfg.d_ff, bias=True,
+                               dtype=cfg.param_dtype),
+            "w_out": dense_init(ks[1], cfg.d_ff, cfg.d_model, bias=True,
+                                dtype=cfg.param_dtype)}
+
+
+def _mlp_apply(cfg: ModelConfig, p, x):
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(dense(p["w_gate"], x).astype(jnp.float32)) \
+            * dense(p["w_up"], x).astype(jnp.float32)
+        return dense(p["w_down"], h.astype(x.dtype))
+    h = jax.nn.gelu(dense(p["w_in"], x).astype(jnp.float32))
+    return dense(p["w_out"], h.astype(x.dtype))
+
+
+def _slot_init(key, cfg: ModelConfig, mixer: str, mlp: str):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": _norm_init(cfg, cfg.d_model)}
+    if mixer == "attn":
+        p["mixer"] = attn_init(ks[0], cfg.attn_config(), cfg.param_dtype)
+    elif mixer == "ssm":
+        p["mixer"] = ssm_init(ks[0], cfg.ssm_config(), cfg.param_dtype)
+    else:
+        raise ValueError(mixer)
+    if mlp != "none":
+        p["norm2"] = _norm_init(cfg, cfg.d_model)
+        if mlp == "moe":
+            p["mlp"] = moe_init(ks[1], cfg.moe_config(), cfg.param_dtype)
+        else:
+            p["mlp"] = _mlp_init(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    slots = cfg.group_slots()
+
+    def one_group(k):
+        gks = jax.random.split(k, len(slots))
+        return [_slot_init(gks[i], cfg, m, f)
+                for i, (m, f) in enumerate(slots)]
+
+    group_keys = jax.random.split(ks[0], cfg.n_groups)
+    groups = jax.vmap(one_group)(group_keys)       # stacked over groups
+
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(
+            ks[1], (cfg.vocab, cfg.d_model), cfg.param_dtype)
+        * cfg.d_model ** -0.5,
+        "final_norm": _norm_init(cfg, cfg.d_model),
+        "groups": groups,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[2], cfg.d_model, cfg.vocab,
+                                       dtype=cfg.param_dtype)
+    if cfg.frontend == "vision":
+        params["vision_proj"] = dense_init(ks[3], cfg.vision_dim,
+                                           cfg.d_model,
+                                           dtype=cfg.param_dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _sinusoidal(S: int, d: int) -> Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _apply_slot(cfg: ModelConfig, slot_params, mixer: str, mlp: str,
+                h: Array) -> Tuple[Array, Array]:
+    aux = jnp.zeros((), jnp.float32)
+    hn = _norm(cfg, slot_params["norm1"], h)
+    if mixer == "attn":
+        h = h + attention(slot_params["mixer"], cfg.attn_config(), hn,
+                          vmap_q=bool(cfg.seq_axes))
+    else:
+        h = h + ssm_forward(slot_params["mixer"], cfg.ssm_config(), hn)
+    if mlp != "none":
+        hn = _norm(cfg, slot_params["norm2"], h)
+        if mlp == "moe":
+            out, aux = _moe(cfg, slot_params["mlp"], hn)
+        else:
+            out = _mlp_apply(cfg, slot_params["mlp"], hn)
+        h = h + out
+    return h, aux
+
+
+def _moe(cfg: ModelConfig, p, hn):
+    if cfg.moe_ep == "ep":
+        return moe_apply_ep(p, cfg.moe_config(), hn,
+                            batch_axes=cfg.batch_axes,
+                            capacity_factor=cfg.moe_capacity_factor)
+    if cfg.moe_ep == "ep_tp":
+        return moe_apply_ep_tp(p, cfg.moe_config(), hn,
+                               batch_axes=cfg.batch_axes)
+    return moe_apply(p, cfg.moe_config(), hn)
+
+
+def _run_groups(cfg: ModelConfig, params, h: Array) -> Tuple[Array, Array]:
+    slots = cfg.group_slots()
+
+    def group_fn(carry, group_params):
+        h, aux = carry
+        for i, (mixer, mlp) in enumerate(slots):
+            h, a = _apply_slot(cfg, group_params[i], mixer, mlp, h)
+            aux = aux + a
+        return (_constrain_batch(cfg, h), aux), None
+
+    if cfg.remat:
+        group_fn = jax.checkpoint(
+            group_fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    (h, aux), _ = jax.lax.scan(group_fn, (h, jnp.zeros((), jnp.float32)),
+                               params["groups"])
+    return h, aux
+
+
+def embed_inputs(cfg: ModelConfig, params, tokens: Array,
+                 vision_embeds: Optional[Array] = None) -> Array:
+    h = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cfg.pos == "sinusoidal":
+        h = h + _sinusoidal(h.shape[1], cfg.d_model)[None].astype(h.dtype)
+    if cfg.frontend == "vision":
+        assert vision_embeds is not None, "vision frontend needs embeds"
+        v = dense(params["vision_proj"], vision_embeds.astype(
+            cfg.compute_dtype))
+        h = jnp.concatenate([v, h], axis=1)
+    return _constrain_batch(cfg, h)
+
+
+def forward(params, cfg: ModelConfig, tokens: Array,
+            vision_embeds: Optional[Array] = None
+            ) -> Tuple[Array, Array, Array]:
+    """tokens [B, S] -> (hidden [B, S', d], final-normed, aux_loss)."""
+    h = embed_inputs(cfg, params, tokens, vision_embeds)
+    h, aux = _run_groups(cfg, params, h)
+    h = _norm(cfg, params["final_norm"], h)
+    return h, aux
+
+
+def logits_from_hidden(params, cfg: ModelConfig, h: Array) -> Array:
+    if cfg.tie_embeddings:
+        return h.astype(jnp.float32) @ params["embed"].astype(
+            jnp.float32).T
+    return dense(params["unembed"], h, compute_dtype=cfg.compute_dtype
+                 ).astype(jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, tokens: Array,
+            vision_embeds: Optional[Array] = None,
+            loss_mask: Optional[Array] = None) -> Tuple[Array, Dict]:
+    """Next-token CE, computed in sequence chunks so [B, S, V] logits are
+    never materialized (vocab up to 152k)."""
+    h, aux = forward(params, cfg, tokens, vision_embeds)
+    if cfg.frontend == "vision":
+        h = h[:, -tokens.shape[1]:]        # loss over text positions only
+    B, S, _ = h.shape
+    targets = tokens[:, 1:]                # predict t+1
+    h = h[:, :-1]
+    mask = jnp.ones_like(targets, jnp.float32) if loss_mask is None \
+        else loss_mask[:, 1:].astype(jnp.float32)
+
+    C = min(cfg.loss_chunk, S - 1)
+    nchunk = -(-(S - 1) // C)
+    pad = nchunk * C - (S - 1)
+    h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    mask = jnp.pad(mask, ((0, 0), (0, pad)))
+
+    def chunk_loss(carry, inp):
+        hc, tc, mc = inp                   # [B, C, d], [B, C], [B, C]
+        lg = logits_from_hidden(params, cfg, hc)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tok_lp = jnp.take_along_axis(lg, tc[..., None], axis=-1)[..., 0]
+        nll = (lse - tok_lp) * mc
+        return carry + nll.sum(), None
+
+    hc = h.reshape(B, nchunk, C, -1).swapaxes(0, 1)
+    tc = targets.reshape(B, nchunk, C).swapaxes(0, 1)
+    mc = mask.reshape(B, nchunk, C).swapaxes(0, 1)
+    # checkpoint: never keep a [B, C, vocab] logits chunk for backward
+    total, _ = jax.lax.scan(jax.checkpoint(chunk_loss),
+                            jnp.zeros((), jnp.float32), (hc, tc, mc))
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = total / denom + aux
+    return loss, {"ce": total / denom, "aux": aux, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with per-slot caches
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.bfloat16):
+    """Stacked per-group caches: list per slot of KVCache/SSMCache."""
+    slots = cfg.group_slots()
+
+    def one_group(_):
+        caches = []
+        for mixer, _mlp in slots:
+            if mixer == "attn":
+                caches.append(KVCache.init(B, S_max, cfg.attn_config(),
+                                           dtype))
+            else:
+                caches.append(SSMCache.init(B, cfg.ssm_config(), dtype))
+        return caches
+
+    return jax.vmap(one_group)(jnp.arange(cfg.n_groups))
+
+
+def decode_step(params, cfg: ModelConfig, token: Array, caches,
+                pos: Array) -> Tuple[Array, Any]:
+    """token [B, 1] int32; pos [B] int32 -> (logits [B, vocab], caches)."""
+    h = params["embed"][token].astype(cfg.compute_dtype)
+    if cfg.pos == "sinusoidal":
+        d = cfg.d_model
+        pf = pos.astype(jnp.float32)[:, None]
+        dim = jnp.arange(d // 2, dtype=jnp.float32)[None]
+        ang = pf / (10000.0 ** (2 * dim / d))
+        h = h + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                                axis=-1)[:, None].astype(h.dtype)
+    slots = cfg.group_slots()
+
+    def group_fn(h, inp):
+        group_params, group_caches = inp
+        new_caches = []
+        for i, (mixer, mlp) in enumerate(slots):
+            hn = _norm(cfg, group_params[i]["norm1"], h)
+            if mixer == "attn":
+                out, nc = attention_decode(group_params[i]["mixer"],
+                                           cfg.attn_config(), hn,
+                                           group_caches[i], pos)
+            else:
+                out, nc = ssm_decode(group_params[i]["mixer"],
+                                     cfg.ssm_config(), hn, group_caches[i])
+            h = h + out
+            new_caches.append(nc)
+            if mlp != "none":
+                hn = _norm(cfg, group_params[i]["norm2"], h)
+                if mlp == "moe":
+                    out, _ = _moe(cfg, group_params[i]["mlp"], hn)
+                else:
+                    out = _mlp_apply(cfg, group_params[i]["mlp"], hn)
+                h = h + out
+        return _constrain_batch(cfg, h), new_caches
+
+    h, new_caches = jax.lax.scan(group_fn, h,
+                                 (params["groups"], caches))
+    h = _norm(cfg, params["final_norm"], h)
+    logits = logits_from_hidden(params, cfg, h)[:, 0]
+    return logits, new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens: Array, S_max: int,
+            cache_dtype=jnp.bfloat16,
+            vision_embeds: Optional[Array] = None):
+    """Run the prompt, returning (last-token logits, primed caches)."""
+    h = embed_inputs(cfg, params, tokens, vision_embeds)
+    slots = cfg.group_slots()
+    B, S = h.shape[0], h.shape[1]
+
+    def group_fn(h, group_params):
+        new_caches = []
+        for i, (mixer, mlp) in enumerate(slots):
+            hn = _norm(cfg, group_params[i]["norm1"], h)
+            if mixer == "attn":
+                out, nc = prefill_cache(group_params[i]["mixer"],
+                                        cfg.attn_config(), hn, S_max,
+                                        cache_dtype,
+                                        vmap_q=bool(cfg.seq_axes))
+            else:
+                scfg = cfg.ssm_config()
+                out = ssm_forward(group_params[i]["mixer"], scfg, hn)
+                # recompute final state for the cache via a 1-shot decode
+                # over the last token is incorrect; instead run the chunked
+                # scan once more carrying state (cheap: reuse forward path)
+                nc = _ssm_prefill_state(group_params[i]["mixer"], scfg, hn)
+            h = h + out
+            new_caches.append(nc)
+            if mlp != "none":
+                hn = _norm(cfg, group_params[i]["norm2"], h)
+                if mlp == "moe":
+                    out, _ = _moe(cfg, group_params[i]["mlp"], hn)
+                else:
+                    out = _mlp_apply(cfg, group_params[i]["mlp"], hn)
+                h = h + out
+        return h, new_caches
+
+    h, caches = jax.lax.scan(group_fn, h, params["groups"])
+    h = _norm(cfg, params["final_norm"], h)
+    logits = logits_from_hidden(params, cfg, h[:, -1:])[:, 0]
+    return logits, caches
+
+
+def _ssm_prefill_state(p, scfg: SSMConfig, u: Array) -> SSMCache:
+    """Final (conv_state, ssm_state) after consuming u (prefill)."""
+    from .layers import causal_conv1d
+    from .ssm import _split_proj
+    B, S, _ = u.shape
+    di, N, H, P = scfg.d_inner, scfg.d_state, scfg.nheads, scfg.headdim
+    z, xBC, dt = _split_proj(p, scfg, u)
+    xBC_conv, conv_state = causal_conv1d(p["conv"], xBC)
+    xBC_act = jax.nn.silu(xBC_conv.astype(jnp.float32))
+    x = xBC_act[..., :di].reshape(B, S, H, P)
+    Bm = xBC_act[..., di:di + N]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    loga = dtv * A[None, None]
+    cs = jnp.cumsum(loga, axis=1)
+    tail = jnp.exp(cs[:, -1:] - cs) * dtv
+    state = jnp.einsum("bjh,bjhp,bjn->bhpn", tail, x, Bm)
+    return SSMCache(conv_state, state)

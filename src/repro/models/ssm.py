@@ -1,0 +1,183 @@
+"""Mamba-2 (SSD — state-space duality) layer [arXiv:2405.21060].
+
+Chunked SSD algorithm: within a chunk the recurrence is computed in its
+"attention dual" form (C B^T masked by the decay kernel), across chunks a
+[H, P, N] state is carried — O(S L) work, O(S/L) sequential steps. Decode
+carries (conv_state, ssm_state) and costs O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_conv1d, causal_conv1d_init, dense, dense_init
+
+Array = jax.Array
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def nheads(self) -> int:
+        return self.d_inner // self.headdim
+
+
+def ssm_init(key, cfg: SSMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    di, N, H = cfg.d_inner, cfg.d_state, cfg.nheads
+    d_in_proj = 2 * di + 2 * N + H           # z, x, B, C, dt (ngroups=1)
+    conv_ch = di + 2 * N
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, d_in_proj, dtype=dtype),
+        "conv": causal_conv1d_init(ks[1], conv_ch, cfg.d_conv, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(dtype)),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,),
+                                       minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))).astype(dtype),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[3], di, cfg.d_model, dtype=dtype),
+    }
+
+
+def _split_proj(p, cfg: SSMConfig, u: Array):
+    di, N, H = cfg.d_inner, cfg.d_state, cfg.nheads
+    zxbcdt = dense(p["in_proj"], u)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    return z, xBC, dt
+
+
+def _gated_norm(p, y: Array, z: Array, eps: float = 1e-6) -> Array:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps)
+            * p["norm_scale"].astype(jnp.float32)).astype(y.dtype)
+
+
+def ssm_forward(p, cfg: SSMConfig, u: Array,
+                initial_state: Optional[Array] = None) -> Array:
+    """u: [B, S, d_model] -> [B, S, d_model] (training / prefill)."""
+    B, S, _ = u.shape
+    di, N, H, P = cfg.d_inner, cfg.d_state, cfg.nheads, cfg.headdim
+    L = min(cfg.chunk, S)
+    nc = -(-S // L)
+    Sp = nc * L
+
+    z, xBC, dt = _split_proj(p, cfg, u)
+    xBC, _ = causal_conv1d(p["conv"], xBC)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32))
+    x = xBC[..., :di].reshape(B, S, H, P)
+    Bm = xBC[..., di:di + N]                       # [B, S, N] (ngroups=1)
+    Cm = xBC[..., di + N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # [B, S, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [H]
+    loga = dt * A[None, None]                                  # [B, S, H]
+
+    # pad to chunk multiple (decay 0 contributions for padded steps)
+    pad = Sp - S
+    x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+    Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(a):
+        return a.reshape((B, nc, L) + a.shape[2:]).swapaxes(0, 1)
+
+    xc, Bc, Cc = to_chunks(x), to_chunks(Bm), to_chunks(Cm)
+    dtc, lac = to_chunks(dt_p), to_chunks(loga)
+
+    def chunk_step(state, inp):
+        # state: [B, H, P, N]; xc [B,L,H,P], Bc/Cc [B,L,N], dtc/lac [B,L,H]
+        xk, Bk, Ck, dtk, lak = inp
+        cs = jnp.cumsum(lak, axis=1)                           # [B, L, H]
+        # intra-chunk (attention-dual): score[i,j] = (C_i . B_j)
+        #   * exp(cs_i - cs_j) * dt_j for j <= i
+        cb = jnp.einsum("bin,bjn->bij", Ck, Bk)                # [B, L, L]
+        decay = jnp.exp(cs[:, :, None] - cs[:, None])          # [B, L, L, H]
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        scr = cb[..., None] * decay * dtk[:, None]             # [B,L,L,H]
+        scr = jnp.where(causal[None, ..., None], scr, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scr, xk)
+        # inter-chunk: y_i += exp(cs_i) * C_i . state
+        y_inter = jnp.einsum("bin,bhpn->bihp", Ck, state) \
+            * jnp.exp(cs)[..., None]
+        # state update: S' = exp(cs_L) S + sum_j exp(cs_L - cs_j) dt_j x_j B_j
+        tail = jnp.exp(cs[:, -1:] - cs) * dtk                  # [B, L, H]
+        upd = jnp.einsum("bjh,bjhp,bjn->bhpn", tail, xk, Bk)
+        state = state * jnp.exp(cs[:, -1])[..., None, None] + upd
+        return state, y_intra + y_inter
+
+    s0 = initial_state if initial_state is not None else \
+        jnp.zeros((B, H, P, N), jnp.float32)
+    # checkpoint: the [B, L, L, H] decay kernel is recomputed in backward
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_step), s0,
+                         (xc, Bc, Cc, dtc, lac))
+    y = ys.swapaxes(0, 1).reshape(B, Sp, H, P)[:, :S]          # [B,S,H,P]
+    y = y + x[:, :S].reshape(B, S, H, P) * p["D"].astype(jnp.float32)[
+        None, None, :, None]
+    y = _gated_norm(p, y.reshape(B, S, di), z)
+    return dense(p["out_proj"], y.astype(u.dtype))
+
+
+class SSMCache(NamedTuple):
+    conv_state: Array     # [B, d_conv-1, conv_ch]
+    ssm_state: Array      # [B, H, P, N] f32
+
+    @classmethod
+    def init(cls, B: int, cfg: SSMConfig, dtype=jnp.float32):
+        conv_ch = cfg.d_inner + 2 * cfg.d_state
+        return cls(jnp.zeros((B, cfg.d_conv - 1, conv_ch), dtype),
+                   jnp.zeros((B, cfg.nheads, cfg.headdim, cfg.d_state),
+                             jnp.float32))
+
+
+def ssm_decode(p, cfg: SSMConfig, u: Array, cache: SSMCache
+               ) -> Tuple[Array, SSMCache]:
+    """u: [B, 1, d_model] one token; O(1) state update."""
+    B = u.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.d_state, cfg.nheads, cfg.headdim
+    z, xBC, dt = _split_proj(p, cfg, u)
+    xBC, conv_state = causal_conv1d(p["conv"], xBC, cache.conv_state)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32))
+    x = xBC[:, 0, :di].reshape(B, H, P)
+    Bm = xBC[:, 0, di:di + N]
+    Cm = xBC[:, 0, di + N:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # [B, H]
+    a = jnp.exp(dt * -jnp.exp(p["A_log"].astype(jnp.float32)))  # [B, H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x, Bm)
+    state = cache.ssm_state * a[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state) \
+        + x * p["D"].astype(jnp.float32)[None, :, None]
+    y = _gated_norm(p, y.reshape(B, 1, di), z)
+    out = dense(p["out_proj"], y.astype(u.dtype))
+    return out, SSMCache(conv_state, state)
+
+
+def ssm_forward_naive(p, cfg: SSMConfig, u: Array) -> Array:
+    """Step-by-step recurrence oracle (tests only)."""
+    B, S, _ = u.shape
+    cache = SSMCache.init(B, cfg, u.dtype)
+    outs = []
+    for t in range(S):
+        o, cache = ssm_decode(p, cfg, u[:, t:t + 1], cache)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

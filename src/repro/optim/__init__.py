@@ -1,0 +1,41 @@
+"""repro.optim — ZeRO-shardable optimizers + LR schedules."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .adafactor import AdafactorState, adafactor
+from .adamw import (AdamWState, Optimizer, adamw, clip_by_global_norm,
+                    global_norm)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1) -> Callable:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(math.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+def constant_lr(lr: float) -> Callable:
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def make_optimizer(name: str, lr_schedule: Callable, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_schedule, **kw)
+    if name == "adafactor":
+        return adafactor(lr_schedule, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+__all__ = ["Optimizer", "AdamWState", "AdafactorState", "adamw",
+           "adafactor", "warmup_cosine", "constant_lr", "make_optimizer",
+           "global_norm", "clip_by_global_norm"]

@@ -1,0 +1,76 @@
+"""Adafactor [Shazeer & Stern 2018]: factored second moments, no momentum.
+
+Selected for the largest configs (jamba-398B) where AdamW's 8 bytes/param of
+optimizer state cannot fit v5e HBM even ZeRO-sharded over 256 chips
+(DESIGN §5); factored state is O(rows + cols) per matrix."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import Optimizer, clip_by_global_norm, global_norm
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any     # row second-moment (or full v for <2D leaves)
+    vc: Any     # col second-moment (zeros placeholder for <2D leaves)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor(lr_schedule: Callable, decay: float = 0.8,
+              eps: float = 1e-30, clip_norm: Optional[float] = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    def init(params) -> AdafactorState:
+        def vr_init(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) \
+                else jnp.zeros(p.shape, jnp.float32)
+
+        def vc_init(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+                if _factored(p) else jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            vr=jax.tree_util.tree_map(vr_init, params),
+            vc=jax.tree_util.tree_map(vc_init, params))
+
+    def update(grads, state: AdafactorState, params):
+        grad_norm = global_norm(grads)
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr = lr_schedule(step)
+        beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+        def upd(p, g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                precond = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(precond, eps))
+            else:
+                vr = beta * vr + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(vr, eps))
+            # update clipping (RMS <= 1), per the paper
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms)
+            newp = p.astype(jnp.float32) - lr * (
+                u + weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), vr, vc
+
+        out = jax.tree_util.tree_map(upd, params, grads, state.vr, state.vc)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), AdafactorState(step, pick(1), pick(2)), \
+            {"lr": lr, "grad_norm": grad_norm}
+
+    return Optimizer(init, update)

@@ -1,0 +1,78 @@
+"""AdamW with global-norm clipping, as pure pytree functions.
+
+Optimizer state mirrors the parameter sharding (the train loop places state
+with the same PartitionSpecs as params + ZeRO extension over the data axis),
+so m/v are automatically ZeRO-sharded on the production mesh."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable   # (grads, state, params) -> (params, state, metrics)
+
+
+def adamw(lr_schedule: Callable[[jax.Array], jax.Array],
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: Optional[float] = 1.0
+          ) -> Optimizer:
+    def init(params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params))
+
+    def update(grads, state: AdamWState, params):
+        grad_norm = global_norm(grads)
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr = lr_schedule(step)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay \
+                * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+        new_params = jax.tree_util.tree_map(
+            lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(
+            lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(
+            lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step, new_m, new_v), \
+            {"lr": lr, "grad_norm": grad_norm}
+
+    return Optimizer(init, update)

@@ -1,0 +1,7 @@
+"""repro.roofline — roofline analysis from compiled dry-run artifacts."""
+from . import analysis
+from .analysis import (Roofline, collective_bytes_total, from_compiled,
+                       parse_collective_bytes)
+
+__all__ = ["analysis", "Roofline", "from_compiled",
+           "parse_collective_bytes", "collective_bytes_total"]

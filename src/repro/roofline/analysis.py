@@ -1,0 +1,149 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e targets).
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+cost_analysis() of the SPMD-partitioned executable reports *per-device*
+FLOPs/bytes, so the per-chip terms divide by one chip's peaks directly.
+collective_bytes is parsed from the post-optimization HLO text: we sum the
+output bytes of every collective op (all-reduce counted twice — ring
+all-reduce moves 2(g-1)/g x size; the (g-1)/g ≈ 1 approximation is applied
+to every op kind)."""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (per chip / per link)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64"
+                       r"|u64|f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: {'bytes': Σ output bytes, 'count': n}.
+    Works on post-optimization HLO (sync or -start async forms)."""
+    out = {k: {"bytes": 0.0, "count": 0} for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        for kind in COLLECTIVE_OPS:
+            # match "<op>(" or "<op>-start(" as the instruction name
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                lhs = line.split("=", 1)[1]
+                op_pos = lhs.find(kind)
+                shapes = _SHAPE_RE.findall(lhs[:op_pos])
+                nbytes = sum(_shape_bytes(d, s) for d, s in shapes)
+                out[kind]["bytes"] += nbytes
+                out[kind]["count"] += 1
+                break
+    return out
+
+
+def collective_bytes_total(parsed: Dict[str, Dict[str, float]]) -> float:
+    total = 0.0
+    for kind, rec in parsed.items():
+        mult = 2.0 if kind == "all-reduce" else 1.0
+        total += mult * rec["bytes"]
+    return total
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    model_flops: float = 0.0          # analytic 6*N_active*D (global)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline lower bound on step time = max of the three terms
+        (perfect overlap assumption)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): how much compiled compute is
+        'useful' (catches remat/redundancy waste)."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU at the roofline bound: useful FLOPs / (chips x
+        peak x step_time)."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS_BF16 * t)
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_compiled(compiled, chips: int, model_flops: float = 0.0,
+                  hlo_text: Optional[str] = None) -> Roofline:
+    """Roofline terms via the trip-count-aware HLO parser (hlo_parse).
+    XLA's own cost_analysis() counts while bodies once — wrong for a
+    scanned-layer model — so it is recorded only as a cross-check."""
+    from . import hlo_parse
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    parsed = hlo_parse.analyze(text)
+    return Roofline(flops_per_device=parsed["flops"],
+                    bytes_per_device=parsed["bytes"],
+                    collective_bytes_per_device=parsed["collective_bytes"],
+                    chips=chips, model_flops=model_flops)

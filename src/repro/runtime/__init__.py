@@ -1,0 +1,6 @@
+"""repro.runtime — fault tolerance, straggler monitoring, elastic scaling."""
+from .fault_tolerance import StragglerMonitor, Supervisor
+from .elastic import build_mesh, largest_feasible_mesh, reshard
+
+__all__ = ["Supervisor", "StragglerMonitor", "build_mesh",
+           "largest_feasible_mesh", "reshard"]

@@ -1,0 +1,50 @@
+"""Elastic scaling: rebuild the mesh from the live device set and reshard.
+
+When nodes join/leave, a 1000-node deployment (a) checkpoints, (b) rebuilds
+the mesh over the surviving devices, (c) re-places every array under the new
+sharding. Because our sharding is rule-based (launch/sharding.py maps param
+paths -> PartitionSpec independent of mesh size), step (c) is a single
+``jax.device_put`` per pytree — no reshape of the math, only of the layout.
+Data-parallel batch is re-split by the pipeline's dp_size argument.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def build_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str],
+               devices: Optional[Sequence] = None) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    need = int(np.prod(axis_sizes))
+    if len(devices) < need:
+        raise ValueError(f"need {need} devices, have {len(devices)}")
+    arr = np.array(devices[:need]).reshape(tuple(axis_sizes))
+    return Mesh(arr, tuple(axis_names))
+
+
+def largest_feasible_mesh(num_devices: int, model_parallel: int,
+                          axis_names: Tuple[str, str] = ("data", "model")
+                          ) -> Tuple[int, int]:
+    """Shrink policy: keep TP fixed (it matches the model's head/ffn
+    divisibility), absorb node loss on the data axis."""
+    data = num_devices // model_parallel
+    if data < 1:
+        raise ValueError("fewer devices than one model replica")
+    return (data, model_parallel)
+
+
+def reshard(tree: Any, mesh: Mesh, spec_fn: Callable[[str, Any],
+            PartitionSpec]) -> Any:
+    """Re-place every leaf under ``mesh`` with rule-derived specs."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = []
+    for (path, leaf) in flat[0]:
+        key = "/".join(str(p) for p in path)
+        spec = spec_fn(key, leaf)
+        out.append(jax.device_put(leaf, NamedSharding(mesh, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,116 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + one decode step on CPU; asserts shapes and finiteness.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, long_context_capable
+from repro.models.accounting import count_params
+from repro.models.model import (decode_step, forward, init_cache,
+                                init_params, loss_fn, prefill)
+
+
+def _inputs(cfg, B=2, S=24, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    vis = None
+    if cfg.frontend == "vision":
+        vis = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                (B, cfg.vision_tokens, cfg.vision_dim))
+    return tokens, vis
+
+
+@pytest.fixture(params=ARCH_IDS, scope="module")
+def arch(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def setup(arch):
+    cfg = get_config(arch, reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_forward_shapes_finite(setup):
+    cfg, params = setup
+    tokens, vis = _inputs(cfg)
+    h, aux = forward(params, cfg, tokens, vis)
+    S_expected = tokens.shape[1] + (cfg.vision_tokens
+                                    if cfg.frontend == "vision" else 0)
+    assert h.shape == (2, S_expected, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(h, np.float32)))
+    assert np.isfinite(float(aux))
+
+
+def test_train_step(setup):
+    cfg, params = setup
+    tokens, vis = _inputs(cfg)
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, tokens, vis)
+    assert np.isfinite(float(loss))
+    # a priori CE should be near log(vocab) at init
+    assert float(metrics["ce"]) < np.log(cfg.vocab) + 2.0
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert leaves and all(
+        np.all(np.isfinite(np.asarray(g, np.float32))) for g in leaves)
+    # one SGD step must change the loss
+    new_params = jax.tree_util.tree_map(lambda p, g: p - 1e-2 * g,
+                                        params, grads)
+    loss2, _ = loss_fn(new_params, cfg, tokens, vis)
+    assert np.isfinite(float(loss2)) and float(loss2) != float(loss)
+
+
+def test_decode_step(setup):
+    cfg, params = setup
+    tokens, vis = _inputs(cfg)
+    B = tokens.shape[0]
+    lg, caches = prefill(params, cfg, tokens[:, :16], S_max=32,
+                         cache_dtype=jnp.float32, vision_embeds=vis)
+    assert lg.shape == (B, cfg.vocab)
+    pos0 = 16 + (cfg.vision_tokens if cfg.frontend == "vision" else 0)
+    lg2, caches = decode_step(params, cfg, tokens[:, 16:17], caches,
+                              jnp.full((B,), pos0, jnp.int32))
+    assert lg2.shape == (B, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(lg2)))
+
+
+def test_full_config_accounting(arch):
+    """Analytic param count of the FULL config is in the right ballpark for
+    the published model size (catches config typos without instantiation)."""
+    cfg = get_config(arch)
+    n = count_params(cfg)
+    expected = {
+        "starcoder2-7b": 7e9, "qwen2.5-3b": 3e9, "qwen3-4b": 4e9,
+        "llama3.2-1b": 1.2e9, "mamba2-1.3b": 1.3e9,
+        "granite-moe-1b-a400m": 1.3e9, "mixtral-8x22b": 141e9,
+        "musicgen-large": 3.3e9, "jamba-1.5-large-398b": 398e9,
+        "internvl2-2b": 1.9e9,
+    }[arch]
+    assert 0.5 * expected < n < 2.0 * expected, \
+        f"{arch}: {n / 1e9:.2f}B params vs expected ~{expected / 1e9:.0f}B"
+
+
+def test_active_params_moe(arch):
+    cfg = get_config(arch)
+    n_all = count_params(cfg)
+    n_act = count_params(cfg, active_only=True)
+    if cfg.n_experts > 0:
+        assert n_act < n_all
+    else:
+        assert n_act == n_all
+
+
+def test_long_context_capability_flags(arch):
+    cfg = get_config(arch)
+    expected = {
+        "starcoder2-7b": False, "qwen2.5-3b": False, "qwen3-4b": False,
+        "llama3.2-1b": False, "mamba2-1.3b": True,
+        "granite-moe-1b-a400m": False, "mixtral-8x22b": True,
+        "musicgen-large": False, "jamba-1.5-large-398b": True,
+        "internvl2-2b": False,
+    }[arch]
+    assert long_context_capable(cfg) == expected

@@ -1,0 +1,126 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (convert, coo_to_csr, hilbert_decode, hilbert_key,
+                        merge_path_partition_np, morton_decode, morton_key,
+                        spmv, spmv_dense_oracle, to_coo)
+from repro.core.mergepath import balanced_row_bands
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+coords = st.integers(min_value=0, max_value=2 ** 16 - 1)
+
+
+@given(st.lists(st.tuples(coords, coords), min_size=1, max_size=64))
+def test_morton_bijective(pairs):
+    r = np.array([p[0] for p in pairs])
+    c = np.array([p[1] for p in pairs])
+    k = morton_key(r, c)
+    r2, c2 = morton_decode(k)
+    assert np.array_equal(np.asarray(r2), r)
+    assert np.array_equal(np.asarray(c2), c)
+
+
+@given(st.lists(st.tuples(coords, coords), min_size=1, max_size=64))
+def test_hilbert_bijective(pairs):
+    r = np.array([p[0] for p in pairs])
+    c = np.array([p[1] for p in pairs])
+    k = hilbert_key(r, c, 16)
+    r2, c2 = hilbert_decode(k, 16)
+    assert np.array_equal(np.asarray(r2), r)
+    assert np.array_equal(np.asarray(c2), c)
+
+
+@given(st.integers(2, 6))
+def test_hilbert_unit_steps(order):
+    """Consecutive Hilbert indices are Manhattan-adjacent (the locality
+    property the paper exploits, §4.1)."""
+    n = 1 << order
+    r, c = hilbert_decode(np.arange(n * n, dtype=np.uint32), order)
+    d = np.abs(np.diff(np.asarray(r).astype(int))) + \
+        np.abs(np.diff(np.asarray(c).astype(int)))
+    assert np.all(d == 1)
+
+
+@st.composite
+def sparse_matrix(draw):
+    m = draw(st.integers(1, 80))
+    n = draw(st.integers(1, 80))
+    nnz = draw(st.integers(0, 200))
+    seed = draw(st.integers(0, 2 ** 20))
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, n, nnz)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    return rows, cols, vals, (m, n)
+
+
+@given(sparse_matrix(),
+       st.sampled_from(["csb", "bcohch", "mergeb", "parcrs"]))
+def test_spmv_equals_oracle(mat, algo):
+    rows, cols, vals, shape = mat
+    coo = to_coo(rows, cols, vals, shape)
+    kw = dict(beta=16) if algo not in ("parcrs", "merge") else {}
+    y = spmv(convert(coo, algo, **kw), jnp.ones((shape[1],), jnp.float32),
+             impl="ref")
+    y_ref = spmv_dense_oracle(coo, jnp.ones((shape[1],), jnp.float32))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(sparse_matrix())
+def test_spmv_linearity(mat):
+    """A(ax + by) == a Ax + b Ay."""
+    rows, cols, vals, shape = mat
+    coo = to_coo(rows, cols, vals, shape)
+    csr = coo_to_csr(coo)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(shape[1]).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(shape[1]).astype(np.float32))
+    lhs = spmv(csr, 2.0 * x - 3.0 * y, impl="ref")
+    rhs = 2.0 * spmv(csr, x, impl="ref") - 3.0 * spmv(csr, y, impl="ref")
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(sparse_matrix(), st.integers(1, 17))
+def test_merge_partition_invariants(mat, P):
+    """Coverage, monotonicity, and the equal-diagonal balance bound."""
+    rows, cols, vals, shape = mat
+    coo = to_coo(rows, cols, vals, shape)
+    csr = coo_to_csr(coo)
+    row_ptr = np.asarray(csr.row_ptr)
+    rs, js = merge_path_partition_np(row_ptr, P)
+    m, nnz = shape[0], int(row_ptr[-1])
+    assert rs[0] == 0 and js[0] == 0
+    assert rs[-1] == m and js[-1] == nnz
+    assert np.all(np.diff(rs) >= 0) and np.all(np.diff(js) >= 0)
+    work = np.diff(rs) + np.diff(js)
+    assert work.max() <= -(-(m + nnz) // P) + 1
+
+
+@given(sparse_matrix(), st.integers(1, 9))
+def test_row_bands_cover(mat, P):
+    rows, cols, vals, shape = mat
+    coo = to_coo(rows, cols, vals, shape)
+    csr = coo_to_csr(coo)
+    bands = balanced_row_bands(np.asarray(csr.row_ptr), P)
+    assert bands[0] == 0 and bands[-1] == shape[0]
+    assert np.all(np.diff(bands) >= 0)
+
+
+@given(sparse_matrix(),
+       st.sampled_from(["csb", "csbh", "bcohc", "bcohch", "mergebh"]))
+def test_conversion_roundtrip(mat, algo):
+    """Blocked conversion preserves exactly the nonzero set (dense equal)."""
+    rows, cols, vals, shape = mat
+    coo = to_coo(rows, cols, vals, shape)
+    bs = convert(coo, algo, beta=16)
+    np.testing.assert_allclose(np.asarray(bs.to_coo().todense()),
+                               np.asarray(coo.todense()),
+                               rtol=1e-5, atol=1e-5)

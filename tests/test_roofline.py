@@ -1,0 +1,112 @@
+"""Roofline HLO parser: validated against unrolled references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import hlo_parse
+from repro.roofline.analysis import Roofline, parse_collective_bytes
+
+
+def _flops(fn, *specs):
+    txt = jax.jit(fn).lower(*specs).compile().as_text()
+    return hlo_parse.analyze(txt)["flops"]
+
+
+def test_scan_trip_count_multiplied():
+    def body(c, w):
+        return c @ w, None
+
+    def scanned(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    got = _flops(scanned, x, ws)
+    expect = 8 * 2 * 128 ** 3
+    assert abs(got / expect - 1) < 0.01
+
+
+def test_nested_scan():
+    def body(c, w):
+        return c @ w, None
+
+    def outer(x, ws):
+        def ob(c, _):
+            return jax.lax.scan(body, c, ws)[0], None
+        return jax.lax.scan(ob, x, None, length=3)[0]
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 128, 128), jnp.float32)
+    got = _flops(outer, x, ws)
+    expect = 3 * 4 * 2 * 128 ** 3
+    assert abs(got / expect - 1) < 0.01
+
+
+def test_grad_flops_3x_forward():
+    def body(c, w):
+        return c @ w, None
+
+    def loss(x, ws):
+        return jnp.sum(jax.lax.scan(body, x, ws)[0] ** 2)
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    fwd = 8 * 2 * 128 ** 3
+    got = _flops(jax.grad(loss, argnums=1), x, ws)
+    assert 2.8 < got / fwd < 3.3
+
+
+def test_dot_with_batch_dims():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    a = jax.ShapeDtypeStruct((4, 64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 32, 16), jnp.float32)
+    got = _flops(f, a, b)
+    expect = 2 * 4 * 64 * 32 * 16
+    assert abs(got / expect - 1) < 0.05
+
+
+def test_collective_parse_shapes():
+    txt = """
+ENTRY %main (p: f32[16,16]) -> f32[16,16] {
+  %ag = f32[256,16]{1,0} all-gather(%p), dimensions={0}
+  %ar = bf16[128]{0} all-reduce(%x), to_apply=%sum
+  ROOT %r = f32[16,16]{1,0} add(%p, %p)
+}
+"""
+    parsed = parse_collective_bytes(txt)
+    assert parsed["all-gather"]["bytes"] == 256 * 16 * 4
+    assert parsed["all-reduce"]["bytes"] == 128 * 2
+    assert parsed["all-gather"]["count"] == 1
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(flops_per_device=197e12, bytes_per_device=819e9,
+                 collective_bytes_per_device=0.0, chips=256,
+                 model_flops=197e12 * 256)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert r.bottleneck in ("compute", "memory")
+    assert 0.99 < r.useful_flops_fraction < 1.01
+    r2 = Roofline(1e12, 1e9, 1e12, 256)
+    assert r2.bottleneck == "collective"
+
+
+def test_dryrun_records_if_present():
+    """When the sweep has produced records, check their invariants."""
+    import glob
+    import json
+    import os
+    recs = glob.glob(os.path.join(os.path.dirname(__file__), "..",
+                                  "results", "dryrun", "*.json"))
+    if not recs:
+        pytest.skip("no dry-run records yet")
+    for f in recs:
+        with open(f) as fh:
+            r = json.load(fh)
+        if "error" in r:
+            pytest.fail(f"dry-run cell failed: {os.path.basename(f)}: "
+                        f"{r['error']}")
+        assert r["roofline"]["step_time_s"] > 0
+        assert r["chips"] in (256, 512)

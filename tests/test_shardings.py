@@ -1,0 +1,78 @@
+"""Sharding rule unit tests (no devices needed beyond 1 — specs only)."""
+import numpy as np
+import pytest
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import shardings as shd
+
+
+class FakeMesh:
+    """Duck-typed mesh: only axis_names/devices.shape are consulted."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+
+
+def spec(key, shape, grouped=False, profile="tp"):
+    return shd.param_spec_for(key, shape, MESH, grouped, profile)
+
+
+def test_attention_weights_2d_sharded():
+    assert spec("groups/0/mixer/wq/w", (16, 2048, 4096), True) == \
+        P(None, "data", "model")
+    assert spec("groups/0/mixer/wo/w", (16, 4096, 2048), True) == \
+        P(None, "model", "data")
+    assert spec("groups/0/mixer/wq/b", (16, 4096), True) == P(None, "model")
+
+
+def test_embed_vocab_parallel_with_guard():
+    assert spec("embed", (49152, 4608)) == P("model", "data")
+    # 50280 % 16 != 0 -> vocab dim replicated, d survives
+    assert spec("embed", (50280, 2048)) == P(None, "data")
+
+
+def test_moe_expert_parallel_and_fallback():
+    # 32 experts / 16 -> EP sharding
+    assert spec("groups/0/mlp/w_gate", (24, 32, 1024, 512), True) == \
+        P(None, "model", "data", None)
+    # 8 experts / 16 -> ffn-parallel fallback
+    assert spec("groups/0/mlp/w_gate", (56, 8, 6144, 16384), True) == \
+        P(None, None, "data", "model")
+    assert spec("groups/0/mlp/w_down", (56, 8, 16384, 6144), True) == \
+        P(None, None, "model", "data")
+
+
+def test_ssm_rules():
+    assert spec("groups/0/mixer/in_proj/w", (48, 2048, 8500), True)[1] == \
+        "data"
+    assert spec("groups/0/mixer/A_log", (48, 64), True) == P(None, "model")
+    assert spec("groups/0/mixer/conv/w", (48, 4, 4352), True) == \
+        P(None, None, "model")
+
+
+def test_norms_replicated():
+    assert spec("groups/0/norm1/scale", (16, 2048), True) == P(None, None)
+    assert spec("final_norm/scale", (2048,)) == P(None)
+
+
+def test_fsdp_profile_shards_largest_dim_over_all():
+    s = spec("groups/0/mixer/wq/w", (16, 2048, 4096), True, profile="fsdp")
+    assert s == P(None, None, ("data", "model"))
+    s2 = spec("embed", (128256, 2048), profile="fsdp")
+    assert s2 == P(("data", "model"), None)
+    # biases replicate
+    assert spec("groups/0/mixer/wq/b", (16, 4096), True,
+                profile="fsdp") == P(None, None)
+
+
+def test_guard_never_emits_nondividing_axis():
+    for shape in [(16, 2049, 4095), (16, 3, 5)]:
+        s = spec("groups/0/mixer/wq/w", shape, True)
+        for dim, ax in zip(shape[1:], tuple(s)[1:]):
+            if ax is not None:
+                size = 16
+                assert dim % size == 0
