@@ -1,12 +1,36 @@
 """Benchmark harness: min-of-N timing (the paper times 550 executions and
 reports the minimum, §5.2 — we use the same protocol with fewer reps on the
-1-core container) + CSV emission."""
+1-core container) + CSV emission, with an optional JSON sink shared by
+every driver (``benchmarks.run --json``, ``benchmarks.spmm_sweep --json``).
+
+JSON schema: a list of ``{"section": <table title>, "name": <row name>,
+"us_per_call": <float>, "derived": <free-form string>}`` records — the same
+columns the CSV prints."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, Iterable, List
+from typing import Callable, Dict, Iterable, List
 
 import jax
+
+# module-level record sink shared by all Csv instances (reset per driver)
+_RECORDS: List[Dict] = []
+
+
+def reset_records() -> None:
+    _RECORDS.clear()
+
+
+def records() -> List[Dict]:
+    return list(_RECORDS)
+
+
+def dump_json(path: str) -> None:
+    """Write every record emitted since reset_records() as JSON."""
+    with open(path, "w") as f:
+        json.dump(_RECORDS, f, indent=1)
+    print(f"# wrote {len(_RECORDS)} records to {path}")
 
 
 def time_fn(fn: Callable, *args, reps: int = 20, warmup: int = 3) -> float:
@@ -42,4 +66,6 @@ class Csv:
     def row(self, name: str, seconds: float, derived: str = ""):
         line = f"{name},{seconds * 1e6:.1f},{derived}"
         self.rows.append(line)
+        _RECORDS.append({"section": self.title, "name": name,
+                         "us_per_call": seconds * 1e6, "derived": derived})
         print(line)

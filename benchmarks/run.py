@@ -12,11 +12,14 @@ def main(argv=None) -> None:
                          "conversion,breakeven,sweep,moe,roofline")
     ap.add_argument("--scale", type=float, default=0.12,
                     help="matrix suite scale factor")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump all rows as JSON (harness schema)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
-    from . import conversion, grid_sweep, moe_dispatch, roofline_table, \
-        spmv_tables
+    from . import conversion, grid_sweep, harness, moe_dispatch, \
+        roofline_table, spmv_tables
+    harness.reset_records()
 
     def want(name):
         return only is None or name in only
@@ -37,6 +40,8 @@ def main(argv=None) -> None:
         moe_dispatch.run()
     if want("roofline"):
         roofline_table.run()
+    if args.json:
+        harness.dump_json(args.json)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,97 @@
+"""SpMM k-sweep: GFLOP/s and achieved arithmetic intensity vs the roofline
+prediction, per format, for k in 1..256 (powers of two).
+
+The point of the table: the matrix stream is paid once per multiply, so
+intensity — and with it the attainable fraction of peak — must climb
+monotonically with k until the ridge. ``ai`` uses each format's *actual*
+``storage_bytes()`` (fill-in and padding included); ``ai_ideal`` is the
+roofline model's ideal-CSR prediction from ``repro.roofline``.
+
+  PYTHONPATH=src python -m benchmarks.spmm_sweep --scale 0.02 --json out.json
+
+Emits the same CSV columns and JSON schema as ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def sweep_matrix(name: str, coo, ks, impl: str, reps: int, csv) -> None:
+    import jax.numpy as jnp
+    from repro.core import coo_to_csr
+    from repro.kernels.tiling import coo_to_tiled
+    from repro.roofline import (spmm_arithmetic_intensity,
+                                spmm_roofline_gflops)
+    from repro.spmm import coo_to_sellcs, spmm
+    from . import harness
+
+    m, n = coo.shape
+    nnz = coo.nnz
+    formats = {"csr": coo_to_csr(coo), "sellcs": coo_to_sellcs(coo)}
+    try:
+        formats["tiled_csb"] = coo_to_tiled(coo, "csb")
+    except MemoryError:
+        pass                       # too sparse for dense mini-tiles
+    rng = np.random.default_rng(0)
+    for fmt, mat in formats.items():
+        for k in ks:
+            X = jnp.asarray(rng.standard_normal((n, k)).astype(np.float32))
+            sec = harness.time_fn(lambda: spmm(mat, X, impl=impl),
+                                  reps=reps, warmup=1)
+            flops = 2.0 * nnz * k
+            gflops = flops / sec / 1e9
+            ai = spmm_arithmetic_intensity(
+                nnz, m, n, k, matrix_bytes=mat.storage_bytes())
+            ai_ideal = spmm_arithmetic_intensity(nnz, m, n, k)
+            roof = spmm_roofline_gflops(ai)
+            csv.row(f"{name}/{fmt}/k={k}", sec,
+                    f"gflops={gflops:.3f};ai={ai:.4f};"
+                    f"ai_ideal={ai_ideal:.4f};roof_gflops={roof:.1f}")
+
+
+def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
+        reps: int = 3, matrices_only=None) -> None:
+    from repro.data import matrices
+    from . import harness
+
+    ks = []
+    k = 1
+    while k <= kmax:
+        ks.append(k)
+        k *= 2
+    suite = matrices.test_suite(scale=suite_scale)
+    names = matrices_only or ["hhh_like", "livejournal_like", "mawi_like"]
+    csv = harness.Csv(f"SpMM k-sweep (impl={impl}, k in {ks})")
+    for name in names:
+        if name not in suite:
+            raise SystemExit(f"unknown matrix {name}; one of {sorted(suite)}")
+        coo = matrices.as_coo(suite[name].make())
+        sweep_matrix(name, coo, ks, impl, reps, csv)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--kmax", type=int, default=256)
+    ap.add_argument("--impl", default="ref",
+                    choices=("auto", "ref", "pallas", "pallas_interpret"))
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--matrices", default=None,
+                    help="comma-separated subset of the matrix suite")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump all rows as JSON (harness schema)")
+    args = ap.parse_args(argv)
+
+    from . import harness
+    harness.reset_records()
+    run(suite_scale=args.scale, kmax=args.kmax, impl=args.impl,
+        reps=args.reps,
+        matrices_only=args.matrices.split(",") if args.matrices else None)
+    if args.json:
+        harness.dump_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

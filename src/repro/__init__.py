@@ -1,0 +1,43 @@
+"""repro — "Algorithms for Parallel Shared-Memory Sparse Matrix-Vector
+Multiplication on Unstructured Matrices", grown into a JAX/Pallas system.
+
+Module map
+----------
+``repro.core``       the paper's contribution: storage formats (COO/CSR/
+                     ICRS/BICRS/BlockedSparse), space-filling-curve
+                     orderings, merge-path balancing, conversion pipeline,
+                     the §7 algorithm selector (k-aware ``select``) and the
+                     §8 autotuner.
+``repro.spmm``       the multi-RHS SpMM engine: SELL-C-σ storage
+                     (``sellcs``), pure-jnp oracles (``reference``), tiled
+                     Pallas kernels with a k-tile grid dimension
+                     (``kernels``), and request batching for the serve
+                     path (``batching``). SpMV is the k = 1 special case.
+``repro.kernels``    Pallas TPU kernels for the single-vector compute
+                     paths: blocked SpMV (``bsr_spmv``), merge-path SpMV
+                     (``merge_spmv``), MoE grouped GEMM, plus the
+                     TiledSparse 8x128 mini-tile compute format.
+``repro.roofline``   roofline terms from compiled HLO + the SpMM intensity
+                     model that picks k-tiles.
+``repro.data``       synthetic matrix generators matched to the paper's
+                     test-set classes (uniform/rmat/powerlaw/mesh2d/
+                     ``mawi_like`` skew) and the token pipeline.
+``repro.models``     the LM stack (attention/SSM/MoE) whose sparse pieces
+                     exercise the kernels at scale.
+``repro.configs``    model architecture presets.
+``repro.launch``     meshes, shardings, train/serve/dryrun entry points —
+                     ``launch.serve --mode spmv`` drives the SpMM request
+                     batcher.
+``repro.optim``      optimizers.
+``repro.checkpoint`` checkpointing.
+``repro.runtime``    elasticity + fault tolerance.
+``repro.compat``     shims over jax/Pallas API renames.
+
+Submodules import lazily (nothing heavy happens at ``import repro``).
+"""
+__version__ = "0.1.0"
+
+__all__ = [
+    "core", "spmm", "kernels", "roofline", "data", "models", "configs",
+    "launch", "optim", "checkpoint", "runtime", "compat",
+]

@@ -1,0 +1,64 @@
+"""Version tolerance for the jax / Pallas API surface.
+
+The repo targets whatever jax_pallas toolchain the container bakes in, and
+that has straddled several renames:
+
+  * ``jax.shard_map``            (new)  vs  ``jax.experimental.shard_map``
+    — and the ``check_vma=`` kwarg (new) vs ``check_rep=`` (old);
+  * ``jax.set_mesh``             (new)  vs  the ``with mesh:`` context;
+  * ``pltpu.CompilerParams``     (new)  vs  ``pltpu.TPUCompilerParams``.
+
+Everything else goes through these thin shims so a toolchain bump touches
+one file.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f=None, *, mesh=None, in_specs=None, out_specs=None,
+              check_vma=None, **kw):
+    """``jax.shard_map`` under either API generation.
+
+    On old jax, a ``mesh=None`` call (new-style "use the ambient mesh")
+    resolves the mesh from the ``with mesh:`` context that :func:`set_mesh`
+    establishes there.
+    """
+    if hasattr(jax, "shard_map"):
+        skw = dict(kw)
+        if mesh is not None:
+            skw["mesh"] = mesh
+        if check_vma is not None:
+            skw["check_vma"] = check_vma
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
+                             **skw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if mesh is None:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh.empty:
+            raise ValueError(
+                "shard_map without mesh= needs an ambient mesh; wrap the "
+                "call in `with repro.compat.set_mesh(mesh):`")
+    skw = dict(kw)
+    if check_vma is not None:
+        skw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **skw)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh          # jax.sharding.Mesh is itself a context manager
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct Pallas TPU compiler params under whichever name this jax
+    release exports."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

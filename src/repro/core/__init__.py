@@ -14,7 +14,8 @@ from .mergepath import (MergePartition, balanced_row_bands,
                         merge_path_partition, merge_path_partition_np,
                         span_block_aligned)
 from .selector import (MachineSpec, MatrixStats, amortized_cost,
-                       break_even_spmvs, matrix_stats, select_algorithm)
+                       break_even_spmvs, matrix_stats, select,
+                       select_algorithm, spmm_cost_scale)
 from .autotune import TuneResult, autotune
 from .spmv import (spmv, spmv_blocked, spmv_coo, spmv_csr, spmv_dense_oracle,
                    spmv_incremental)
@@ -27,7 +28,8 @@ __all__ = [
     "morton_key", "MergePartition", "balanced_row_bands",
     "merge_path_partition", "merge_path_partition_np", "span_block_aligned",
     "MachineSpec", "MatrixStats", "amortized_cost", "break_even_spmvs",
-    "matrix_stats", "select_algorithm", "autotune",
+    "matrix_stats", "select", "select_algorithm", "spmm_cost_scale",
+    "autotune",
     "TuneResult", "spmv", "spmv_blocked", "spmv_coo",
     "spmv_csr", "spmv_dense_oracle", "spmv_incremental",
 ]

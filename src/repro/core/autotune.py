@@ -34,9 +34,11 @@ class TuneResult:
     algorithm: str
     beta: Optional[int]
     convert_s: float
-    spmv_s: float
+    spmv_s: float                # per-multiply (one SpMM when k > 1)
     total_s: float               # convert + num_spmvs * spmv
     tpu_model_s: Optional[float] = None
+    k: int = 1                   # right-hand sides per multiply
+    k_tile: Optional[int] = None  # roofline-chosen column block (k > 1)
 
 
 def _measure(fn: Callable, reps: int = 5, warmup: int = 2) -> float:
@@ -53,11 +55,31 @@ def _measure(fn: Callable, reps: int = 5, warmup: int = 2) -> float:
 def autotune(coo: COO, *, num_spmvs: int = 100,
              algorithms: Tuple[str, ...] = DEFAULT_ALGOS,
              betas: Optional[List[int]] = None,
-             reps: int = 5, tpu_model: bool = False
+             reps: int = 5, tpu_model: bool = False, k: int = 1
              ) -> Tuple[TuneResult, List[TuneResult]]:
-    """Return (best, all_results) over the candidate grid."""
-    x = jnp.asarray(np.random.default_rng(0).standard_normal(
-        coo.shape[1]).astype(np.float32))
+    """Return (best, all_results) over the candidate grid.
+
+    ``k > 1`` tunes the SpMM engine instead: each measured multiply is one
+    ``A @ X`` with ``X: [n, k]`` (via ``repro.spmm``), ``algorithms`` may
+    include ``"sellcs"``, and every result records the roofline-chosen
+    ``k_tile``. ``k = 1`` is byte-for-byte the original SpMV tuner."""
+    rng = np.random.default_rng(0)
+    if k > 1:
+        from repro.spmm import choose_k_tile, spmm
+        x = jnp.asarray(rng.standard_normal(
+            (coo.shape[1], k)).astype(np.float32))
+        k_tile = choose_k_tile(coo.shape, k, nnz=coo.nnz)
+
+        def measure(mat):
+            return _measure(lambda: spmm(mat, x, impl="ref"), reps)
+    else:
+        x = jnp.asarray(rng.standard_normal(
+            coo.shape[1]).astype(np.float32))
+        k_tile = None
+
+        def measure(mat):
+            return _measure(lambda: spmv(mat, x, impl="ref"), reps)
+
     results: List[TuneResult] = []
     for algo in algorithms:
         spec = ALGORITHM_SPECS[algo]
@@ -65,9 +87,10 @@ def autotune(coo: COO, *, num_spmvs: int = 100,
             t0 = time.perf_counter()
             mat = convert(coo, algo)
             conv_s = time.perf_counter() - t0
-            spmv_s = _measure(lambda: spmv(mat, x, impl="ref"), reps)
+            spmv_s = measure(mat)
             results.append(TuneResult(algo, None, conv_s, spmv_s,
-                                      conv_s + num_spmvs * spmv_s))
+                                      conv_s + num_spmvs * spmv_s,
+                                      k=k, k_tile=k_tile))
             continue
         base = block_size_for(coo.shape,
                               in_block_format=spec.in_block_format)
@@ -80,9 +103,12 @@ def autotune(coo: COO, *, num_spmvs: int = 100,
             t0 = time.perf_counter()
             mat = convert(coo, algo, **kw)
             conv_s = time.perf_counter() - t0
-            spmv_s = _measure(lambda: spmv(mat, x, impl="ref"), reps)
+            spmv_s = measure(mat)
             model_s = None
-            if tpu_model:
+            # the TPU tile-stream model prices a single-vector SpMV; at
+            # k > 1 the measurement is one k-RHS SpMM — different units, so
+            # the model is only recorded for the SpMV case.
+            if tpu_model and k == 1:
                 from repro.kernels.tiling import coo_to_tiled
                 from benchmarks.spmv_tables import tpu_model_time
                 try:
@@ -92,6 +118,6 @@ def autotune(coo: COO, *, num_spmvs: int = 100,
                     model_s = float("inf")
             results.append(TuneResult(algo, beta, conv_s, spmv_s,
                                       conv_s + num_spmvs * spmv_s,
-                                      model_s))
+                                      model_s, k=k, k_tile=k_tile))
     best = min(results, key=lambda r: r.total_s)
     return best, results

@@ -73,6 +73,12 @@ ALGORITHM_SPECS = {
     "mergebh": AlgorithmSpec("mergebh", True, BLOCK_STORAGE_CSR, "row",
                              IN_BLOCK_PACKED_COO, "hilbert", "merge",
                              "hybrid #6: + Hilbert inside blocks"),
+    # SELL-C-σ (repro.spmm): the survey literature's row-sorted sliced-ELL
+    # answer to row-length skew; the storage format of the multi-RHS engine.
+    "sellcs": AlgorithmSpec("sellcs", blocked=False, scheduling="dynamic",
+                            note="SELL-C-σ slices (Kreutzer et al.; "
+                                 "Gao et al. arXiv:2404.06047) — "
+                                 "converted by repro.spmm.sellcs"),
 }
 
 # VMEM working-set budget for choosing beta (the TPU analogue of "x and y
@@ -337,8 +343,15 @@ def coo_to_blocked(coo: COO, algorithm: str, *, beta: Optional[int] = None,
 
 
 def convert(coo: COO, algorithm: str, **kw):
-    """Uniform entry point: COO -> the storage format ``algorithm`` needs."""
+    """Uniform entry point: COO -> the storage format ``algorithm`` needs.
+
+    ``sellcs`` round-trips through ``repro.spmm.sellcs`` (kw: ``c``,
+    ``sigma``); blocked algorithms take ``beta``/``num_bands``; the flat
+    CRS-based algorithms ignore kw."""
     spec = ALGORITHM_SPECS[algorithm]
+    if algorithm == "sellcs":
+        from repro.spmm.sellcs import coo_to_sellcs   # late: core <- spmm
+        return coo_to_sellcs(coo, **kw)
     if spec.blocked:
         return coo_to_blocked(coo, algorithm, **kw)
     return coo_to_csr(coo)

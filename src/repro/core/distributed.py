@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from .formats import COO
 from .mergepath import balanced_row_bands
 
@@ -114,7 +115,7 @@ def spmv_row_distributed(sharded: ShardedCOO, x: jax.Array, mesh: Mesh,
         contrib = vals[0] * x_rep[cols[0]]
         return y_loc.at[0, rows[0]].add(contrib)
 
-    yb = jax.shard_map(
+    yb = shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None), P()),
         out_specs=P(axis, None))(
@@ -144,7 +145,7 @@ def spmv_merge_distributed(sharded: ShardedCOO, x: jax.Array, mesh: Mesh,
         y_loc = jnp.zeros((m,), vals.dtype).at[offs[0] + rows[0]].add(contrib)
         return jax.lax.psum(y_loc, axis)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis), P()),
         out_specs=P())(

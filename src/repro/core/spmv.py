@@ -112,6 +112,7 @@ def spmv(mat: Matrix, x: Array, impl: str = "auto") -> Array:
     TPU, otherwise the XLA reference. Kernels live in repro.kernels (imported
     lazily to keep the core dependency-light)."""
     from repro.kernels.tiling import TiledSparse
+    from repro.spmm.sellcs import SellCS   # late import: core <- spmm
     if impl in ("pallas", "pallas_interpret"):
         interpret = impl == "pallas_interpret"
         from repro.kernels import ops as kops
@@ -119,16 +120,22 @@ def spmv(mat: Matrix, x: Array, impl: str = "auto") -> Array:
             return kops.bsr_spmv(mat, x, interpret=interpret)
         if isinstance(mat, CSR):
             return kops.merge_spmv(mat, x, interpret=interpret)
+        if isinstance(mat, SellCS):
+            from repro.spmm.kernels import sellcs_spmm
+            return sellcs_spmm(mat, x[:, None], interpret=interpret)[:, 0]
         raise TypeError(
             f"no kernel path for {type(mat).__name__}; convert with "
             "repro.kernels.coo_to_tiled for the blocked kernel")
     if impl == "auto":
         on_tpu = jax.default_backend() == "tpu"
-        if on_tpu and isinstance(mat, (TiledSparse, CSR)):
+        if on_tpu and isinstance(mat, (TiledSparse, CSR, SellCS)):
             return spmv(mat, x, impl="pallas")
     if isinstance(mat, TiledSparse):
         from repro.kernels.ref import bsr_spmv_ref
         return bsr_spmv_ref(mat, x)
+    if isinstance(mat, SellCS):
+        from repro.spmm.reference import spmm_sellcs
+        return spmm_sellcs(mat, x)         # [n] in -> [m] out (k=1 case)
     if isinstance(mat, COO):
         return spmv_coo(mat, x)
     if isinstance(mat, CSR):

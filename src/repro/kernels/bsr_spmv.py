@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
 from .tiling import TILE_C, TILE_R, TiledSparse
 
 DEFAULT_TILES_PER_STEP = 8
@@ -90,10 +91,7 @@ def bsr_spmv(ts: TiledSparse, x: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((mp,), lambda g, *_: (0,)),
     )
-    try:
-        params = pltpu.CompilerParams(dimension_semantics=("arbitrary",))
-    except TypeError:  # older naming
-        params = pltpu.TPUCompilerParams(dimension_semantics=("arbitrary",))
+    params = tpu_compiler_params(dimension_semantics=("arbitrary",))
 
     y = pl.pallas_call(
         functools.partial(_kernel, tiles_per_step=TB),
@@ -165,10 +163,7 @@ def bsr_spmm(ts: TiledSparse, x: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((mp, R), lambda g, *_: (0, 0)),
     )
-    try:
-        params = pltpu.CompilerParams(dimension_semantics=("arbitrary",))
-    except TypeError:
-        params = pltpu.TPUCompilerParams(dimension_semantics=("arbitrary",))
+    params = tpu_compiler_params(dimension_semantics=("arbitrary",))
     y = pl.pallas_call(
         functools.partial(_kernel_spmm, tiles_per_step=TB),
         grid_spec=grid_spec,

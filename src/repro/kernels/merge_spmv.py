@@ -32,6 +32,24 @@ from repro.core.formats import CSR
 from repro.core.mergepath import merge_path_partition_np
 
 
+def default_num_spans(m: int, nnz: int) -> int:
+    """Span-count heuristic shared by the SpMV and SpMM merge paths: one
+    span per ~4096 merge items, clamped to [8, 1024]."""
+    return max(min((m + nnz) // 4096, 1024), 8)
+
+
+def carry_out_fixup(partials: jax.Array, row_starts: jax.Array,
+                    m: int) -> jax.Array:
+    """The paper's sequential carry-out fixup as one scatter-add: place each
+    span's local rows at its row_start offset (span boundaries overlap by
+    <= 1 row, which the add resolves). ``partials`` is (P, R) for SpMV or
+    (P, R, K) for SpMM; returns (m,) / (m, K)."""
+    R = partials.shape[1]
+    idx = row_starts[:-1, None] + jnp.arange(R, dtype=jnp.int32)[None]
+    y = jnp.zeros((m + R,) + partials.shape[2:], jnp.float32)
+    return y.at[idx].add(partials)[:m]
+
+
 class MergePlan(NamedTuple):
     cols: jax.Array        # int32[P, D]
     vals: jax.Array        # f32[P, D]

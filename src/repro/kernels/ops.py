@@ -42,19 +42,14 @@ def merge_spmv(csr: CSR, x: jax.Array, *, num_spans: Optional[int] = None,
     m, n = csr.shape
     if plan is None:
         if num_spans is None:
-            num_spans = max(min((m + csr.nnz) // 4096, 1024), 8)
+            num_spans = _merge.default_num_spans(m, csr.nnz)
         plan = _merge.merge_plan(csr, num_spans)
     np_ = -(-n // 128) * 128
     x_pad = jnp.zeros((np_,), x.dtype).at[:n].set(x)
     partials = _merge.merge_spmv_partials(
         plan.cols, plan.vals, plan.seg, x_pad, r_width=plan.r_width,
         interpret=interpret)                       # (P, R)
-    # the paper's sequential carry-out fixup: scatter-add each span's local
-    # rows at its row_start offset (span boundaries overlap by <= 1 row)
-    P, R = partials.shape
-    idx = plan.row_starts[:-1, None] + jnp.arange(R, dtype=jnp.int32)[None]
-    y = jnp.zeros((m + R,), jnp.float32).at[idx].add(partials)
-    return y[:m]
+    return _merge.carry_out_fixup(partials, plan.row_starts, m)
 
 
 def moe_group_matmul(tokens: jax.Array, weights: jax.Array,

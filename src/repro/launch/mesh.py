@@ -11,7 +11,12 @@ from __future__ import annotations
 from typing import Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5 explicit-sharding API; absent on the pinned 0.4.x
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
 
 
 def make_production_mesh(*, multi_pod: bool = False,
@@ -32,8 +37,10 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...],
             "(the dry-run must set "
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "any jax import)")
-    return jax.make_mesh(shape, axes, devices=devs[:need],
-                         axis_types=(AxisType.Auto,) * len(axes))
+    kw = {}
+    if AxisType is not None:
+        kw["axis_types"] = (AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, devices=devs[:need], **kw)
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:

@@ -1,8 +1,15 @@
-"""Serving entry point: batched prefill + greedy decode with KV caches.
+"""Serving entry points.
 
-CPU-scale demo (reduced config, real execution):
+LM mode — batched prefill + greedy decode with KV caches (CPU-scale demo,
+reduced config, real execution):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
       --batch 4 --prompt-len 32 --gen 16
+
+SpMV mode — the repro.spmm request batcher serving single-vector requests:
+queued ``A @ x`` requests aggregate into one SpMM per flush (matrix stream
+amortized over the batch), measured against serving them one by one:
+  PYTHONPATH=src python -m repro.launch.serve --mode spmv \
+      --matrix mawi_like --requests 64 --max-batch 32
 """
 from __future__ import annotations
 
@@ -17,15 +24,89 @@ from repro.configs.base import get_config
 from repro.models.model import decode_step, init_params, prefill
 
 
+def serve_spmv(args):
+    """Sparse serving demo: batched (one SpMM per flush) vs sequential."""
+    from repro.core import (MachineSpec, convert, matrix_stats, select,
+                            spmv, to_coo)
+    from repro.data import matrices
+    from repro.roofline import spmm_arithmetic_intensity
+    from repro.spmm import RequestBatcher
+
+    suite = matrices.test_suite(scale=args.scale)
+    if args.matrix not in suite:
+        raise SystemExit(f"--matrix must be one of {sorted(suite)}")
+    coo = matrices.as_coo(suite[args.matrix].make())
+    stats = matrix_stats(coo)
+    # num_spmvs counts k-RHS multiplies: batching turns `requests` SpMVs
+    # into ceil(requests / max_batch) SpMM calls
+    num_spmms = -(-args.requests // args.max_batch)
+    algo = args.algorithm or select(stats, MachineSpec(1),
+                                    num_spmvs=num_spmms,
+                                    k=args.max_batch)
+    mat = convert(coo, algo)
+    print(f"[serve-spmv] matrix={args.matrix} m={stats.m} n={stats.n} "
+          f"nnz={stats.nnz} algo={algo} max_batch={args.max_batch}")
+
+    rng = np.random.default_rng(args.seed)
+    xs = [jnp.asarray(rng.standard_normal(stats.n).astype(np.float32))
+          for _ in range(args.requests)]
+
+    batcher = RequestBatcher(mat, max_batch=args.max_batch, impl=args.impl)
+    for x in xs:
+        batcher.submit(x)
+    jax.block_until_ready(list(batcher.drain().values()))  # warmup/compile
+    batcher2 = RequestBatcher(mat, max_batch=args.max_batch, impl=args.impl)
+    rids = [batcher2.submit(x) for x in xs]
+    t0 = time.perf_counter()
+    out = batcher2.drain()
+    jax.block_until_ready(list(out.values()))
+    t_batched = time.perf_counter() - t0
+
+    jax.block_until_ready(spmv(mat, xs[0], impl=args.impl))  # warmup
+    t0 = time.perf_counter()
+    seq = [spmv(mat, x, impl=args.impl) for x in xs]
+    jax.block_until_ready(seq)
+    t_seq = time.perf_counter() - t0
+
+    for rid, y in zip(rids, seq):
+        np.testing.assert_allclose(np.asarray(out[rid]), np.asarray(y),
+                                   rtol=2e-4, atol=2e-4)
+    ai1 = spmm_arithmetic_intensity(stats.nnz, stats.m, stats.n, 1)
+    aik = spmm_arithmetic_intensity(stats.nnz, stats.m, stats.n,
+                                    args.max_batch)
+    print(f"[serve-spmv] batched {t_batched*1e3:.1f} ms "
+          f"({batcher2.flushes} SpMM calls) vs sequential "
+          f"{t_seq*1e3:.1f} ms ({len(xs)} SpMV calls) — "
+          f"speedup {t_seq/max(t_batched, 1e-9):.2f}x")
+    print(f"[serve-spmv] modelled intensity {ai1:.3f} -> {aik:.3f} "
+          f"flop/byte at k={args.max_batch}")
+    return t_batched, t_seq
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", choices=("lm", "spmv"), default="lm")
+    ap.add_argument("--arch")
+    # spmv-mode arguments (repro.spmm request batching)
+    ap.add_argument("--matrix", default="mawi_like")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--algorithm", default=None,
+                    help="force a format (default: core.select with k)")
+    ap.add_argument("--impl", default="auto",
+                    choices=("auto", "ref", "pallas", "pallas_interpret"))
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.mode == "spmv":
+        return serve_spmv(args)
+    if not args.arch:
+        ap.error("--arch is required in lm mode")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = init_params(jax.random.PRNGKey(args.seed), cfg)

@@ -1,7 +1,11 @@
 """repro.roofline — roofline analysis from compiled dry-run artifacts."""
 from . import analysis
-from .analysis import (Roofline, collective_bytes_total, from_compiled,
-                       parse_collective_bytes)
+from .analysis import (Roofline, collective_bytes_total, csr_stream_bytes,
+                       from_compiled, parse_collective_bytes,
+                       ridge_intensity, spmm_arithmetic_intensity,
+                       spmm_roofline_gflops)
 
 __all__ = ["analysis", "Roofline", "from_compiled",
-           "parse_collective_bytes", "collective_bytes_total"]
+           "parse_collective_bytes", "collective_bytes_total",
+           "csr_stream_bytes", "ridge_intensity",
+           "spmm_arithmetic_intensity", "spmm_roofline_gflops"]

@@ -135,6 +135,44 @@ class Roofline:
         }
 
 
+# --------------------------------------------------------------------------
+# SpMM (multi-RHS) roofline terms — used by repro.spmm to pick the k-tile
+# and by benchmarks/spmm_sweep.py to print prediction next to measurement.
+# --------------------------------------------------------------------------
+def ridge_intensity(peak_flops: float = PEAK_FLOPS_BF16,
+                    hbm_bw: float = HBM_BW) -> float:
+    """FLOP/byte at the roofline ridge: intensity beyond this is
+    compute-bound and more RHS reuse buys nothing."""
+    return peak_flops / hbm_bw
+
+
+def csr_stream_bytes(nnz: int, m: int, dtype_bytes: int = 4) -> int:
+    """Ideal CSR matrix-stream footprint of one multiply: values + column
+    indices + row pointer. The single source of truth for the traffic model
+    (shared by choose_k_tile, the selector's k-scaling and the sweep)."""
+    return nnz * (4 + dtype_bytes) + 4 * (m + 1)
+
+
+def spmm_arithmetic_intensity(nnz: int, m: int, n: int, k: int,
+                              matrix_bytes: Optional[int] = None,
+                              dtype_bytes: int = 4) -> float:
+    """Modelled FLOP/byte of one SpMM with k right-hand sides: every
+    streamed matrix byte is reused across k columns, so intensity grows
+    monotonically in k toward 2*nnz/(m+n)/dtype_bytes. ``matrix_bytes``
+    defaults to the ideal CSR footprint."""
+    if matrix_bytes is None:
+        matrix_bytes = csr_stream_bytes(nnz, m, dtype_bytes)
+    flops = 2.0 * nnz * k
+    traffic = matrix_bytes + k * (m + n) * dtype_bytes
+    return flops / max(traffic, 1)
+
+
+def spmm_roofline_gflops(ai: float, peak_flops: float = PEAK_FLOPS_BF16,
+                         hbm_bw: float = HBM_BW) -> float:
+    """Attainable GFLOP/s at arithmetic intensity ``ai``."""
+    return min(peak_flops, ai * hbm_bw) / 1e9
+
+
 def from_compiled(compiled, chips: int, model_flops: float = 0.0,
                   hlo_text: Optional[str] = None) -> Roofline:
     """Roofline terms via the trip-count-aware HLO parser (hlo_parse).

@@ -1,0 +1,64 @@
+"""repro.spmm — the multi-RHS SpMM engine (``Y = A @ X``, ``X: [n, k]``).
+
+Layers (one module each):
+
+  ``sellcs``     SELL-C-σ storage: lane-height slices, σ-window row sorting
+  ``reference``  pure-jnp oracles per format (the XLA fallback path)
+  ``kernels``    tiled Pallas kernels with a k-tile grid dimension
+  ``batching``   request batching for the serve path (k SpMVs -> 1 SpMM)
+
+SpMV is the k = 1 special case throughout; ``repro.core.spmv`` remains the
+single-vector entry point and routes SELL-C-σ matrices here.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.formats import COO, CSR, BlockedSparse
+from . import reference
+from .batching import RequestBatcher, SpmvRequest, batch_spmv
+from .kernels import choose_k_tile, csr_spmm, sellcs_spmm, tiled_spmm
+from .reference import (spmm_blocked, spmm_coo, spmm_csr, spmm_ref,
+                        spmm_sellcs)
+from .sellcs import SellCS, coo_to_sellcs
+
+
+def spmm(mat, x: jax.Array, *, impl: str = "auto",
+         k_tile: Optional[int] = None) -> jax.Array:
+    """Multiply ``Y = A @ X`` for any supported format.
+
+    impl in {"auto", "ref", "pallas", "pallas_interpret"} — same contract
+    as ``core.spmv.spmv``: "auto" takes the Pallas path on TPU for formats
+    with a kernel, the XLA reference otherwise.
+    """
+    from repro.kernels.tiling import TiledSparse
+    if impl in ("pallas", "pallas_interpret"):
+        interpret = impl == "pallas_interpret"
+        x2 = x[:, None] if x.ndim == 1 else x
+        if isinstance(mat, TiledSparse):
+            y = tiled_spmm(mat, x2, k_tile=k_tile, interpret=interpret)
+        elif isinstance(mat, CSR):
+            y = csr_spmm(mat, x2, k_tile=k_tile, interpret=interpret)
+        elif isinstance(mat, SellCS):
+            y = sellcs_spmm(mat, x2, k_tile=k_tile, interpret=interpret)
+        else:
+            raise TypeError(
+                f"no SpMM kernel for {type(mat).__name__}; convert with "
+                "coo_to_sellcs / repro.kernels.coo_to_tiled / coo_to_csr")
+        return y[:, 0] if x.ndim == 1 else y
+    if impl == "auto":
+        on_tpu = jax.default_backend() == "tpu"
+        if on_tpu and isinstance(mat, (TiledSparse, CSR, SellCS)):
+            return spmm(mat, x, impl="pallas", k_tile=k_tile)
+    return spmm_ref(mat, x)
+
+
+__all__ = [
+    "SellCS", "coo_to_sellcs", "spmm", "choose_k_tile",
+    "tiled_spmm", "csr_spmm", "sellcs_spmm",
+    "spmm_ref", "spmm_coo", "spmm_csr", "spmm_blocked", "spmm_sellcs",
+    "RequestBatcher", "SpmvRequest", "batch_spmv", "reference",
+    "COO", "CSR", "BlockedSparse",
+]

@@ -1,0 +1,125 @@
+"""Request batching: many single-vector SpMV requests -> one SpMM call.
+
+The serve-path story of this subsystem: each user request is one ``A @ x``
+— memory-bound, wasting the matrix stream on a single vector. Aggregating
+queued requests into a ``[n, k]`` block before multiplying reuses every
+streamed nonzero k times (arithmetic intensity grows k-fold; see
+``repro.roofline.spmm_arithmetic_intensity``) at zero cost to correctness:
+column j of the SpMM *is* request j's SpMV.
+
+``RequestBatcher`` is the queueing front-end ``launch.serve`` drives; k is
+padded to the next power of two (capped at ``max_batch``) so a server sees
+O(log max_batch) distinct compiled shapes instead of one per queue depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmvRequest:
+    """One queued ``A @ x`` request."""
+    rid: int
+    x: Array
+
+
+def _next_pow2(k: int) -> int:
+    p = 1
+    while p < k:
+        p <<= 1
+    return p
+
+
+def batch_spmv(matrix, requests: Sequence, *, impl: str = "auto",
+               k_tile: Optional[int] = None) -> List[Array]:
+    """Answer a batch of single-vector requests with ONE SpMM.
+
+    ``requests`` holds ``SpmvRequest``s or bare ``[n]`` vectors. Returns
+    the per-request results in input order.
+    """
+    from . import spmm
+    if not requests:
+        return []
+    xs = [r.x if isinstance(r, SpmvRequest) else r for r in requests]
+    n = matrix.shape[1]
+    for x in xs:
+        if x.shape != (n,):
+            raise ValueError(
+                f"request vector shape {x.shape} != matrix n ({n},)")
+    X = jnp.stack(xs, axis=1)                       # [n, k]
+    Y = spmm(matrix, X, impl=impl, k_tile=k_tile)   # [m, k]
+    return [Y[:, j] for j in range(len(xs))]
+
+
+class RequestBatcher:
+    """Aggregates queued SpMV requests and answers them with one SpMM.
+
+    >>> b = RequestBatcher(matrix, max_batch=64)
+    >>> rid = b.submit(x)            # enqueue, returns a ticket
+    >>> results = b.flush()          # one SpMM; {rid: y}
+    """
+
+    def __init__(self, matrix, *, max_batch: int = 128, impl: str = "auto",
+                 pad_pow2: bool = True):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.matrix = matrix
+        self.max_batch = max_batch
+        self.impl = impl
+        self.pad_pow2 = pad_pow2
+        self._queue: List[SpmvRequest] = []
+        self._next_rid = 0
+        # serving telemetry
+        self.flushes = 0
+        self.served = 0
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def submit(self, x: Array) -> int:
+        """Enqueue one request; returns its ticket id. Shape-checked here so
+        a bad request can never poison an already-popped flush batch."""
+        x = jnp.asarray(x)
+        n = self.matrix.shape[1]
+        if x.shape != (n,):
+            raise ValueError(
+                f"request vector shape {x.shape} != matrix n ({n},)")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(SpmvRequest(rid, x))
+        return rid
+
+    def flush(self) -> Dict[int, Array]:
+        """Serve up to ``max_batch`` queued requests with one SpMM call and
+        scatter the result columns back to their tickets."""
+        if not self._queue:
+            return {}
+        batch, self._queue = (self._queue[:self.max_batch],
+                              self._queue[self.max_batch:])
+        k = len(batch)
+        n = self.matrix.shape[1]
+        kp = min(_next_pow2(k), self.max_batch) if self.pad_pow2 else k
+        X = jnp.zeros((n, kp), batch[0].x.dtype)
+        X = X.at[:, :k].set(jnp.stack([r.x for r in batch], axis=1))
+        from . import spmm
+        Y = spmm(self.matrix, X, impl=self.impl)
+        self.flushes += 1
+        self.served += k
+        return {r.rid: Y[:, j] for j, r in enumerate(batch)}
+
+    def drain(self) -> Dict[int, Array]:
+        """Flush until the queue is empty."""
+        out: Dict[int, Array] = {}
+        while self._queue:
+            out.update(self.flush())
+        return out

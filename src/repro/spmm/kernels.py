@@ -1,0 +1,318 @@
+"""Tiled Pallas SpMM kernels — CSR (merge-path), blocked (TiledSparse) and
+SELL-C-σ, each with a column-block (k-tile) grid dimension.
+
+Every kernel streams the matrix exactly once per k-tile and keeps an
+``[·, KT]`` slab of X and Y VMEM-resident, so the arithmetic intensity of a
+pass grows KT-fold over SpMV — the one lever that moves a memory-bound
+SpMV up the roofline (paper §1; Schubert/Hager/Fehske). The k-tile is the
+*leading, parallel* grid dimension: k-tiles touch disjoint X/Y columns, so
+megacore (or a future multi-device grid) can split them freely, while the
+matrix-stream dimension stays "arbitrary" (sequential accumulate).
+
+``choose_k_tile`` picks KT from the roofline model in ``repro.roofline``:
+grow KT until either the X/Y slabs stop fitting the VMEM budget or the
+modelled intensity crosses the ridge (beyond which more reuse buys
+nothing).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+from repro.core.convert import VMEM_BUDGET_BYTES
+from repro.core.formats import CSR
+from repro.kernels import merge_spmv as _merge
+from repro.kernels.tiling import TILE_C, TILE_R, TiledSparse
+from repro.roofline.analysis import csr_stream_bytes, ridge_intensity
+from .sellcs import SellCS
+
+LANE = 128
+W_TILE = 8          # width-rows per SELL-C-σ grid step (sublane-sized)
+
+
+def choose_k_tile(shape: Tuple[int, int], k: int, *,
+                  nnz: Optional[int] = None, dtype_bytes: int = 4,
+                  vmem_budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Roofline-guided k-tile: the largest KT <= k such that
+
+    (a) the [n_pad, KT] X-slab and [m_pad, KT] Y-slab fit half the VMEM
+        budget (the other half double-buffers the matrix stream), and
+    (b) (given nnz) the modelled intensity at KT does not overshoot the
+        ridge by more than one lane group — past the ridge the kernel is
+        compute-bound and larger KT only bloats VMEM.
+
+    KT is rounded down to a lane multiple once it exceeds one lane, and is
+    always >= 1.
+    """
+    m, n = shape
+    mp = -(-max(m, 1) // TILE_R) * TILE_R
+    np_ = -(-max(n, 1) // LANE) * LANE
+    slab_rows = (mp + np_) * dtype_bytes
+    kt = max(min(k, (vmem_budget // 2) // max(slab_rows, 1)), 1)
+    if nnz:
+        # smallest KT whose intensity reaches the ridge
+        ridge = ridge_intensity()
+        mat_bytes = csr_stream_bytes(nnz, m, dtype_bytes)
+        vec_bytes = (m + n) * dtype_bytes
+        denom = 2.0 * nnz - ridge * vec_bytes
+        if denom > 0:
+            kt_ridge = int(ridge * mat_bytes / denom) + 1
+            kt = min(kt, max(kt_ridge, 1))
+    if kt >= LANE:
+        kt = (kt // LANE) * LANE
+    return max(min(kt, k), 1)
+
+
+def _pad_k(x: jax.Array, kt: int) -> jax.Array:
+    k = x.shape[1]
+    kp = -(-k // kt) * kt
+    if kp != k:
+        x = jnp.pad(x, ((0, 0), (0, kp - k)))
+    return x
+
+
+# --------------------------------------------------------------------------
+# TiledSparse (blocked formats' TPU compute form) SpMM, k-tiled grid
+# --------------------------------------------------------------------------
+def _tiled_kernel(tile_rows_ref, tile_cols_ref,    # scalar prefetch (SMEM)
+                  tiles_ref, x_ref,                # VMEM in
+                  y_ref,                           # VMEM out (revisited)
+                  *, tiles_per_step: int):
+    g = pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    def body(t, _):
+        idx = g * tiles_per_step + t
+        r = tile_rows_ref[idx]
+        c = tile_cols_ref[idx]
+        tile = tiles_ref[t]                                    # (8, 128)
+        xs = x_ref[pl.ds(c * TILE_C, TILE_C), :]               # (128, KT)
+        upd = jax.lax.dot_general(
+            tile, xs.astype(tile.dtype), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                # (8, KT)
+        cur = y_ref[pl.ds(r * TILE_R, TILE_R), :]
+        y_ref[pl.ds(r * TILE_R, TILE_R), :] = cur + upd
+        return _
+
+    jax.lax.fori_loop(0, tiles_per_step, body, None)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k_tile", "tiles_per_step", "interpret"))
+def tiled_spmm(ts: TiledSparse, x: jax.Array, *,
+               k_tile: Optional[int] = None, tiles_per_step: int = 8,
+               interpret: bool = False) -> jax.Array:
+    """Y = A @ X over the dense-mini-tile stream, grid = (k_tiles, tile
+    batches). Serves every blocked paper format (their TPU compute form is
+    TiledSparse) and is the k-generalization of kernels.bsr_spmv."""
+    m, n = ts.shape
+    mp, np_ = ts.padded_shape()
+    k = x.shape[1]
+    kt = k_tile or choose_k_tile(ts.shape, k, nnz=ts.nnz)
+    x_pad = jnp.zeros((np_, k), x.dtype).at[:n].set(x)
+    x_pad = _pad_k(x_pad, kt)
+    nk = x_pad.shape[1] // kt
+
+    T = ts.num_tiles
+    TB = tiles_per_step
+    T_pad = -(-T // TB) * TB
+    tiles, tile_rows, tile_cols = ts.tiles, ts.tile_rows, ts.tile_cols
+    if T_pad != T:
+        pad = T_pad - T
+        tiles = jnp.concatenate(
+            [tiles, jnp.zeros((pad,) + tiles.shape[1:], tiles.dtype)])
+        tile_rows = jnp.concatenate(
+            [tile_rows, jnp.zeros((pad,), tile_rows.dtype)])
+        tile_cols = jnp.concatenate(
+            [tile_cols, jnp.zeros((pad,), tile_cols.dtype)])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nk, T_pad // TB),
+        in_specs=[
+            pl.BlockSpec((TB, TILE_R, TILE_C), lambda j, g, *_: (g, 0, 0)),
+            pl.BlockSpec((np_, kt), lambda j, g, *_: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((mp, kt), lambda j, g, *_: (0, j)),
+    )
+    y = pl.pallas_call(
+        functools.partial(_tiled_kernel, tiles_per_step=TB),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, x_pad.shape[1]), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tile_rows, tile_cols, tiles, x_pad)
+    return y[:m, :k]
+
+
+# --------------------------------------------------------------------------
+# CSR merge-path SpMM, k-tiled grid
+# --------------------------------------------------------------------------
+def _merge_kernel(cols_ref, vals_ref, seg_ref, x_ref, out_ref, *,
+                  r_width: int):
+    cols = cols_ref[0]                           # (D,)
+    vals = vals_ref[0].astype(jnp.float32)       # (D,)
+    seg = seg_ref[0]                             # (D,)
+    xs = jnp.take(x_ref[...], cols, axis=0,
+                  mode="clip").astype(jnp.float32)            # (D, KT)
+    prod = vals[:, None] * xs                                  # (D, KT)
+    onehot = (seg[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, r_width), 1)
+              ).astype(jnp.float32)                            # (D, R)
+    out_ref[0] = jax.lax.dot_general(
+        onehot, prod, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (R, KT)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("r_width", "k_tile", "interpret"))
+def _merge_spmm_partials(plan_cols, plan_vals, plan_seg, x_pad, *,
+                         r_width: int, k_tile: int,
+                         interpret: bool = False):
+    P, D = plan_cols.shape
+    np_ = x_pad.shape[0]
+    nk = x_pad.shape[1] // k_tile
+    grid_spec = pl.GridSpec(
+        grid=(nk, P),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda j, p: (p, 0)),
+            pl.BlockSpec((1, D), lambda j, p: (p, 0)),
+            pl.BlockSpec((1, D), lambda j, p: (p, 0)),
+            pl.BlockSpec((np_, k_tile), lambda j, p: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, r_width, k_tile),
+                               lambda j, p: (p, 0, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_merge_kernel, r_width=r_width),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P, r_width, x_pad.shape[1]),
+                                       jnp.float32),
+        interpret=interpret,
+    )(plan_cols, plan_vals, plan_seg, x_pad)
+
+
+def csr_spmm(csr: CSR, x: jax.Array, *,
+             plan: Optional[_merge.MergePlan] = None,
+             num_spans: Optional[int] = None,
+             k_tile: Optional[int] = None,
+             interpret: bool = False) -> jax.Array:
+    """Merge-path SpMM on flat CSR: per-span one-hot matmul produces an
+    (R, KT) partial block; the sequential carry-out fixup is a single
+    scatter-add epilogue (same plan object as the SpMV kernel — build it
+    once at convert time)."""
+    m, n = csr.shape
+    k = x.shape[1]
+    if plan is None:
+        if num_spans is None:
+            num_spans = _merge.default_num_spans(m, csr.nnz)
+        plan = _merge.merge_plan(csr, num_spans)
+    kt = k_tile or choose_k_tile(csr.shape, k, nnz=csr.nnz)
+    np_ = -(-n // LANE) * LANE
+    x_pad = jnp.zeros((np_, k), x.dtype).at[:n].set(x)
+    x_pad = _pad_k(x_pad, kt)
+    partials = _merge_spmm_partials(
+        plan.cols, plan.vals, plan.seg, x_pad, r_width=plan.r_width,
+        k_tile=kt, interpret=interpret)                     # (P, R, Kp)
+    return _merge.carry_out_fixup(partials, plan.row_starts, m)[:, :k]
+
+
+# --------------------------------------------------------------------------
+# SELL-C-σ SpMM, k-tiled grid
+# --------------------------------------------------------------------------
+def _sellcs_kernel(slice_of_ref,                  # scalar prefetch (SMEM)
+                   data_ref, cols_ref, x_ref,     # VMEM in
+                   y_ref,                         # VMEM out (revisited)
+                   *, w_tile: int, chunk: int):
+    g = pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    cols = cols_ref[...]                                       # (WT, C)
+    xs = jnp.take(x_ref[...], cols.reshape(-1), axis=0,
+                  mode="clip")                                 # (WT*C, KT)
+    kt = xs.shape[1]
+    contrib = (data_ref[...].astype(jnp.float32).reshape(-1)[:, None]
+               * xs.astype(jnp.float32)
+               ).reshape(w_tile, chunk, kt)                    # (WT, C, KT)
+
+    def body(w, _):
+        s = slice_of_ref[g * w_tile + w]
+        cur = y_ref[pl.ds(s * chunk, chunk), :]
+        y_ref[pl.ds(s * chunk, chunk), :] = cur + contrib[w]
+        return _
+
+    jax.lax.fori_loop(0, w_tile, body, None)
+
+
+@functools.partial(jax.jit, static_argnames=("k_tile", "interpret"))
+def _sellcs_spmm_slots(sc: SellCS, x_pad: jax.Array, *, k_tile: int,
+                       interpret: bool = False) -> jax.Array:
+    """Accumulate into σ-sorted row slots [S*C, Kp]; the caller undoes the
+    permutation."""
+    C = sc.chunk
+    S = sc.num_slices
+    W = sc.data.shape[0]
+    Wp = max(-(-W // W_TILE) * W_TILE, W_TILE)
+    data, cols, slice_of = sc.data, sc.cols, sc.slice_of
+    if Wp != W:
+        pad = Wp - W
+        data = jnp.concatenate([data, jnp.zeros((pad, C), data.dtype)])
+        cols = jnp.concatenate([cols, jnp.zeros((pad, C), cols.dtype)])
+        # padding width-rows carry data == 0; aim them at slice 0 harmlessly
+        slice_of = jnp.concatenate(
+            [slice_of, jnp.zeros((pad,), slice_of.dtype)])
+
+    np_, Kp = x_pad.shape
+    nk = Kp // k_tile
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nk, Wp // W_TILE),
+        in_specs=[
+            pl.BlockSpec((W_TILE, C), lambda j, g, *_: (g, 0)),
+            pl.BlockSpec((W_TILE, C), lambda j, g, *_: (g, 0)),
+            pl.BlockSpec((np_, k_tile), lambda j, g, *_: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((S * C, k_tile), lambda j, g, *_: (0, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_sellcs_kernel, w_tile=W_TILE, chunk=C),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S * C, Kp), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(slice_of, data, cols, x_pad)
+
+
+def sellcs_spmm(sc: SellCS, x: jax.Array, *, k_tile: Optional[int] = None,
+                interpret: bool = False) -> jax.Array:
+    """SELL-C-σ SpMM: each grid step broadcasts W_TILE width-vectors of the
+    slice stream against the VMEM-resident X slab — uniform work quanta
+    regardless of row-length skew (the σ-sorted answer to the paper's mawi
+    pathology), with the x-gather as the only irregular access."""
+    m, n = sc.shape
+    k = x.shape[1]
+    kt = k_tile or choose_k_tile(sc.shape, k, nnz=sc.nnz)
+    np_ = -(-max(n, 1) // LANE) * LANE
+    x_pad = jnp.zeros((np_, k), x.dtype).at[:n].set(x)
+    x_pad = _pad_k(x_pad, kt)
+    if sc.nnz == 0:
+        return jnp.zeros((m, k), jnp.float32)
+    y_slots = _sellcs_spmm_slots(sc, x_pad, k_tile=kt,
+                                 interpret=interpret)     # (S*C, Kp)
+    Kp = y_slots.shape[1]
+    y = jnp.zeros((m + 1, Kp), jnp.float32).at[sc.row_perm].add(y_slots)
+    return y[:m, :k]

@@ -1,0 +1,114 @@
+"""Pure-jnp SpMM oracles (``Y = A @ X``, ``X: [n, k]``).
+
+These are the correctness baselines for every format's multi-RHS multiply
+and the XLA fallback the dispatcher uses off-TPU. Each is the column-wise
+generalization of the corresponding ``repro.core.spmv`` oracle: SpMV is
+exactly the ``k = 1`` column of each of these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import COO, CSR, BlockedSparse
+from .sellcs import SellCS
+
+Array = jax.Array
+
+
+def _as_2d(x: Array):
+    """Return (X_2d, was_1d): SpMV inputs ride along as k = 1."""
+    if x.ndim == 1:
+        return x[:, None], True
+    if x.ndim != 2:
+        raise ValueError(f"X must be [n] or [n, k], got shape {x.shape}")
+    return x, False
+
+
+@jax.jit
+def spmm_coo(coo: COO, x: Array) -> Array:
+    x2, squeeze = _as_2d(x)
+    m, _ = coo.shape
+    k = x2.shape[1]
+    dtype = jnp.promote_types(coo.data.dtype, x2.dtype)
+    y = jnp.zeros((m, k), dtype)
+    if coo.nnz:
+        y = y.at[coo.rows].add(coo.data[:, None] * x2[coo.cols])
+    return y[:, 0] if squeeze else y
+
+
+@jax.jit
+def spmm_csr(csr: CSR, x: Array) -> Array:
+    x2, squeeze = _as_2d(x)
+    m, _ = csr.shape
+    k = x2.shape[1]
+    dtype = jnp.promote_types(csr.data.dtype, x2.dtype)
+    if csr.nnz == 0:
+        y = jnp.zeros((m, k), dtype)
+        return y[:, 0] if squeeze else y
+    rows = csr.row_of_nnz()
+    prod = csr.data[:, None] * x2[csr.col_ind]
+    y = jax.ops.segment_sum(prod, rows, num_segments=m).astype(dtype)
+    return y[:, 0] if squeeze else y
+
+
+@jax.jit
+def spmm_blocked(bs: BlockedSparse, x: Array) -> Array:
+    x2, squeeze = _as_2d(x)
+    m, _ = bs.shape
+    k = x2.shape[1]
+    dtype = jnp.promote_types(bs.data.dtype, x2.dtype)
+    if bs.nnz == 0:
+        y = jnp.zeros((m, k), dtype)
+        return y[:, 0] if squeeze else y
+    bid = bs.block_of_nnz()
+    lr, lc = bs.local_rows_cols()
+    rows = bs.block_rows[bid] * bs.beta + lr
+    cols = bs.block_cols[bid] * bs.beta + lc
+    prod = bs.data[:, None] * x2[cols]
+    y = jax.ops.segment_sum(prod, rows, num_segments=m).astype(dtype)
+    return y[:, 0] if squeeze else y
+
+
+@jax.jit
+def spmm_sellcs(sc: SellCS, x: Array) -> Array:
+    """Slice-structured SpMM: one gather + FMA per width-row, then a single
+    permutation scatter back to original row order. Padding entries carry
+    data == 0, cols == 0 — they contribute nothing."""
+    x2, squeeze = _as_2d(x)
+    m, _ = sc.shape
+    C = sc.chunk
+    k = x2.shape[1]
+    dtype = jnp.promote_types(sc.data.dtype, x2.dtype)
+    S = sc.num_slices
+    if sc.nnz == 0 or sc.data.shape[0] == 0:
+        y = jnp.zeros((m, k), dtype)
+        return y[:, 0] if squeeze else y
+    xs = x2[sc.cols]                                    # [W, C, k]
+    contrib = sc.data[:, :, None] * xs                  # [W, C, k]
+    slot = (sc.slice_of[:, None] * C
+            + jnp.arange(C, dtype=jnp.int32)[None])     # [W, C]
+    y_slots = jnp.zeros((S * C, k), dtype).at[slot].add(contrib)
+    # undo the σ-sort permutation; padding slots scatter to row m (dropped)
+    y = jnp.zeros((m + 1, k), dtype).at[sc.row_perm].add(y_slots)
+    y = y[:m]
+    return y[:, 0] if squeeze else y
+
+
+def spmm_ref(mat, x: Array) -> Array:
+    """Oracle dispatch over every supported storage format."""
+    from repro.kernels.ref import bsr_spmm_ref
+    from repro.kernels.tiling import TiledSparse
+    if isinstance(mat, TiledSparse):
+        x2, squeeze = _as_2d(x)
+        y = bsr_spmm_ref(mat, x2)
+        return y[:, 0] if squeeze else y
+    if isinstance(mat, SellCS):
+        return spmm_sellcs(mat, x)
+    if isinstance(mat, COO):
+        return spmm_coo(mat, x)
+    if isinstance(mat, CSR):
+        return spmm_csr(mat, x)
+    if isinstance(mat, BlockedSparse):
+        return spmm_blocked(mat, x)
+    raise TypeError(f"no SpMM oracle for {type(mat).__name__}")

@@ -1,0 +1,163 @@
+"""SELL-C-σ storage (sliced ELLPACK with σ-window row sorting).
+
+The paper's row-distributed algorithms break on row-length skew (the mawi
+pathology, Table 6.3); the survey literature's standard fix is SELL-C-σ
+[Kreutzer et al.; Gao et al., arXiv:2404.06047 §4]: group rows into slices
+of height C, pad each slice only to *its own* longest row, and sort rows by
+length inside windows of σ rows so that similar-length rows share a slice —
+padding collapses and every slice is a uniform work quantum.
+
+TPU mapping: C defaults to the Pallas lane width (128) so one width-step of
+a slice is one (C,)-lane vector: the SpMM kernel broadcasts it against a
+(C, k) block of X and accumulates into C output rows — VPU work with no
+scatter. Row sorting is a *permutation*, recorded in ``row_perm`` and undone
+by a single scatter at the end of the multiply.
+
+Layout (width-major, slice-concatenated):
+
+  ``data[w, l]`` / ``cols[w, l]`` — the ``j``-th nonzero of the row in lane
+  ``l`` of slice ``slice_of[w]``, where ``j = w - slice_ptr[slice_of[w]]``.
+  Padding entries carry ``data == 0`` and ``cols == 0`` (harmless FMA).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import COO, static_field, _pytree_dataclass
+
+Array = jax.Array
+
+DEFAULT_C = 128          # Pallas lane width
+DEFAULT_SIGMA_SLICES = 16   # default σ = 16 slices' worth of rows
+
+
+@_pytree_dataclass
+class SellCS:
+    """SELL-C-σ matrix as a JAX pytree (see module docstring for layout)."""
+    data: Array            # f32[W, C] — padded values, width-major
+    cols: Array            # int32[W, C] — padded column indices
+    slice_ptr: Array       # int32[S+1] — width offset of each slice
+    slice_of: Array        # int32[W] — owning slice of each width-row
+    row_perm: Array        # int32[S*C] — permuted slot -> original row
+                           #   (padding slots point at m, dropped on scatter)
+    row_len: Array         # int32[S*C] — true nnz of each permuted slot
+    shape: Tuple[int, int] = static_field()
+    chunk: int = static_field()          # C — slice height
+    sigma: int = static_field()          # σ — sorting window (rows)
+    nnz: int = static_field()            # true nonzeros before padding
+
+    @property
+    def num_slices(self) -> int:
+        return self.slice_ptr.shape[0] - 1
+
+    @property
+    def padded_nnz(self) -> int:
+        return int(self.data.shape[0]) * self.chunk
+
+    @property
+    def fill_ratio(self) -> float:
+        """nnz / padded entries — 1.0 means σ-sorting removed all padding."""
+        p = self.padded_nnz
+        return self.nnz / p if p else 0.0
+
+    def storage_bytes(self) -> int:
+        """Faithful SELL-C-σ cost: padded values + padded column indices +
+        slice pointers + the row permutation."""
+        W = self.data.shape[0]
+        return int(W * self.chunk * (self.data.dtype.itemsize + 4)
+                   + self.slice_ptr.shape[0] * 4
+                   + self.row_perm.shape[0] * 4)
+
+    def to_coo(self) -> COO:
+        """Exact round-trip (host-side), including explicit zeros."""
+        m, n = self.shape
+        C = self.chunk
+        data = np.asarray(self.data)
+        cols = np.asarray(self.cols)
+        slice_ptr = np.asarray(self.slice_ptr, np.int64)
+        slice_of = np.asarray(self.slice_of, np.int64)
+        row_perm = np.asarray(self.row_perm, np.int64)
+        row_len = np.asarray(self.row_len, np.int64)
+        W = data.shape[0]
+        if W == 0 or self.nnz == 0:
+            z = jnp.zeros((0,), jnp.int32)
+            return COO(z, z, jnp.zeros((0,), self.data.dtype), self.shape)
+        j = np.arange(W, dtype=np.int64) - slice_ptr[slice_of]      # [W]
+        slot = slice_of[:, None] * C + np.arange(C, dtype=np.int64)  # [W, C]
+        valid = j[:, None] < row_len[slot]
+        rows = row_perm[slot][valid]
+        return COO(jnp.asarray(rows.astype(np.int32)),
+                   jnp.asarray(cols[valid].astype(np.int32)),
+                   jnp.asarray(data[valid]), self.shape)
+
+
+def coo_to_sellcs(coo: COO, *, c: int = DEFAULT_C,
+                  sigma: Optional[int] = None) -> SellCS:
+    """Convert COO -> SELL-C-σ (host-side, like every conversion here).
+
+    ``sigma`` is the row-sorting window in rows; it is rounded up to a
+    multiple of ``c``. ``sigma=None`` uses ``DEFAULT_SIGMA_SLICES * c``;
+    ``sigma >= m`` gives a single global sort (maximal padding reduction,
+    maximal permutation scatter); ``sigma = c`` sorts only within slices.
+    """
+    m, n = coo.shape
+    if c < 1:
+        raise ValueError(f"slice height C must be >= 1, got {c}")
+    if sigma is None:
+        sigma = DEFAULT_SIGMA_SLICES * c
+    sigma = max(-(-sigma // c) * c, c)
+
+    rows = np.asarray(coo.rows, np.int64)
+    cols = np.asarray(coo.cols, np.int64)
+    vals = np.asarray(coo.data)
+
+    row_len_orig = (np.bincount(rows, minlength=m).astype(np.int64)
+                    if m else np.zeros(0, np.int64))
+    # σ-window sort: rows ordered by (window, -length, row) — stable, so
+    # equal-length rows keep their relative order (reproducible).
+    ridx = np.arange(m, dtype=np.int64)
+    window = ridx // sigma
+    order = np.lexsort((ridx, -row_len_orig, window))   # perm pos -> row
+
+    S = max(-(-m // c), 1)
+    slots = S * c
+    row_perm = np.full(slots, m, np.int64)
+    row_perm[:m] = order
+    row_len = np.zeros(slots, np.int64)
+    row_len[:m] = row_len_orig[order]
+
+    widths = row_len.reshape(S, c).max(axis=1)          # per-slice width
+    slice_ptr = np.zeros(S + 1, np.int64)
+    np.cumsum(widths, out=slice_ptr[1:])
+    W = int(slice_ptr[-1])
+    slice_of = np.repeat(np.arange(S, dtype=np.int64), widths)
+
+    data = np.zeros((W, c), np.float32 if vals.size == 0 else vals.dtype)
+    col_arr = np.zeros((W, c), np.int64)
+    if rows.size:
+        inv = np.empty(m, np.int64)
+        inv[order] = np.arange(m)
+        p = inv[rows]                                   # permuted position
+        sort2 = np.lexsort((cols, p))
+        p, cc, vv = p[sort2], cols[sort2], vals[sort2]
+        row_start = np.zeros(slots + 1, np.int64)
+        np.cumsum(row_len, out=row_start[1:])
+        j = np.arange(p.size, dtype=np.int64) - row_start[p]
+        wrow = slice_ptr[p // c] + j
+        lane = p % c
+        data[wrow, lane] = vv
+        col_arr[wrow, lane] = cc
+
+    return SellCS(
+        data=jnp.asarray(data),
+        cols=jnp.asarray(col_arr.astype(np.int32)),
+        slice_ptr=jnp.asarray(slice_ptr.astype(np.int32)),
+        slice_of=jnp.asarray(slice_of.astype(np.int32)),
+        row_perm=jnp.asarray(row_perm.astype(np.int32)),
+        row_len=jnp.asarray(row_len.astype(np.int32)),
+        shape=coo.shape, chunk=int(c), sigma=int(sigma),
+        nnz=int(rows.size))

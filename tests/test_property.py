@@ -1,8 +1,15 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+Skipped wholesale when hypothesis is not installed (the container image
+pins the jax toolchain but does not ship hypothesis); the deterministic
+analogues of these invariants run in test_spmm.py / test_core_formats.py.
+"""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (convert, coo_to_csr, hilbert_decode, hilbert_key,
                         merge_path_partition_np, morton_decode, morton_key,

@@ -1,0 +1,236 @@
+"""repro.spmm — multi-RHS engine: SELL-C-σ, kernels, selector-k, batching.
+
+The core property (ISSUE acceptance): for every storage format and
+k in {1, 8, 32, 128}, ``spmm(A, X)`` equals k stacked single-vector oracle
+calls to fp32 tolerance — including the mawi-style skewed generator.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (MachineSpec, convert, coo_to_csr, matrix_stats,
+                        select, select_algorithm, spmv, to_coo)
+from repro.core.spmv import spmv_coo
+from repro.data import matrices
+from repro.kernels.tiling import coo_to_tiled
+from repro import spmm as M
+
+RTOL, ATOL = 2e-4, 2e-4
+
+
+def _matrices():
+    return {
+        "uniform": to_coo(*matrices.uniform(230, 190, 2200, seed=0)),
+        "mawi_like": to_coo(*matrices.mawi_like(260, 240, 2400, 0.3,
+                                                seed=1)),
+    }
+
+
+def _make(fmt, coo):
+    if fmt == "coo":
+        return coo
+    if fmt == "csr":
+        return coo_to_csr(coo)
+    if fmt == "blocked":
+        return convert(coo, "bcohc", beta=64)
+    if fmt == "tiled":
+        return coo_to_tiled(coo, "csb", beta=128)
+    if fmt == "sellcs":
+        return M.coo_to_sellcs(coo, c=64, sigma=128)
+    raise ValueError(fmt)
+
+
+@pytest.mark.parametrize("k", [1, 8, 32, 128])
+@pytest.mark.parametrize("fmt", ["coo", "csr", "blocked", "tiled",
+                                 "sellcs"])
+def test_spmm_equals_stacked_spmv(fmt, k):
+    for name, coo in _matrices().items():
+        mat = _make(fmt, coo)
+        n = coo.shape[1]
+        X = jnp.asarray(np.random.default_rng(k).standard_normal(
+            (n, k)).astype(np.float32))
+        Y = M.spmm(mat, X)
+        stacked = jnp.stack([spmv_coo(coo, X[:, j]) for j in range(k)],
+                            axis=1)
+        np.testing.assert_allclose(np.asarray(Y), np.asarray(stacked),
+                                   rtol=RTOL, atol=ATOL, err_msg=name)
+
+
+def test_spmm_1d_input_is_spmv():
+    coo = _matrices()["uniform"]
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        coo.shape[1]).astype(np.float32))
+    y = M.spmm(coo_to_csr(coo), x)
+    assert y.ndim == 1
+    np.testing.assert_allclose(np.asarray(y), np.asarray(spmv_coo(coo, x)),
+                               rtol=RTOL, atol=ATOL)
+
+
+# --------------------------------------------------------------------------
+# SELL-C-σ structure
+# --------------------------------------------------------------------------
+def test_sellcs_roundtrip_exact():
+    for name, coo in _matrices().items():
+        for c, sigma in ((8, 8), (64, 128), (128, 10 ** 6)):
+            sc = M.coo_to_sellcs(coo, c=c, sigma=sigma)
+            rt = sc.to_coo()
+            assert rt.nnz == coo.nnz, (name, c, sigma)
+            np.testing.assert_allclose(np.asarray(rt.todense()),
+                                       np.asarray(coo.todense()),
+                                       atol=1e-6, err_msg=name)
+
+
+def test_sellcs_sigma_sorting_reduces_padding():
+    """A global σ sort can only shrink (or keep) the padded footprint vs
+    no sorting (σ = C): rows of similar length share slices."""
+    coo = to_coo(*matrices.powerlaw(400, 300, 4000, 1.8, seed=2))
+    unsorted = M.coo_to_sellcs(coo, c=32, sigma=32)
+    glob = M.coo_to_sellcs(coo, c=32, sigma=10 ** 6)
+    assert glob.padded_nnz <= unsorted.padded_nnz
+    assert glob.fill_ratio >= unsorted.fill_ratio
+    # and within each σ-window, slice widths are non-increasing
+    widths = np.diff(np.asarray(glob.slice_ptr))
+    assert np.all(np.diff(widths) <= 0)
+
+
+def test_sellcs_convert_registration():
+    coo = _matrices()["uniform"]
+    sc = convert(coo, "sellcs", c=32, sigma=64)
+    assert isinstance(sc, M.SellCS) and sc.chunk == 32
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(
+        coo.shape[1]).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(spmv(sc, x)),
+                               np.asarray(spmv_coo(coo, x)),
+                               rtol=RTOL, atol=ATOL)
+
+
+# --------------------------------------------------------------------------
+# Pallas kernels (interpret mode), k-tiled grids
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("k,k_tile", [(8, 4), (5, 2), (8, 8)])
+def test_kernels_interpret_match_reference(k, k_tile):
+    coo = _matrices()["mawi_like"]
+    n = coo.shape[1]
+    X = jnp.asarray(np.random.default_rng(7).standard_normal(
+        (n, k)).astype(np.float32))
+    dense = np.asarray(coo.todense()) @ np.asarray(X)
+
+    ts = coo_to_tiled(coo, "csb", beta=128)
+    np.testing.assert_allclose(
+        np.asarray(M.tiled_spmm(ts, X, k_tile=k_tile, interpret=True)),
+        dense, rtol=RTOL, atol=ATOL)
+    csr = coo_to_csr(coo)
+    np.testing.assert_allclose(
+        np.asarray(M.csr_spmm(csr, X, k_tile=k_tile, interpret=True)),
+        dense, rtol=RTOL, atol=ATOL)
+    sc = M.coo_to_sellcs(coo, c=64, sigma=128)
+    np.testing.assert_allclose(
+        np.asarray(M.sellcs_spmm(sc, X, k_tile=k_tile, interpret=True)),
+        dense, rtol=RTOL, atol=ATOL)
+
+
+def test_choose_k_tile_roofline():
+    # never exceeds k, never below 1
+    assert M.choose_k_tile((100, 100), 1) == 1
+    assert 1 <= M.choose_k_tile((100, 100), 7) <= 7
+    # VMEM bound: bigger matrices force smaller k-tiles
+    small = M.choose_k_tile((1000, 1000), 256, nnz=10 ** 5)
+    big = M.choose_k_tile((10 ** 6, 10 ** 6), 256, nnz=10 ** 7)
+    assert big <= small
+    # lane alignment once above one lane
+    kt = M.choose_k_tile((1000, 1000), 256, nnz=10 ** 7)
+    assert kt == 256 or kt % 128 == 0 or kt < 128
+
+
+def test_arithmetic_intensity_monotone_in_k():
+    from repro.roofline import ridge_intensity, spmm_arithmetic_intensity
+    ais = [spmm_arithmetic_intensity(10 ** 6, 10 ** 5, 10 ** 5, k)
+           for k in (1, 2, 4, 8, 16, 32, 64, 128, 256)]
+    assert all(b > a for a, b in zip(ais, ais[1:]))
+    assert ridge_intensity() > 0
+
+
+# --------------------------------------------------------------------------
+# selector / autotune k-integration
+# --------------------------------------------------------------------------
+def test_select_k1_unchanged():
+    for name, coo in _matrices().items():
+        s = matrix_stats(coo)
+        for nd in (1, 256):
+            mach = MachineSpec(num_devices=nd)
+            for num in (1, 500, 50_000):
+                assert select(s, mach, num, k=1) == \
+                    select_algorithm(s, mach, num), (name, nd, num)
+
+
+def test_select_k_accepts_and_returns_candidate():
+    s = matrix_stats(_matrices()["mawi_like"])
+    assert s.has_dense_row
+    pick = select(s, MachineSpec(num_devices=1), 5000, k=64)
+    from repro.core.selector import ROW_SPLITTING
+    assert pick in ROW_SPLITTING + ("sellcs",)
+
+
+def test_spmm_cost_scale_sublinear():
+    from repro.core import spmm_cost_scale
+    s = matrix_stats(_matrices()["uniform"])
+    c1 = spmm_cost_scale("parcrs", s, 1)
+    c64 = spmm_cost_scale("parcrs", s, 64)
+    assert c1 == pytest.approx(1.0)
+    assert 1.0 < c64 < 64.0          # the whole point of batching
+
+
+def test_autotune_k_smoke():
+    from repro.core import autotune
+    coo = to_coo(*matrices.uniform(150, 150, 1500, seed=4))
+    best, results = autotune(coo, num_spmvs=3, reps=1, k=8,
+                             algorithms=("parcrs", "sellcs"))
+    assert best.k == 8 and best.k_tile is not None and best.k_tile >= 1
+    assert {r.algorithm for r in results} == {"parcrs", "sellcs"}
+
+
+# --------------------------------------------------------------------------
+# request batching (serve path)
+# --------------------------------------------------------------------------
+def test_batch_spmv_matches_individual():
+    coo = _matrices()["mawi_like"]
+    csr = coo_to_csr(coo)
+    rng = np.random.default_rng(9)
+    xs = [jnp.asarray(rng.standard_normal(coo.shape[1]).astype(np.float32))
+          for _ in range(6)]
+    ys = M.batch_spmv(csr, xs)
+    for x, y in zip(xs, ys):
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(spmv_coo(coo, x)),
+                                   rtol=RTOL, atol=ATOL)
+
+
+def test_request_batcher_flush_and_padding():
+    coo = _matrices()["uniform"]
+    sc = M.coo_to_sellcs(coo, c=32, sigma=64)
+    b = M.RequestBatcher(sc, max_batch=8)
+    rng = np.random.default_rng(11)
+    xs = [jnp.asarray(rng.standard_normal(coo.shape[1]).astype(np.float32))
+          for _ in range(11)]
+    rids = [b.submit(x) for x in xs]
+    assert b.pending == 11
+    out = b.drain()
+    assert b.pending == 0 and b.flushes == 2 and b.served == 11
+    assert sorted(out) == sorted(rids)
+    for rid, x in zip(rids, xs):
+        np.testing.assert_allclose(np.asarray(out[rid]),
+                                   np.asarray(spmv_coo(coo, x)),
+                                   rtol=RTOL, atol=ATOL)
+
+
+def test_batcher_rejects_bad_shape():
+    coo = _matrices()["uniform"]
+    with pytest.raises(ValueError):
+        M.batch_spmv(coo_to_csr(coo),
+                     [jnp.zeros((coo.shape[1] + 1,), jnp.float32)])
+    # submit() checks shape up front so a bad request can never corrupt a
+    # flush batch that was already popped from the queue
+    b = M.RequestBatcher(coo_to_csr(coo), max_batch=4)
+    with pytest.raises(ValueError):
+        b.submit(jnp.zeros((coo.shape[1] + 1,), jnp.float32))
+    assert b.pending == 0
