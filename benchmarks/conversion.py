@@ -1,8 +1,14 @@
 """Paper Tables 6.4 / 6.5 analogue: storage-format conversion cost,
 expressed as the number of ParCRS SpMV multiplications it equals (the
 paper's break-even currency), plus the TiledSparse (TPU compute format)
-conversion for the kernels path."""
+conversion for the kernels path.
+
+Standalone CLI (also driven by ``benchmarks.run``):
+  PYTHONPATH=src python -m benchmarks.conversion --scale 0.05 --json out.json
+"""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 import jax.numpy as jnp
@@ -52,3 +58,24 @@ def run_break_even(csv=None):
         n = break_even_spmvs(algo, numa_like=numa, low_density=low)
         csv.row(f"break_even.{algo}.{'numa' if numa else 'uma'}", 0.0,
                 f"spmvs_to_amortize={n:.0f}")
+
+
+def main(argv=None) -> None:
+    from .harness import dump_json, reset_records
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.12,
+                    help="matrix suite scale factor")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump all rows as JSON (harness schema)")
+    ap.add_argument("--skip-break-even", action="store_true")
+    args = ap.parse_args(argv)
+    reset_records()
+    run(suite_scale=args.scale)
+    if not args.skip_break_even:
+        run_break_even()
+    if args.json:
+        dump_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.core import coo_to_csr, spmv, to_coo
 from repro.data import matrices
-from repro.kernels import coo_to_tiled, merge_plan
+from repro.kernels import merge_plan
 from repro.kernels.ref import merge_spmv_xla
 
 from .harness import Csv, time_fn

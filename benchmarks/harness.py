@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import json
 import time
-from typing import Callable, Dict, Iterable, List
+from typing import Callable, Dict, List
 
 import jax
 

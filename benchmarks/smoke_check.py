@@ -1,0 +1,96 @@
+"""CI gate over benchmark JSON emissions (the ``BENCH_*.json`` trajectory).
+
+A benchmark that runs but emits NaN timings or zero GFLOP/s rows is worse
+than one that crashes — it seeds the perf history with garbage that later
+regression checks would diff against. This checker fails the job instead:
+
+  python -m benchmarks.smoke_check BENCH_*.json
+
+Rules, per record ({"section", "name", "us_per_call", "derived"}):
+  * ``us_per_call`` must be finite and >= 0 (exactly 0 is allowed only for
+    analytic rows such as the break-even table, which report no timing);
+  * every ``gflops=<v>`` field in ``derived`` must be finite and > 0;
+  * a file with zero records fails (an empty emission means the benchmark
+    silently did nothing).
+
+``spmvs_to_amortize=inf`` and friends are legitimate (a format that never
+breaks even), so only the keys named above are validated.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from typing import Iterator, List, Tuple
+
+# derived keys that must be finite and strictly positive
+_POSITIVE_KEYS = ("gflops",)
+# row-name prefixes whose us_per_call is analytic (no timing collected)
+_ANALYTIC_PREFIXES = ("break_even.",)
+
+
+def _derived_fields(derived: str) -> Iterator[Tuple[str, str]]:
+    for part in derived.split(";"):
+        if "=" in part:
+            key, val = part.split("=", 1)
+            yield key.strip(), val.strip()
+
+
+def check_records(records: List[dict], origin: str) -> List[str]:
+    """Return a list of human-readable violations (empty == clean)."""
+    problems = []
+    if not records:
+        problems.append(f"{origin}: no records — benchmark emitted nothing")
+    for rec in records:
+        name = f"{origin}:{rec.get('section', '?')}/{rec.get('name', '?')}"
+        us = rec.get("us_per_call")
+        if not isinstance(us, (int, float)) or not math.isfinite(us):
+            problems.append(f"{name}: us_per_call={us!r} is not finite")
+        elif us < 0:
+            problems.append(f"{name}: us_per_call={us} is negative")
+        elif us == 0 and not str(rec.get("name", "")).startswith(
+                _ANALYTIC_PREFIXES):
+            problems.append(f"{name}: us_per_call is 0 for a timed row")
+        for key, val in _derived_fields(str(rec.get("derived", ""))):
+            if key not in _POSITIVE_KEYS:
+                continue
+            try:
+                v = float(val)
+            except ValueError:
+                problems.append(f"{name}: {key}={val!r} is not a number")
+                continue
+            if not math.isfinite(v) or v <= 0:
+                problems.append(f"{name}: {key}={val} must be finite and "
+                                "> 0")
+    return problems
+
+
+def main(argv=None) -> int:
+    paths = list(argv if argv is not None else sys.argv[1:])
+    if not paths:
+        print("usage: python -m benchmarks.smoke_check BENCH_*.json",
+              file=sys.stderr)
+        return 2
+    problems: List[str] = []
+    total = 0
+    for path in paths:
+        try:
+            with open(path) as f:
+                records = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            problems.append(f"{path}: unreadable ({e})")
+            continue
+        total += len(records)
+        problems.extend(check_records(records, path))
+    if problems:
+        print(f"smoke_check: {len(problems)} problem(s) in {len(paths)} "
+              "file(s):", file=sys.stderr)
+        for p in problems:
+            print(f"  FAIL {p}", file=sys.stderr)
+        return 1
+    print(f"smoke_check: {total} records across {len(paths)} file(s) OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,11 +9,17 @@ roofline model's ideal-CSR prediction from ``repro.roofline``.
 
   PYTHONPATH=src python -m benchmarks.spmm_sweep --scale 0.02 --json out.json
 
+``--devices P`` additionally times the distributed SELL-C-σ schedules
+(``repro.spmm.distributed``) on a P-device mesh per k; when jax has not
+been imported yet the host-platform device count is forced automatically.
+
 Emits the same CSV columns and JSON schema as ``benchmarks.run``.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 
 import numpy as np
 
@@ -47,12 +53,51 @@ def sweep_matrix(name: str, coo, ks, impl: str, reps: int, csv) -> None:
             ai_ideal = spmm_arithmetic_intensity(nnz, m, n, k)
             roof = spmm_roofline_gflops(ai)
             csv.row(f"{name}/{fmt}/k={k}", sec,
-                    f"gflops={gflops:.3f};ai={ai:.4f};"
+                    f"gflops={gflops:.4g};ai={ai:.4f};"
                     f"ai_ideal={ai_ideal:.4f};roof_gflops={roof:.1f}")
 
 
+def sweep_distributed(name: str, coo, ks, devices: int, reps: int,
+                      csv) -> None:
+    """Distributed schedules on a `devices`-wide mesh (ref impl bodies —
+    the host-platform mesh has no TPU cores to feed the Pallas path)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_mesh
+    from repro.roofline import spmm_distributed_time, spmm_distributed_traffic
+    from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                            partition_sellcs_rows, spmm_merge_distributed,
+                            spmm_row_distributed)
+    from . import harness
+
+    m, n = coo.shape
+    nnz = coo.nnz
+    max_row = int(np.bincount(np.asarray(coo.rows), minlength=m).max()) \
+        if nnz else 0
+    mesh = make_mesh((devices,), ("data",))
+    sc = coo_to_sellcs(coo)
+    parts = {"row": (partition_sellcs_rows(sc, devices),
+                     spmm_row_distributed),
+             "merge": (partition_sellcs_nnz(sc, devices),
+                       spmm_merge_distributed)}
+    rng = np.random.default_rng(1)
+    for sched, (sharded, fn) in parts.items():
+        jitted = jax.jit(lambda X, f=fn, s=sharded: f(s, X, mesh))
+        for k in ks:
+            X = jnp.asarray(rng.standard_normal((n, k)).astype(np.float32))
+            sec = harness.time_fn(lambda: jitted(X), reps=reps, warmup=1)
+            gflops = 2.0 * nnz * k / sec / 1e9
+            hbm, coll = spmm_distributed_traffic(
+                m, n, k, devices, sched, nnz=nnz, max_row_nnz=max_row)
+            model_s = spmm_distributed_time(
+                m, n, k, devices, sched, nnz=nnz, max_row_nnz=max_row)
+            csv.row(f"{name}/sellcs+{sched}@{devices}dev/k={k}", sec,
+                    f"gflops={gflops:.4g};hbm_mb={hbm / 1e6:.4g};"
+                    f"coll_mb={coll / 1e6:.4g};model_us={model_s * 1e6:.4g}")
+
+
 def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
-        reps: int = 3, matrices_only=None) -> None:
+        reps: int = 3, matrices_only=None, devices: int = 1) -> None:
     from repro.data import matrices
     from . import harness
 
@@ -63,12 +108,16 @@ def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
         k *= 2
     suite = matrices.test_suite(scale=suite_scale)
     names = matrices_only or ["hhh_like", "livejournal_like", "mawi_like"]
-    csv = harness.Csv(f"SpMM k-sweep (impl={impl}, k in {ks})")
+    title = f"SpMM k-sweep (impl={impl}, k in {ks}" + \
+        (f", devices={devices})" if devices > 1 else ")")
+    csv = harness.Csv(title)
     for name in names:
         if name not in suite:
             raise SystemExit(f"unknown matrix {name}; one of {sorted(suite)}")
         coo = matrices.as_coo(suite[name].make())
         sweep_matrix(name, coo, ks, impl, reps, csv)
+        if devices > 1:
+            sweep_distributed(name, coo, ks, devices, reps, csv)
 
 
 def main(argv=None) -> None:
@@ -82,13 +131,31 @@ def main(argv=None) -> None:
                     help="comma-separated subset of the matrix suite")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump all rows as JSON (harness schema)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="also sweep the distributed schedules over a mesh "
+                         "of this many devices")
     args = ap.parse_args(argv)
+
+    if args.devices > 1 and "jax" not in sys.modules:
+        # must happen before the first jax import anywhere in the process
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+    if args.devices > 1:
+        import jax
+        if len(jax.devices()) < args.devices:
+            raise SystemExit(
+                f"--devices {args.devices} but jax sees "
+                f"{len(jax.devices())}; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.devices} "
+                "before any jax import")
 
     from . import harness
     harness.reset_records()
     run(suite_scale=args.scale, kmax=args.kmax, impl=args.impl,
         reps=args.reps,
-        matrices_only=args.matrices.split(",") if args.matrices else None)
+        matrices_only=args.matrices.split(",") if args.matrices else None,
+        devices=args.devices)
     if args.json:
         harness.dump_json(args.json)
 

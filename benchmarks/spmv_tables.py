@@ -14,7 +14,6 @@ Two levels per (algorithm x matrix):
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import (ALGORITHM_SPECS, convert, coo_to_csr, spmv, to_coo)

@@ -11,9 +11,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (ALGORITHM_SPECS, MachineSpec, convert, coo_to_csr,
-                        matrix_stats, select_algorithm, spmv,
-                        spmv_dense_oracle, to_coo)
+from repro.core import (ALGORITHM_SPECS, MachineSpec, convert, matrix_stats,
+                        select_algorithm, spmv, spmv_dense_oracle, to_coo)
 from repro.data import matrices
 from repro.kernels import coo_to_tiled, ops
 

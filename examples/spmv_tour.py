@@ -4,10 +4,9 @@ printed for inspection (the didactic companion to quickstart.py).
 Run:  PYTHONPATH=src python examples/spmv_tour.py
 """
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core import (convert, coo_to_bicrs, coo_to_csr, coo_to_icrs,
-                        curve_key, hilbert_decode, to_coo)
+                        curve_key, to_coo)
 
 # the 8x8 example matrix
 rows = [0, 0, 1, 2, 3, 3, 4, 5, 6, 7, 7]

@@ -6,7 +6,6 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
 (~100M params; on this 1-core CPU container use --small for a quick pass.)
 """
 import argparse
-import dataclasses
 
 import jax.numpy as jnp
 

@@ -11,8 +11,10 @@ Module map
 ``repro.spmm``       the multi-RHS SpMM engine: SELL-C-σ storage
                      (``sellcs``), pure-jnp oracles (``reference``), tiled
                      Pallas kernels with a k-tile grid dimension
-                     (``kernels``), and request batching for the serve
-                     path (``batching``). SpMV is the k = 1 special case.
+                     (``kernels``), request batching for the serve path
+                     (``batching``), and the shard_map mesh schedules —
+                     row bands / merge spans over the slice stream
+                     (``distributed``). SpMV is the k = 1 special case.
 ``repro.kernels``    Pallas TPU kernels for the single-vector compute
                      paths: blocked SpMV (``bsr_spmv``), merge-path SpMV
                      (``merge_spmv``), MoE grouped GEMM, plus the

@@ -13,23 +13,26 @@ from .curves import (curve_key, hilbert_decode, hilbert_key, hilbert_key_np,
 from .mergepath import (MergePartition, balanced_row_bands,
                         merge_path_partition, merge_path_partition_np,
                         span_block_aligned)
-from .selector import (MachineSpec, MatrixStats, amortized_cost,
+from .selector import (SCHEDULES, MachineSpec, MatrixStats, amortized_cost,
                        break_even_spmvs, matrix_stats, select,
-                       select_algorithm, spmm_cost_scale)
+                       select_algorithm, select_distributed,
+                       spmm_cost_scale)
 from .autotune import TuneResult, autotune
 from .spmv import (spmv, spmv_blocked, spmv_coo, spmv_csr, spmv_dense_oracle,
                    spmv_incremental)
 
 __all__ = [
     "BICRS", "COO", "CSR", "ICRS", "BlockedSparse", "ALGORITHM_SPECS",
+    "BLOCK_STORAGE_BICRS", "BLOCK_STORAGE_CSR", "BLOCK_STORAGE_DENSE_PTR",
+    "IN_BLOCK_ICRS", "IN_BLOCK_PACKED_COO",
     "AlgorithmSpec", "block_size_for", "convert", "coo_to_bicrs",
     "coo_to_blocked", "coo_to_csr", "coo_to_icrs", "to_coo", "curve_key",
     "hilbert_decode", "hilbert_key", "hilbert_key_np", "morton_decode",
     "morton_key", "MergePartition", "balanced_row_bands",
     "merge_path_partition", "merge_path_partition_np", "span_block_aligned",
-    "MachineSpec", "MatrixStats", "amortized_cost", "break_even_spmvs",
-    "matrix_stats", "select", "select_algorithm", "spmm_cost_scale",
-    "autotune",
+    "MachineSpec", "MatrixStats", "SCHEDULES", "amortized_cost",
+    "break_even_spmvs", "matrix_stats", "select", "select_algorithm",
+    "select_distributed", "spmm_cost_scale", "autotune",
     "TuneResult", "spmv", "spmv_blocked", "spmv_coo",
     "spmv_csr", "spmv_dense_oracle", "spmv_incremental",
 ]

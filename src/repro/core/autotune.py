@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,11 +34,17 @@ class TuneResult:
     algorithm: str
     beta: Optional[int]
     convert_s: float
-    spmv_s: float                # per-multiply (one SpMM when k > 1)
-    total_s: float               # convert + num_spmvs * spmv
+    spmv_s: float                # per-multiply (one SpMM when k > 1),
+                                 #   measured on ONE device
+    total_s: float               # convert + num_spmvs * spmv (modelled
+                                 #   distributed per-multiply when
+                                 #   num_devices > 1)
     tpu_model_s: Optional[float] = None
     k: int = 1                   # right-hand sides per multiply
     k_tile: Optional[int] = None  # roofline-chosen column block (k > 1)
+    num_devices: int = 1          # mesh size the score targets
+    schedule: Optional[str] = None  # "row" | "merge" (num_devices > 1)
+    dist_model_s: Optional[float] = None  # modelled distributed multiply
 
 
 def _measure(fn: Callable, reps: int = 5, warmup: int = 2) -> float:
@@ -55,14 +61,24 @@ def _measure(fn: Callable, reps: int = 5, warmup: int = 2) -> float:
 def autotune(coo: COO, *, num_spmvs: int = 100,
              algorithms: Tuple[str, ...] = DEFAULT_ALGOS,
              betas: Optional[List[int]] = None,
-             reps: int = 5, tpu_model: bool = False, k: int = 1
+             reps: int = 5, tpu_model: bool = False, k: int = 1,
+             num_devices: int = 1
              ) -> Tuple[TuneResult, List[TuneResult]]:
     """Return (best, all_results) over the candidate grid.
 
     ``k > 1`` tunes the SpMM engine instead: each measured multiply is one
     ``A @ X`` with ``X: [n, k]`` (via ``repro.spmm``), ``algorithms`` may
     include ``"sellcs"``, and every result records the roofline-chosen
-    ``k_tile``. ``k = 1`` is byte-for-byte the original SpMV tuner."""
+    ``k_tile``. ``k = 1`` is byte-for-byte the original SpMV tuner.
+
+    ``num_devices > 1`` scores the (format × schedule × k) grid jointly,
+    pOSKI-style hybrid: the per-multiply time is still *measured* on this
+    one device, then scaled by the ``repro.roofline`` distributed traffic
+    model (replicated-X bytes, dense-row imbalance for "row", psum bytes
+    for "merge") — the tuner cannot run the mesh it is tuning for, but the
+    model ratio carries the measured stream rate across. Each result then
+    records the winning cross-device ``schedule`` and the modelled
+    distributed per-multiply seconds in ``dist_model_s``."""
     rng = np.random.default_rng(0)
     if k > 1:
         from repro.spmm import choose_k_tile, spmm
@@ -119,5 +135,30 @@ def autotune(coo: COO, *, num_spmvs: int = 100,
             results.append(TuneResult(algo, beta, conv_s, spmv_s,
                                       conv_s + num_spmvs * spmv_s,
                                       model_s, k=k, k_tile=k_tile))
+    if num_devices > 1:
+        from .selector import matrix_stats
+        stats = matrix_stats(coo)       # one O(nnz) pass for all results
+        results = [_rescore_distributed(r, stats, k, num_devices, num_spmvs)
+                   for r in results]
     best = min(results, key=lambda r: r.total_s)
     return best, results
+
+
+def _rescore_distributed(r: TuneResult, stats, k: int, num_devices: int,
+                         num_spmvs: int) -> TuneResult:
+    """Scale a measured single-device result across the mesh with the
+    roofline traffic model and pick the better schedule for it."""
+    from repro.roofline.analysis import spmm_distributed_time
+    from .selector import SCHEDULES, _matrix_bytes_est
+    mat_bytes = _matrix_bytes_est(r.algorithm, stats)
+    base_s = spmm_distributed_time(stats.m, stats.n, k, 1, "row",
+                                   matrix_bytes=mat_bytes)
+    schedule, model_s = min(
+        ((s, spmm_distributed_time(stats.m, stats.n, k, num_devices, s,
+                                   matrix_bytes=mat_bytes,
+                                   max_row_nnz=stats.max_row_nnz))
+         for s in SCHEDULES), key=lambda t: t[1])
+    per_multiply = r.spmv_s * (model_s / max(base_s, 1e-30))
+    return dataclasses.replace(
+        r, total_s=r.convert_s + num_spmvs * per_multiply,
+        num_devices=num_devices, schedule=schedule, dist_model_s=model_s)

@@ -23,12 +23,10 @@ increment decoding is serial and cannot feed the VPU/MXU.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Array = jax.Array
 

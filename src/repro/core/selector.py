@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -184,10 +184,11 @@ def spmm_cost_scale(algo: str, stats: MatrixStats, k: int,
     return (mat + k * vec) / (mat + vec)
 
 
-def select(stats: MatrixStats, machine: MachineSpec,
+def select(stats: MatrixStats, machine: Optional[MachineSpec] = None,
            num_spmvs: int = 1000, k: int = 1,
            conversion_cost: Optional[Dict[str, float]] = None,
-           throughput: Optional[Dict[str, float]] = None) -> str:
+           throughput: Optional[Dict[str, float]] = None, *,
+           num_devices: Optional[int] = None) -> str:
     """k-aware decision procedure: which format should multiply ``A`` by a
     ``[n, k]`` block ``num_spmvs`` times?
 
@@ -197,7 +198,21 @@ def select(stats: MatrixStats, machine: MachineSpec,
     and SELL-C-σ joins the candidate set; on dense-row pathologies it
     survives alongside the row-splitting algorithms because the σ-sort plus
     slice padding turns the dense row into uniform work quanta.
+
+    Passing ``num_devices`` switches to the *joint* (format × schedule × k)
+    scoring of :func:`select_distributed` — format and cross-device
+    schedule must be chosen together (replicated-X bytes and the merge
+    psum both enter the modelled intensity), and the paper's NUMA prior
+    alone cannot see either. The return value stays a format name; call
+    ``select_distributed`` directly when the schedule is needed too.
     """
+    if num_devices is not None and num_devices > 1:
+        algo, _ = select_distributed(
+            stats, k=k, num_devices=num_devices, num_spmvs=num_spmvs,
+            conversion_cost=conversion_cost)
+        return algo
+    if machine is None:
+        machine = MachineSpec(num_devices or 1)
     if k <= 1:
         return select_algorithm(stats, machine, num_spmvs,
                                 conversion_cost=conversion_cost,
@@ -221,4 +236,65 @@ def select(stats: MatrixStats, machine: MachineSpec,
             algo, stats, k)
         if cost < best_cost:
             best, best_cost = algo, cost
+    return best
+
+
+# --------------------------------------------------------------------------
+# Distributed extension: the (format × schedule × k × devices) grid
+# --------------------------------------------------------------------------
+SCHEDULES = ("row", "merge")
+
+# Formats with an executable mesh multiply: "parcrs" drives the ShardedCOO
+# path in core.distributed (its nonzero stream is the row-sorted COO both
+# partitioners consume), "sellcs" the slice-stream path in
+# repro.spmm.distributed. Other paper families are deliberately absent —
+# recommending a format the mesh cannot run is worse than a slightly
+# coarser prior.
+DISTRIBUTED_ALGOS = ("parcrs", "sellcs")
+
+
+def select_distributed(stats: MatrixStats, *, k: int = 1,
+                       num_devices: int = 1, num_spmvs: int = 1000,
+                       conversion_cost: Optional[Dict[str, float]] = None,
+                       dtype_bytes: int = 4) -> Tuple[str, str]:
+    """Joint (format, cross-device schedule) choice for a mesh of
+    ``num_devices`` devices multiplying a ``[n, k]`` block ``num_spmvs``
+    times.
+
+    Scored entirely with the ``repro.roofline`` traffic model
+    (:func:`repro.roofline.analysis.spmm_distributed_time`): each
+    candidate's per-multiply time counts its streamed matrix bytes
+    (per-format footprint, dense-row imbalance for the "row" schedule),
+    the replicated-X read, the shard-local vs full-partial Y write, and —
+    for "merge" — the psum carry-out all-reduce over the ICI link. Times
+    are normalized to the single-device ParCRS stream so the paper's
+    conversion-cost priors keep their units, then amortized exactly like
+    :func:`amortized_cost`.
+
+    Returns ``(format, schedule)``; ``num_devices = 1`` degrades to the
+    single-device model where both schedules tie and "row" wins by order.
+    """
+    from repro.roofline.analysis import spmm_distributed_time
+    if num_devices < 1:
+        raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    conv = dict(conversion_cost or DEFAULT_CONVERSION_COST)
+    conv.setdefault("sellcs", SELLCS_CONVERSION_COST)
+    base_s = spmm_distributed_time(
+        stats.m, stats.n, 1, 1, "row",
+        matrix_bytes=_matrix_bytes_est("parcrs", stats, dtype_bytes),
+        dtype_bytes=dtype_bytes)
+    best, best_cost = (None, None), math.inf
+    for algo in DISTRIBUTED_ALGOS:
+        mat_bytes = _matrix_bytes_est(algo, stats, dtype_bytes)
+        for schedule in SCHEDULES:
+            sec = spmm_distributed_time(
+                stats.m, stats.n, k, num_devices, schedule,
+                matrix_bytes=mat_bytes, dtype_bytes=dtype_bytes,
+                max_row_nnz=stats.max_row_nnz)
+            per_spmv = sec / max(base_s, 1e-30)
+            cost = conv[algo] + num_spmvs * per_spmv
+            if cost < best_cost:
+                best, best_cost = (algo, schedule), cost
     return best

@@ -8,7 +8,6 @@ distributed path is `core.distributed` (shard_map).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Union
 
 import jax

@@ -18,7 +18,7 @@ Generators are deterministic in ``seed`` and return host numpy triplets;
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import numpy as np
 

@@ -20,13 +20,12 @@ this (and trivially correct in interpret mode).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import CSR
 from repro.core.mergepath import merge_path_partition_np

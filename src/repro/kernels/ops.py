@@ -5,12 +5,10 @@ validates them); on a TPU backend pass interpret=False for Mosaic lowering.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.formats import CSR
 from . import merge_spmv as _merge

@@ -30,7 +30,6 @@ EXPERIMENTS).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax

@@ -19,7 +19,6 @@ import sys
 import time
 import traceback
 
-import jax
 
 from repro.configs.base import SHAPES, cells, get_config
 from repro.launch.mesh import make_production_mesh

@@ -10,6 +10,14 @@ queued ``A @ x`` requests aggregate into one SpMM per flush (matrix stream
 amortized over the batch), measured against serving them one by one:
   PYTHONPATH=src python -m repro.launch.serve --mode spmv \
       --matrix mawi_like --requests 64 --max-batch 32
+
+Mesh serving — ``--devices P`` answers each flush with a *distributed*
+SpMM over a P-device mesh (``repro.spmm.distributed``); format and
+cross-device schedule come from ``core.select_distributed``. On CPU, force
+host-platform devices first:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --mode spmv --matrix mawi_like \
+      --requests 64 --max-batch 32 --devices 8 --impl ref
 """
 from __future__ import annotations
 
@@ -24,10 +32,67 @@ from repro.configs.base import get_config
 from repro.models.model import decode_step, init_params, prefill
 
 
+def _pick_chunk(m: int, num_devices: int, default: int = 128) -> int:
+    """Largest power-of-two slice height <= default that still gives every
+    device at least one slice to own (small demo matrices on big meshes)."""
+    c = default
+    while c > 8 and -(-m // c) < num_devices:
+        c //= 2
+    return c
+
+
+def _make_distributed_spmm(coo, stats, args):
+    """Build (matrix, spmm_fn, label, schedule) for the --devices path."""
+    from repro.core.selector import SCHEDULES, _matrix_bytes_est
+    from repro.launch.mesh import make_mesh
+    from repro.roofline import spmm_distributed_time
+    from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                            partition_sellcs_rows, spmm_merge_distributed,
+                            spmm_row_distributed)
+
+    ndev = len(jax.devices())
+    if ndev < args.devices:
+        raise SystemExit(
+            f"--devices {args.devices} but jax sees only {ndev}; on CPU "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{args.devices} before launching")
+    if args.algorithm and args.algorithm != "sellcs":
+        raise SystemExit(
+            f"--algorithm {args.algorithm} cannot be served on a mesh: the "
+            "--devices path multiplies the SELL-C-σ slice stream "
+            "(repro.spmm.distributed); drop --algorithm or pass sellcs")
+    mesh = make_mesh((args.devices,), ("data",))
+    # the executable mesh format is the SELL-C-σ slice stream, so score the
+    # cross-device schedule with sellcs's own byte footprint (conversion
+    # cost is shared by both schedules, so it drops out)
+    sellcs_bytes = _matrix_bytes_est("sellcs", stats)
+    schedule = min(SCHEDULES, key=lambda s: spmm_distributed_time(
+        stats.m, stats.n, args.max_batch, args.devices, s,
+        matrix_bytes=sellcs_bytes, max_row_nnz=stats.max_row_nnz))
+    sc = coo_to_sellcs(coo, c=_pick_chunk(stats.m, args.devices))
+    impl = "ref" if args.impl == "auto" and \
+        jax.default_backend() != "tpu" else args.impl
+    if impl == "auto":
+        impl = "pallas"
+    if schedule == "row":
+        sharded = partition_sellcs_rows(sc, args.devices)
+        dist = spmm_row_distributed
+    else:
+        sharded = partition_sellcs_nnz(sc, args.devices)
+        dist = spmm_merge_distributed
+    # jit the closure so repeated flushes of one batch shape don't retrace
+    # the shard_map body
+    jitted = jax.jit(lambda X: dist(sharded, X, mesh, impl=impl))
+
+    def spmm_fn(_mat, X):
+        return jitted(X)
+    return sc, spmm_fn, f"sellcs+{schedule}@{args.devices}dev", schedule
+
+
 def serve_spmv(args):
-    """Sparse serving demo: batched (one SpMM per flush) vs sequential."""
-    from repro.core import (MachineSpec, convert, matrix_stats, select,
-                            spmv, to_coo)
+    """Sparse serving demo: batched (one SpMM per flush) vs sequential,
+    optionally over a --devices mesh."""
+    from repro.core import MachineSpec, convert, matrix_stats, select, spmv
     from repro.data import matrices
     from repro.roofline import spmm_arithmetic_intensity
     from repro.spmm import RequestBatcher
@@ -40,10 +105,14 @@ def serve_spmv(args):
     # num_spmvs counts k-RHS multiplies: batching turns `requests` SpMVs
     # into ceil(requests / max_batch) SpMM calls
     num_spmms = -(-args.requests // args.max_batch)
-    algo = args.algorithm or select(stats, MachineSpec(1),
-                                    num_spmvs=num_spmms,
-                                    k=args.max_batch)
-    mat = convert(coo, algo)
+    spmm_fn = sched = None
+    if args.devices > 1:
+        mat, spmm_fn, algo, sched = _make_distributed_spmm(coo, stats, args)
+    else:
+        algo = args.algorithm or select(stats, MachineSpec(1),
+                                        num_spmvs=num_spmms,
+                                        k=args.max_batch)
+        mat = convert(coo, algo)
     print(f"[serve-spmv] matrix={args.matrix} m={stats.m} n={stats.n} "
           f"nnz={stats.nnz} algo={algo} max_batch={args.max_batch}")
 
@@ -51,11 +120,13 @@ def serve_spmv(args):
     xs = [jnp.asarray(rng.standard_normal(stats.n).astype(np.float32))
           for _ in range(args.requests)]
 
-    batcher = RequestBatcher(mat, max_batch=args.max_batch, impl=args.impl)
+    batcher = RequestBatcher(mat, max_batch=args.max_batch, impl=args.impl,
+                             spmm_fn=spmm_fn)
     for x in xs:
         batcher.submit(x)
     jax.block_until_ready(list(batcher.drain().values()))  # warmup/compile
-    batcher2 = RequestBatcher(mat, max_batch=args.max_batch, impl=args.impl)
+    batcher2 = RequestBatcher(mat, max_batch=args.max_batch, impl=args.impl,
+                              spmm_fn=spmm_fn)
     rids = [batcher2.submit(x) for x in xs]
     t0 = time.perf_counter()
     out = batcher2.drain()
@@ -80,6 +151,14 @@ def serve_spmv(args):
           f"speedup {t_seq/max(t_batched, 1e-9):.2f}x")
     print(f"[serve-spmv] modelled intensity {ai1:.3f} -> {aik:.3f} "
           f"flop/byte at k={args.max_batch}")
+    if args.devices > 1:
+        from repro.roofline import spmm_distributed_traffic
+        hbm, coll = spmm_distributed_traffic(
+            stats.m, stats.n, args.max_batch, args.devices, sched,
+            nnz=stats.nnz, max_row_nnz=stats.max_row_nnz)
+        print(f"[serve-spmv] modelled per-device traffic: {hbm / 1e6:.2f} MB "
+              f"HBM + {coll / 1e6:.2f} MB collective per flush "
+              f"({args.devices} devices, schedule={sched})")
     return t_batched, t_seq
 
 
@@ -94,6 +173,10 @@ def main(argv=None):
     ap.add_argument("--scale", type=float, default=0.02)
     ap.add_argument("--algorithm", default=None,
                     help="force a format (default: core.select with k)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="serve each flush with a distributed SpMM over a "
+                         "mesh of this many devices (schedule chosen by "
+                         "core.select_distributed)")
     ap.add_argument("--impl", default="auto",
                     choices=("auto", "ref", "pallas", "pallas_interpret"))
     ap.add_argument("--reduced", action="store_true")

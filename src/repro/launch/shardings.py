@@ -16,13 +16,11 @@ carries the batch):
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.model import ModelConfig
 from .mesh import dp_axes
 
 

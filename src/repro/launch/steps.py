@@ -2,7 +2,7 @@
 (architecture x shape) cell — ShapeDtypeStruct stand-ins, no allocation."""
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import dataclasses
 
@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import SHAPES, ShapeSpec, get_config
+from repro.configs.base import SHAPES, get_config
 from repro.models.model import (ModelConfig, decode_step, init_cache,
                                 init_params, loss_fn, prefill)
 from repro.optim import Optimizer, make_optimizer, warmup_cosine

@@ -5,7 +5,7 @@ with the same PartitionSpecs as params + ZeRO extension over the data axis),
 so m/v are automatically ZeRO-sharded on the production mesh."""
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

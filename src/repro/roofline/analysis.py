@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 # TPU v5e hardware constants (per chip / per link)
 PEAK_FLOPS_BF16 = 197e12
@@ -171,6 +171,69 @@ def spmm_roofline_gflops(ai: float, peak_flops: float = PEAK_FLOPS_BF16,
                          hbm_bw: float = HBM_BW) -> float:
     """Attainable GFLOP/s at arithmetic intensity ``ai``."""
     return min(peak_flops, ai * hbm_bw) / 1e9
+
+
+# --------------------------------------------------------------------------
+# Distributed SpMM traffic model — used by core.selector.select_distributed
+# and core.autotune(num_devices=) to score (format x schedule x k) jointly.
+# --------------------------------------------------------------------------
+def spmm_distributed_traffic(m: int, n: int, k: int, num_devices: int,
+                             schedule: str,
+                             matrix_bytes: Optional[float] = None,
+                             nnz: int = 0, dtype_bytes: int = 4,
+                             max_row_nnz: int = 0
+                             ) -> Tuple[float, float]:
+    """(per-device HBM bytes, per-device collective bytes) of one k-RHS
+    distributed SpMM under the two paper schedules.
+
+    * ``"row"`` (BCOH banding): the slowest shard streams
+      max(matrix_bytes/P, the dense-row footprint) — static banding never
+      splits a row, so one mawi-style row lower-bounds the critical shard.
+      X is fully replicated (every device reads all n*k X bytes per
+      multiply — the paper's interleaved allocation priced honestly), Y is
+      written shard-locally (~m/P rows). Zero collective bytes.
+
+    * ``"merge"`` (equal-nnz spans): perfect nnz balance (matrix_bytes/P
+      even with a dense row), but every device writes a full [m, k] partial
+      and the carry-out fixup is one all-reduce on Y — 2*(P-1)/P*m*k bytes
+      on the ring, ≈ 2*m*k (the same approximation ``collective_bytes_total``
+      applies to compiled HLO).
+
+    ``num_devices == 1`` degrades to the single-device stream for both.
+    """
+    if schedule not in ("row", "merge"):
+        raise ValueError(f"schedule must be 'row' or 'merge', got "
+                         f"{schedule!r}")
+    if matrix_bytes is None:
+        matrix_bytes = float(csr_stream_bytes(nnz, m, dtype_bytes))
+    P = max(int(num_devices), 1)
+    x_bytes = float(n) * k * dtype_bytes          # replicated X, read fully
+    if P == 1:
+        return matrix_bytes + x_bytes + float(m) * k * dtype_bytes, 0.0
+    if schedule == "row":
+        stream = max(matrix_bytes / P,
+                     float(max_row_nnz) * (4 + dtype_bytes))
+        y_bytes = (float(m) / P) * k * dtype_bytes
+        return stream + x_bytes + y_bytes, 0.0
+    stream = matrix_bytes / P
+    y_bytes = float(m) * k * dtype_bytes          # full partial per device
+    psum_bytes = 2.0 * float(m) * k * dtype_bytes
+    return stream + x_bytes + y_bytes, psum_bytes
+
+
+def spmm_distributed_time(m: int, n: int, k: int, num_devices: int,
+                          schedule: str,
+                          matrix_bytes: Optional[float] = None,
+                          nnz: int = 0, dtype_bytes: int = 4,
+                          max_row_nnz: int = 0,
+                          hbm_bw: float = HBM_BW,
+                          link_bw: float = ICI_LINK_BW) -> float:
+    """Modelled seconds per distributed multiply: HBM term + collective
+    term (no overlap assumed — both are on the Y critical path)."""
+    hbm, coll = spmm_distributed_traffic(
+        m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
+        dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz)
+    return hbm / hbm_bw + coll / link_bw
 
 
 def from_compiled(compiled, chips: int, model_flops: float = 0.0,

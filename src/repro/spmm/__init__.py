@@ -6,6 +6,7 @@ Layers (one module each):
   ``reference``  pure-jnp oracles per format (the XLA fallback path)
   ``kernels``    tiled Pallas kernels with a k-tile grid dimension
   ``batching``   request batching for the serve path (k SpMVs -> 1 SpMM)
+  ``distributed``  shard_map schedules over a mesh (row bands / merge spans)
 
 SpMV is the k = 1 special case throughout; ``repro.core.spmv`` remains the
 single-vector entry point and routes SELL-C-σ matrices here.
@@ -19,6 +20,9 @@ import jax
 from repro.core.formats import COO, CSR, BlockedSparse
 from . import reference
 from .batching import RequestBatcher, SpmvRequest, batch_spmv
+from .distributed import (ShardedSellCS, partition_sellcs_nnz,
+                          partition_sellcs_rows, spmm_merge_distributed,
+                          spmm_row_distributed)
 from .kernels import choose_k_tile, csr_spmm, sellcs_spmm, tiled_spmm
 from .reference import (spmm_blocked, spmm_coo, spmm_csr, spmm_ref,
                         spmm_sellcs)
@@ -60,5 +64,7 @@ __all__ = [
     "tiled_spmm", "csr_spmm", "sellcs_spmm",
     "spmm_ref", "spmm_coo", "spmm_csr", "spmm_blocked", "spmm_sellcs",
     "RequestBatcher", "SpmvRequest", "batch_spmv", "reference",
+    "ShardedSellCS", "partition_sellcs_rows", "partition_sellcs_nnz",
+    "spmm_row_distributed", "spmm_merge_distributed",
     "COO", "CSR", "BlockedSparse",
 ]

@@ -14,12 +14,17 @@ O(log max_batch) distinct compiled shapes instead of one per queue depth.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
+
+# Pluggable SpMM: (matrix, X[n, k]) -> Y[m, k]. The distributed serve path
+# passes a closure over (sharded matrix, mesh) here so the batcher drives a
+# whole mesh exactly the way it drives one device.
+SpmmFn = Callable[[object, Array], Array]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,11 +42,13 @@ def _next_pow2(k: int) -> int:
 
 
 def batch_spmv(matrix, requests: Sequence, *, impl: str = "auto",
-               k_tile: Optional[int] = None) -> List[Array]:
+               k_tile: Optional[int] = None,
+               spmm_fn: Optional[SpmmFn] = None) -> List[Array]:
     """Answer a batch of single-vector requests with ONE SpMM.
 
     ``requests`` holds ``SpmvRequest``s or bare ``[n]`` vectors. Returns
-    the per-request results in input order.
+    the per-request results in input order. ``spmm_fn`` overrides the
+    multiply (e.g. a ``spmm_row_distributed`` closure over a mesh).
     """
     from . import spmm
     if not requests:
@@ -53,7 +60,10 @@ def batch_spmv(matrix, requests: Sequence, *, impl: str = "auto",
             raise ValueError(
                 f"request vector shape {x.shape} != matrix n ({n},)")
     X = jnp.stack(xs, axis=1)                       # [n, k]
-    Y = spmm(matrix, X, impl=impl, k_tile=k_tile)   # [m, k]
+    if spmm_fn is not None:
+        Y = spmm_fn(matrix, X)                      # [m, k]
+    else:
+        Y = spmm(matrix, X, impl=impl, k_tile=k_tile)
     return [Y[:, j] for j in range(len(xs))]
 
 
@@ -66,13 +76,14 @@ class RequestBatcher:
     """
 
     def __init__(self, matrix, *, max_batch: int = 128, impl: str = "auto",
-                 pad_pow2: bool = True):
+                 pad_pow2: bool = True, spmm_fn: Optional[SpmmFn] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.matrix = matrix
         self.max_batch = max_batch
         self.impl = impl
         self.pad_pow2 = pad_pow2
+        self.spmm_fn = spmm_fn
         self._queue: List[SpmvRequest] = []
         self._next_rid = 0
         # serving telemetry
@@ -111,8 +122,11 @@ class RequestBatcher:
         kp = min(_next_pow2(k), self.max_batch) if self.pad_pow2 else k
         X = jnp.zeros((n, kp), batch[0].x.dtype)
         X = X.at[:, :k].set(jnp.stack([r.x for r in batch], axis=1))
-        from . import spmm
-        Y = spmm(self.matrix, X, impl=self.impl)
+        if self.spmm_fn is not None:
+            Y = self.spmm_fn(self.matrix, X)
+        else:
+            from . import spmm
+            Y = spmm(self.matrix, X, impl=self.impl)
         self.flushes += 1
         self.served += k
         return {r.rid: Y[:, j] for j, r in enumerate(batch)}

@@ -1,0 +1,259 @@
+"""Distributed multi-RHS SpMM over shard_map — the product of the paper's
+two winning parallel schedules (BCOH row banding §3.2, merge-path equal-nnz
+spans §3.3) and the SpMM engine's SELL-C-σ slice stream.
+
+The σ-sorted slice stream is already a sequence of uniform work quanta
+(one width-row = C padded nonzeros), which makes both cross-device
+schedules one-liners over it:
+
+* ``partition_sellcs_rows`` + ``spmm_row_distributed`` — BCOH across the
+  mesh: contiguous *slice* bands balanced by width-row count, the k-block X
+  replicated per shard (the paper's interleaved x allocation), Y written
+  shard-local in slot space — **zero collectives**. Loses only when one
+  slice dominates (a mawi-style dense row never splits).
+
+* ``partition_sellcs_nnz`` + ``spmm_merge_distributed`` — merge-path
+  across the mesh: equal spans of *width-rows* regardless of slice
+  boundaries (a dense row's slice is split mid-stream), partial slot
+  contributions combined with one ``psum`` — the cross-device carry-out
+  fixup, at the cost of an all-reduce on Y.
+
+Both shard_map bodies reuse the PR-1 compute verbatim: the k-tiled Pallas
+kernel (``kernels.sellcs_slots``) on TPU, its jnp twin
+(``reference.sellcs_slots_ref``) off-TPU — a shard's slice stream is just a
+shorter stream with its own ``slice_of`` relabeling. The σ-sort row
+permutation is global, so it is undone once, *after* the mesh region, by
+the same single scatter the single-device path uses.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.distributed import _check_devices
+from repro.core.mergepath import balanced_row_bands
+from .kernels import LANE, choose_k_tile, sellcs_slots
+from .reference import _as_2d, sellcs_slots_ref
+from .sellcs import SellCS
+
+
+class ShardedSellCS(NamedTuple):
+    """Per-device SELL-C-σ width-row shards, stacked on a leading device
+    axis. ``schedule`` records which partitioner built it (the two
+    schedules index slices differently)."""
+    data: jax.Array          # f32[Pdev, Wp, C] — zero-padded width-rows
+    cols: jax.Array          # int32[Pdev, Wp, C] — global column indices
+    slice_of: jax.Array      # int32[Pdev, Wp] — LOCAL slice ids ("row")
+                             #   or GLOBAL slice ids ("merge")
+    slice_offset: jax.Array  # int32[Pdev] — first global slice per shard
+                             #   ("row"; zeros for "merge")
+    row_perm: jax.Array      # int32[S*C] — global σ-sort permutation
+    shape: Tuple[int, int]
+    chunk: int               # C — slice height
+    num_slices: int          # S — GLOBAL slice count
+    slices_per_shard: int    # local slot space height ("row"; S for "merge")
+    nnz: int
+    schedule: str            # "row" | "merge"
+
+
+def partition_sellcs_rows(sc: SellCS, num_devices: int) -> ShardedSellCS:
+    """BCOH banding over the slice stream: contiguous slice ranges balanced
+    by width-row count (each width-row is C padded nonzeros, so equal width
+    is equal work). Host-side, convert time.
+
+    Slices own disjoint row slots, so slice bands shard the (σ-permuted)
+    rows — Y needs no collective.
+    """
+    _check_devices(num_devices)
+    C = sc.chunk
+    S = sc.num_slices
+    slice_ptr = np.asarray(sc.slice_ptr, np.int64)
+    data = np.asarray(sc.data)
+    cols = np.asarray(sc.cols)
+    slice_of = np.asarray(sc.slice_of, np.int64)
+    # slice_ptr IS the cumulative width — reuse the paper's band splitter
+    # with "rows" = slices and "nnz" = width-rows.
+    bounds = balanced_row_bands(slice_ptr, num_devices).astype(np.int64)
+    w_start = slice_ptr[bounds]
+    Wp = max(int(np.diff(w_start).max()) if num_devices else 1, 1)
+    Sp = max(int(np.diff(bounds).max()), 1)
+
+    D = np.zeros((num_devices, Wp, C), data.dtype if data.size else
+                 np.float32)
+    Cc = np.zeros((num_devices, Wp, C), np.int32)
+    So = np.zeros((num_devices, Wp), np.int32)
+    for p in range(num_devices):
+        a, b = int(w_start[p]), int(w_start[p + 1])
+        ln = b - a
+        if ln:
+            D[p, :ln] = data[a:b]
+            Cc[p, :ln] = cols[a:b]
+            So[p, :ln] = (slice_of[a:b] - bounds[p]).astype(np.int32)
+    return ShardedSellCS(
+        jnp.asarray(D), jnp.asarray(Cc), jnp.asarray(So),
+        jnp.asarray(bounds[:-1].astype(np.int32)), sc.row_perm,
+        sc.shape, C, S, Sp, sc.nnz, "row")
+
+
+def partition_sellcs_nnz(sc: SellCS, num_devices: int) -> ShardedSellCS:
+    """Merge-style equal spans over the width-row stream (slices — and with
+    them dense rows — may straddle devices). ``slice_of`` stays global:
+    every device scatters into the full slot space and the carry-out is
+    fixed with one psum."""
+    _check_devices(num_devices)
+    C = sc.chunk
+    S = sc.num_slices
+    data = np.asarray(sc.data)
+    cols = np.asarray(sc.cols)
+    slice_of = np.asarray(sc.slice_of, np.int64)
+    W = data.shape[0]
+    bounds = (np.arange(num_devices + 1, dtype=np.int64) * W) // num_devices
+    Wp = max(int(np.diff(bounds).max()), 1)
+
+    D = np.zeros((num_devices, Wp, C), data.dtype if data.size else
+                 np.float32)
+    Cc = np.zeros((num_devices, Wp, C), np.int32)
+    So = np.zeros((num_devices, Wp), np.int32)
+    for p in range(num_devices):
+        a, b = int(bounds[p]), int(bounds[p + 1])
+        ln = b - a
+        if ln:
+            D[p, :ln] = data[a:b]
+            Cc[p, :ln] = cols[a:b]
+            So[p, :ln] = slice_of[a:b].astype(np.int32)
+    return ShardedSellCS(
+        jnp.asarray(D), jnp.asarray(Cc), jnp.asarray(So),
+        jnp.zeros((num_devices,), jnp.int32), sc.row_perm,
+        sc.shape, C, S, S, sc.nnz, "merge")
+
+
+def _prep(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh, axis: str,
+          impl: str, k_tile: Optional[int], expect: str):
+    if sharded.schedule != expect:
+        raise ValueError(
+            f"sharded matrix was partitioned for the {sharded.schedule!r} "
+            f"schedule; build it with partition_sellcs_"
+            f"{'rows' if expect == 'row' else 'nnz'} instead")
+    ndev = sharded.data.shape[0]
+    if ndev != mesh.shape[axis]:
+        raise ValueError(
+            f"matrix is partitioned over {ndev} devices but mesh axis "
+            f"{axis!r} has {mesh.shape[axis]}")
+    if impl not in ("ref", "pallas", "pallas_interpret"):
+        raise ValueError(f"impl must be ref|pallas|pallas_interpret, "
+                         f"got {impl!r}")
+    x2, squeeze = _as_2d(x)
+    n = sharded.shape[1]
+    if x2.shape[0] != n:
+        raise ValueError(f"X rows {x2.shape[0]} != matrix n {n}")
+    k = x2.shape[1]
+    use_pallas = impl != "ref"
+    if use_pallas:
+        kt = k_tile or choose_k_tile(sharded.shape, k, nnz=sharded.nnz)
+        np_ = -(-max(n, 1) // LANE) * LANE
+        kp = -(-k // kt) * kt
+        x_pad = jnp.zeros((np_, kp), x2.dtype).at[:n, :k].set(x2)
+    else:
+        kt = k_tile
+        x_pad = x2
+    return x2, squeeze, k, kt, x_pad, use_pallas
+
+
+def _local_slots(data, cols, slice_of, x_rep, *, num_slices, chunk,
+                 use_pallas, k_tile, interpret):
+    """Shard-local compute: the PR-1 k-tiled Pallas kernel, or its jnp twin
+    off-TPU. Inputs carry a leading length-1 device-block axis."""
+    if use_pallas:
+        return sellcs_slots(data[0], cols[0], slice_of[0], x_rep,
+                            num_slices=num_slices, chunk=chunk,
+                            k_tile=k_tile, interpret=interpret)
+    return sellcs_slots_ref(data[0], cols[0], slice_of[0], x_rep,
+                            num_slices=num_slices, chunk=chunk)
+
+
+def _unpermute(sharded: ShardedSellCS, y_slots: jax.Array, k: int,
+               squeeze: bool) -> jax.Array:
+    """Undo the global σ-sort with one scatter (padding slots target row m,
+    which is dropped)."""
+    m = sharded.shape[0]
+    y = jnp.zeros((m + 1, y_slots.shape[1]), y_slots.dtype
+                  ).at[sharded.row_perm].add(y_slots)[:m, :k]
+    return y[:, 0] if squeeze else y
+
+
+def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
+                         axis: str = "data", *, impl: str = "ref",
+                         k_tile: Optional[int] = None) -> jax.Array:
+    """Y = A @ X with slice banding: X replicated, Y shard-local slots,
+    zero collectives inside the mesh region."""
+    m, n = sharded.shape
+    C, S, Sp = sharded.chunk, sharded.num_slices, sharded.slices_per_shard
+    ndev = sharded.data.shape[0]
+    x2, squeeze, k, kt, x_pad, use_pallas = _prep(
+        sharded, x, mesh, axis, impl, k_tile, "row")
+    if sharded.nnz == 0:
+        y = jnp.zeros((m, k), jnp.float32)
+        return y[:, 0] if squeeze else y
+
+    def local(data, cols, slice_of, x_rep):
+        return _local_slots(data, cols, slice_of, x_rep, num_slices=Sp,
+                            chunk=C, use_pallas=use_pallas, k_tile=kt,
+                            interpret=impl == "pallas_interpret")
+
+    # pallas_call has no replication rule inside shard_map — skip the check
+    yb = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None, None), P(axis, None),
+                  P(None, None)),
+        out_specs=P(axis, None),
+        check_vma=False if use_pallas else None)(
+            sharded.data, sharded.cols, sharded.slice_of, x_pad)
+    yb = yb.reshape(ndev, Sp * C, -1)
+    # shard p owns global slices [slice_offset[p], slice_offset[p+1]);
+    # scatter its local slots there, dumping padding slots past S*C.
+    offs = sharded.slice_offset
+    valid_slices = jnp.concatenate(
+        [offs[1:], jnp.array([S], jnp.int32)]) - offs           # [Pdev]
+    local_slice = jnp.arange(Sp * C, dtype=jnp.int32) // C
+    gslot = (offs[:, None] + local_slice[None]) * C \
+        + (jnp.arange(Sp * C, dtype=jnp.int32) % C)[None]       # [Pdev, SpC]
+    mask = local_slice[None] < valid_slices[:, None]
+    y_slots = jnp.zeros((S * C + 1, yb.shape[-1]), yb.dtype).at[
+        jnp.where(mask, gslot, S * C)].add(
+            jnp.where(mask[..., None], yb, 0))[:S * C]
+    return _unpermute(sharded, y_slots, k, squeeze)
+
+
+def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
+                           axis: str = "data", *, impl: str = "ref",
+                           k_tile: Optional[int] = None) -> jax.Array:
+    """Y = A @ X with equal-width spans: per-device slot partials + one
+    psum carry-out fixup (the only collective). Survives the mawi dense-row
+    pathology — the dense slice splits mid-stream."""
+    m, n = sharded.shape
+    C, S = sharded.chunk, sharded.num_slices
+    x2, squeeze, k, kt, x_pad, use_pallas = _prep(
+        sharded, x, mesh, axis, impl, k_tile, "merge")
+    if sharded.nnz == 0:
+        y = jnp.zeros((m, k), jnp.float32)
+        return y[:, 0] if squeeze else y
+
+    def local(data, cols, slice_of, x_rep):
+        y_loc = _local_slots(data, cols, slice_of, x_rep, num_slices=S,
+                             chunk=C, use_pallas=use_pallas, k_tile=kt,
+                             interpret=impl == "pallas_interpret")
+        return jax.lax.psum(y_loc, axis)
+
+    y_slots = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None, None), P(axis, None),
+                  P(None, None)),
+        out_specs=P(None, None),
+        check_vma=False if use_pallas else None)(
+            sharded.data, sharded.cols, sharded.slice_of, x_pad)
+    return _unpermute(sharded, y_slots, k, squeeze)

@@ -257,16 +257,23 @@ def _sellcs_kernel(slice_of_ref,                  # scalar prefetch (SMEM)
     jax.lax.fori_loop(0, w_tile, body, None)
 
 
-@functools.partial(jax.jit, static_argnames=("k_tile", "interpret"))
-def _sellcs_spmm_slots(sc: SellCS, x_pad: jax.Array, *, k_tile: int,
-                       interpret: bool = False) -> jax.Array:
-    """Accumulate into σ-sorted row slots [S*C, Kp]; the caller undoes the
-    permutation."""
-    C = sc.chunk
-    S = sc.num_slices
-    W = sc.data.shape[0]
+@functools.partial(jax.jit, static_argnames=("num_slices", "chunk",
+                                             "k_tile", "interpret"))
+def sellcs_slots(data: jax.Array, cols: jax.Array, slice_of: jax.Array,
+                 x_pad: jax.Array, *, num_slices: int, chunk: int,
+                 k_tile: int, interpret: bool = False) -> jax.Array:
+    """Raw-array slot-space SpMM over a SELL-C-σ width-row stream.
+
+    Accumulates into row slots ``[num_slices * chunk, Kp]`` without applying
+    any row permutation. This is the shard-local compute of the distributed
+    schedules (``repro.spmm.distributed``): a shard's slice stream is just a
+    shorter width-row stream with its own ``slice_of``/``num_slices``, so
+    the same k-tiled Pallas kernel serves one device or a mesh body.
+    """
+    C = chunk
+    S = num_slices
+    W = data.shape[0]
     Wp = max(-(-W // W_TILE) * W_TILE, W_TILE)
-    data, cols, slice_of = sc.data, sc.cols, sc.slice_of
     if Wp != W:
         pad = Wp - W
         data = jnp.concatenate([data, jnp.zeros((pad, C), data.dtype)])
@@ -295,6 +302,15 @@ def _sellcs_spmm_slots(sc: SellCS, x_pad: jax.Array, *, k_tile: int,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(slice_of, data, cols, x_pad)
+
+
+def _sellcs_spmm_slots(sc: SellCS, x_pad: jax.Array, *, k_tile: int,
+                       interpret: bool = False) -> jax.Array:
+    """Accumulate into σ-sorted row slots [S*C, Kp]; the caller undoes the
+    permutation."""
+    return sellcs_slots(sc.data, sc.cols, sc.slice_of, x_pad,
+                        num_slices=sc.num_slices, chunk=sc.chunk,
+                        k_tile=k_tile, interpret=interpret)
 
 
 def sellcs_spmm(sc: SellCS, x: jax.Array, *, k_tile: Optional[int] = None,

@@ -70,6 +70,20 @@ def spmm_blocked(bs: BlockedSparse, x: Array) -> Array:
     return y[:, 0] if squeeze else y
 
 
+def sellcs_slots_ref(data: Array, cols: Array, slice_of: Array, x2: Array,
+                     *, num_slices: int, chunk: int) -> Array:
+    """Raw-array slot accumulation [num_slices*chunk, k] — the jnp twin of
+    ``repro.spmm.kernels.sellcs_slots`` and the XLA body of the distributed
+    schedules. No row permutation is applied."""
+    dtype = jnp.promote_types(data.dtype, x2.dtype)
+    k = x2.shape[1]
+    xs = x2[cols]                                       # [W, C, k]
+    contrib = data[:, :, None] * xs                     # [W, C, k]
+    slot = (slice_of[:, None] * chunk
+            + jnp.arange(chunk, dtype=jnp.int32)[None])  # [W, C]
+    return jnp.zeros((num_slices * chunk, k), dtype).at[slot].add(contrib)
+
+
 @jax.jit
 def spmm_sellcs(sc: SellCS, x: Array) -> Array:
     """Slice-structured SpMM: one gather + FMA per width-row, then a single
@@ -77,18 +91,13 @@ def spmm_sellcs(sc: SellCS, x: Array) -> Array:
     data == 0, cols == 0 — they contribute nothing."""
     x2, squeeze = _as_2d(x)
     m, _ = sc.shape
-    C = sc.chunk
     k = x2.shape[1]
     dtype = jnp.promote_types(sc.data.dtype, x2.dtype)
-    S = sc.num_slices
     if sc.nnz == 0 or sc.data.shape[0] == 0:
         y = jnp.zeros((m, k), dtype)
         return y[:, 0] if squeeze else y
-    xs = x2[sc.cols]                                    # [W, C, k]
-    contrib = sc.data[:, :, None] * xs                  # [W, C, k]
-    slot = (sc.slice_of[:, None] * C
-            + jnp.arange(C, dtype=jnp.int32)[None])     # [W, C]
-    y_slots = jnp.zeros((S * C, k), dtype).at[slot].add(contrib)
+    y_slots = sellcs_slots_ref(sc.data, sc.cols, sc.slice_of, x2,
+                               num_slices=sc.num_slices, chunk=sc.chunk)
     # undo the σ-sort permutation; padding slots scatter to row m (dropped)
     y = jnp.zeros((m + 1, k), dtype).at[sc.row_perm].add(y_slots)
     y = y[:m]

@@ -9,8 +9,8 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config, long_context_capable
 from repro.models.accounting import count_params
-from repro.models.model import (decode_step, forward, init_cache,
-                                init_params, loss_fn, prefill)
+from repro.models.model import (decode_step, forward, init_params, loss_fn,
+                                prefill)
 
 
 def _inputs(cfg, B=2, S=24, seed=0):

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.core import autotune, convert, spmv, to_coo
+from repro.core import autotune, to_coo
 from repro.data import matrices
 from repro.kernels import coo_to_tiled, ops
 from repro.kernels.ref import bsr_spmm_ref

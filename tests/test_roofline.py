@@ -1,7 +1,6 @@
 """Roofline HLO parser: validated against unrolled references."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline import hlo_parse

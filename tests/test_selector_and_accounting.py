@@ -1,6 +1,4 @@
 """Selector decision procedure + analytic accounting sanity."""
-import numpy as np
-import pytest
 
 from repro.core import (MachineSpec, MatrixStats, amortized_cost,
                         break_even_spmvs, matrix_stats, select_algorithm,
@@ -65,7 +63,7 @@ def test_amortized_cost_monotone_in_reuse():
 def test_accounting_matches_instantiated_params():
     """Analytic count == actual leaf count for reduced configs."""
     import jax
-    from repro.configs import ARCH_IDS, get_config
+    from repro.configs import get_config
     from repro.models.accounting import count_params
     from repro.models.model import init_params
 

@@ -1,7 +1,5 @@
 """Sharding rule unit tests (no devices needed beyond 1 — specs only)."""
 import numpy as np
-import pytest
-import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.launch import shardings as shd

@@ -190,6 +190,75 @@ def test_autotune_k_smoke():
 
 
 # --------------------------------------------------------------------------
+# distributed (format x schedule x k) scoring
+# --------------------------------------------------------------------------
+def test_spmm_distributed_traffic_model_properties():
+    from repro.roofline import (spmm_distributed_time,
+                                spmm_distributed_traffic)
+    m = n = 100_000
+    nnz = 10_000_000
+    # merge is the only schedule with collective bytes, and they grow in k
+    hbm_r, coll_r = spmm_distributed_traffic(m, n, 8, 8, "row", nnz=nnz)
+    hbm_m, coll_m = spmm_distributed_traffic(m, n, 8, 8, "merge", nnz=nnz)
+    assert coll_r == 0.0 and coll_m > 0.0
+    _, coll_m64 = spmm_distributed_traffic(m, n, 64, 8, "merge", nnz=nnz)
+    assert coll_m64 > coll_m
+    # a dominant dense row bounds the row schedule's critical shard below
+    hot = nnz // 2
+    hbm_hot, _ = spmm_distributed_traffic(m, n, 8, 8, "row", nnz=nnz,
+                                          max_row_nnz=hot)
+    assert hbm_hot > hbm_r
+    # one device degrades both schedules to the same single-device stream
+    t1r = spmm_distributed_time(m, n, 8, 1, "row", nnz=nnz)
+    t1m = spmm_distributed_time(m, n, 8, 1, "merge", nnz=nnz)
+    assert t1r == pytest.approx(t1m)
+    with pytest.raises(ValueError):
+        spmm_distributed_traffic(m, n, 8, 8, "diagonal", nnz=nnz)
+
+
+def test_select_distributed_schedule_tracks_skew_and_k():
+    """The joint grid: heavy skew -> merge at small k (psum is cheap),
+    row at large k (psum bytes scale with k); uniform -> always row."""
+    from repro.core import select_distributed
+    from repro.core.selector import MatrixStats
+    mawi = MatrixStats(m=230_000, n=230_000, nnz=270_000_000,
+                       max_row_nnz=120_000_000, row_var=1e9)
+    uni = MatrixStats(m=230_000, n=230_000, nnz=270_000_000,
+                      max_row_nnz=2_000, row_var=10.0)
+    assert select_distributed(mawi, k=1, num_devices=8)[1] == "merge"
+    assert select_distributed(mawi, k=64, num_devices=8)[1] == "row"
+    for k in (1, 8, 64):
+        assert select_distributed(uni, k=k, num_devices=8)[1] == "row"
+    with pytest.raises(ValueError):
+        select_distributed(uni, k=0, num_devices=8)
+    with pytest.raises(ValueError):
+        select_distributed(uni, k=1, num_devices=0)
+
+
+def test_select_num_devices_keyword():
+    """select(num_devices=P>1) routes through the joint grid and still
+    returns a plain format name; num_devices=None keeps the old path."""
+    from repro.core.selector import DISTRIBUTED_ALGOS
+    for name, coo in _matrices().items():
+        s = matrix_stats(coo)
+        pick = select(s, num_spmvs=1000, k=64, num_devices=8)
+        assert pick in DISTRIBUTED_ALGOS, (name, pick)
+        assert select(s, MachineSpec(1), 1000, k=1) == \
+            select_algorithm(s, MachineSpec(1), 1000)
+
+
+def test_autotune_num_devices_records_schedule():
+    from repro.core import autotune
+    coo = to_coo(*matrices.uniform(150, 150, 1500, seed=4))
+    best, results = autotune(coo, num_spmvs=3, reps=1, k=8, num_devices=8,
+                             algorithms=("parcrs", "sellcs"))
+    assert best.num_devices == 8
+    assert all(r.schedule in ("row", "merge") for r in results)
+    assert all(r.dist_model_s is not None and r.dist_model_s > 0
+               for r in results)
+
+
+# --------------------------------------------------------------------------
 # request batching (serve path)
 # --------------------------------------------------------------------------
 def test_batch_spmv_matches_individual():
@@ -234,3 +303,87 @@ def test_batcher_rejects_bad_shape():
     with pytest.raises(ValueError):
         b.submit(jnp.zeros((coo.shape[1] + 1,), jnp.float32))
     assert b.pending == 0
+
+
+def test_batcher_partial_flush_and_interleaving():
+    """A flush below max_batch serves exactly the queued requests; requests
+    submitted after a flush land in the next one, in order."""
+    coo = _matrices()["uniform"]
+    csr = coo_to_csr(coo)
+    b = M.RequestBatcher(csr, max_batch=8)
+    rng = np.random.default_rng(21)
+    xs = [jnp.asarray(rng.standard_normal(coo.shape[1]).astype(np.float32))
+          for _ in range(5)]
+    rids = [b.submit(x) for x in xs[:3]]
+    out1 = b.flush()                      # partial: 3 of max 8
+    assert sorted(out1) == sorted(rids) and b.pending == 0
+    assert b.flushes == 1 and b.served == 3
+    rids2 = [b.submit(x) for x in xs[3:]]
+    out2 = b.flush()
+    assert sorted(out2) == sorted(rids2) and b.served == 5
+    for rid, x in zip(rids + rids2, xs):
+        np.testing.assert_allclose(np.asarray((out1 | out2)[rid]),
+                                   np.asarray(spmv_coo(coo, x)),
+                                   rtol=RTOL, atol=ATOL)
+    assert b.flush() == {}                # empty queue is a no-op
+
+
+def test_batcher_scatter_order_is_per_ticket_not_fifo():
+    """Result columns scatter back by ticket even when consumed out of
+    submission order."""
+    coo = _matrices()["mawi_like"]
+    sc = M.coo_to_sellcs(coo, c=32, sigma=64)
+    b = M.RequestBatcher(sc, max_batch=16)
+    rng = np.random.default_rng(23)
+    xs = [jnp.asarray(rng.standard_normal(coo.shape[1]).astype(np.float32))
+          for _ in range(7)]
+    rids = [b.submit(x) for x in xs]
+    out = b.drain()
+    for rid, x in sorted(zip(rids, xs), key=lambda t: -t[0]):  # reversed
+        np.testing.assert_allclose(np.asarray(out[rid]),
+                                   np.asarray(spmv_coo(coo, x)),
+                                   rtol=RTOL, atol=ATOL)
+
+
+def test_batcher_pad_pow2_off_uses_exact_k():
+    coo = _matrices()["uniform"]
+    seen = []
+
+    def probe(_mat, X):
+        seen.append(X.shape[1])
+        return M.spmm_ref(_mat, X)
+
+    b = M.RequestBatcher(coo_to_csr(coo), max_batch=8, pad_pow2=False,
+                         spmm_fn=probe)
+    rng = np.random.default_rng(29)
+    xs = [jnp.asarray(rng.standard_normal(coo.shape[1]).astype(np.float32))
+          for _ in range(3)]
+    rids = [b.submit(x) for x in xs]
+    out = b.drain()
+    assert seen == [3]                    # exact k, no pow2 padding
+    for rid, x in zip(rids, xs):
+        np.testing.assert_allclose(np.asarray(out[rid]),
+                                   np.asarray(spmv_coo(coo, x)),
+                                   rtol=RTOL, atol=ATOL)
+
+
+def test_batch_spmv_spmm_fn_override():
+    """batch_spmv routes through a custom spmm_fn (the distributed serve
+    path's hook) and still returns per-request results in input order."""
+    coo = _matrices()["uniform"]
+    csr = coo_to_csr(coo)
+    calls = []
+
+    def spmm_fn(mat, X):
+        calls.append(X.shape)
+        return M.spmm_ref(mat, X)
+
+    rng = np.random.default_rng(31)
+    xs = [jnp.asarray(rng.standard_normal(coo.shape[1]).astype(np.float32))
+          for _ in range(4)]
+    ys = M.batch_spmv(csr, xs, spmm_fn=spmm_fn)
+    assert calls == [(coo.shape[1], 4)]
+    for x, y in zip(xs, ys):
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(spmv_coo(coo, x)),
+                                   rtol=RTOL, atol=ATOL)

@@ -1,0 +1,270 @@
+"""Distributed multi-RHS SpMM (repro.spmm.distributed) on 8 host-platform
+devices, plus the degenerate-input guards of both partitioner families.
+
+Device-backed tests run in SUBPROCESSES (the device-count flag must be set
+before jax initializes; the rest of the suite keeps seeing 1 device).
+Partitioner guard tests are pure host code and run in-process.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_spmm_distributed_matches_oracle_k_1_8_64():
+    """ISSUE acceptance: both schedules match the spmm.reference oracle on
+    8 devices for k in {1, 8, 64}, including the mawi skewed case."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.data import matrices
+from repro.launch.mesh import make_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, spmm_coo,
+                        spmm_merge_distributed, spmm_row_distributed)
+mesh = make_mesh((8,), ("data",))
+for name, gen in [("uniform", matrices.uniform(500, 430, 4000, 0)),
+                  ("mawi_like", matrices.mawi_like(400, 400, 3000, 0.4, 1))]:
+    coo = to_coo(*gen)
+    sc = coo_to_sellcs(coo, c=16, sigma=64)
+    row = partition_sellcs_rows(sc, 8)
+    mrg = partition_sellcs_nnz(sc, 8)
+    for k in (1, 8, 64):
+        X = jnp.asarray(np.random.default_rng(k).standard_normal(
+            (coo.shape[1], k)).astype(np.float32))
+        yo = np.asarray(spmm_coo(coo, X))
+        yr = np.asarray(spmm_row_distributed(row, X, mesh))
+        ym = np.asarray(spmm_merge_distributed(mrg, X, mesh))
+        np.testing.assert_allclose(yr, yo, rtol=1e-5, atol=1e-4,
+                                   err_msg=f"{name} row k={k}")
+        np.testing.assert_allclose(ym, yo, rtol=1e-5, atol=1e-4,
+                                   err_msg=f"{name} merge k={k}")
+    # SpMV rides along as the 1-D k=1 special case
+    x = jnp.asarray(np.random.default_rng(9).standard_normal(
+        coo.shape[1]).astype(np.float32))
+    y = spmm_row_distributed(row, x, mesh)
+    assert y.ndim == 1
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(spmm_coo(coo, x)),
+                               rtol=1e-5, atol=1e-4)
+print("distributed spmm oracle OK")
+"""))
+
+
+def test_spmm_distributed_pallas_interpret_kernel_body():
+    """The shard_map bodies reuse the PR-1 k-tiled Pallas kernel
+    (interpret mode off-TPU)."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.data import matrices
+from repro.launch.mesh import make_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, spmm_coo,
+                        spmm_merge_distributed, spmm_row_distributed)
+mesh = make_mesh((8,), ("data",))
+coo = to_coo(*matrices.mawi_like(300, 280, 2400, 0.4, 3))
+sc = coo_to_sellcs(coo, c=16, sigma=64)
+X = jnp.asarray(np.random.default_rng(5).standard_normal(
+    (coo.shape[1], 8)).astype(np.float32))
+yo = np.asarray(spmm_coo(coo, X))
+yr = np.asarray(spmm_row_distributed(
+    partition_sellcs_rows(sc, 8), X, mesh, impl="pallas_interpret",
+    k_tile=4))
+ym = np.asarray(spmm_merge_distributed(
+    partition_sellcs_nnz(sc, 8), X, mesh, impl="pallas_interpret",
+    k_tile=4))
+np.testing.assert_allclose(yr, yo, rtol=1e-5, atol=1e-4)
+np.testing.assert_allclose(ym, yo, rtol=1e-5, atol=1e-4)
+print("distributed pallas kernel body OK")
+"""))
+
+
+def test_sharded_coo_multi_rhs_and_batcher_distributed():
+    """core.distributed accepts [n, k] X; RequestBatcher drives a
+    distributed spmm_fn closure (partial last flush included)."""
+    print(run_sub("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import to_coo
+from repro.core.distributed import (partition_nnz, partition_rows,
+                                    spmv_merge_distributed,
+                                    spmv_row_distributed)
+from repro.data import matrices
+from repro.launch.mesh import make_mesh
+from repro.spmm import (RequestBatcher, coo_to_sellcs,
+                        partition_sellcs_rows, spmm_coo,
+                        spmm_row_distributed)
+mesh = make_mesh((8,), ("data",))
+coo = to_coo(*matrices.mawi_like(260, 240, 2400, 0.3, 1))
+for k in (1, 8, 64):
+    X = jnp.asarray(np.random.default_rng(k).standard_normal(
+        (coo.shape[1], k)).astype(np.float32))
+    yo = np.asarray(spmm_coo(coo, X))
+    y1 = np.asarray(spmv_row_distributed(partition_rows(coo, 8), X, mesh))
+    y2 = np.asarray(spmv_merge_distributed(partition_nnz(coo, 8), X, mesh))
+    np.testing.assert_allclose(y1, yo, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(y2, yo, rtol=1e-5, atol=1e-4)
+
+# batcher over the mesh: 11 requests, max_batch 8 -> one full + one
+# partial flush, every ticket answered from the right column
+sc = coo_to_sellcs(coo, c=16, sigma=64)
+sharded = partition_sellcs_rows(sc, 8)
+calls = []
+def spmm_fn(_mat, X):
+    calls.append(X.shape[1])
+    return spmm_row_distributed(sharded, X, mesh)
+b = RequestBatcher(sc, max_batch=8, spmm_fn=spmm_fn)
+rng = np.random.default_rng(11)
+xs = [jnp.asarray(rng.standard_normal(coo.shape[1]).astype(np.float32))
+      for _ in range(11)]
+rids = [b.submit(x) for x in xs]
+out = b.drain()
+assert b.flushes == 2 and b.served == 11 and sorted(out) == sorted(rids)
+assert calls == [8, 4], calls   # pow2-padded partial flush
+for rid, x in zip(rids, xs):
+    np.testing.assert_allclose(np.asarray(out[rid]),
+                               np.asarray(spmm_coo(coo, x)),
+                               rtol=1e-5, atol=1e-4)
+print("sharded COO k + distributed batcher OK")
+"""))
+
+
+def test_spmm_distributed_degenerate_on_mesh():
+    """Empty matrices and meshes wider than the matrix stay correct."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.core.distributed import (partition_nnz, partition_rows,
+                                    spmv_merge_distributed,
+                                    spmv_row_distributed)
+from repro.launch.mesh import make_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, spmm_merge_distributed,
+                        spmm_row_distributed)
+mesh = make_mesh((8,), ("data",))
+z = np.zeros(0, np.int32)
+empty = to_coo(z, z, np.zeros(0, np.float32), (5, 4))
+tiny = to_coo(np.array([0, 1, 2], np.int32), np.array([0, 1, 2], np.int32),
+              np.ones(3, np.float32), (3, 3))
+X4 = jnp.ones((4, 3), jnp.float32)
+I3 = jnp.eye(3, dtype=jnp.float32)
+# SELL-C-σ schedules
+se = coo_to_sellcs(empty, c=2, sigma=4)
+assert np.abs(np.asarray(spmm_row_distributed(
+    partition_sellcs_rows(se, 8), X4, mesh))).max() == 0
+assert np.abs(np.asarray(spmm_merge_distributed(
+    partition_sellcs_nnz(se, 8), X4, mesh))).max() == 0
+st = coo_to_sellcs(tiny, c=2, sigma=2)    # more devices than slices
+np.testing.assert_allclose(np.asarray(spmm_row_distributed(
+    partition_sellcs_rows(st, 8), I3, mesh)), np.eye(3), atol=1e-6)
+np.testing.assert_allclose(np.asarray(spmm_merge_distributed(
+    partition_sellcs_nnz(st, 8), I3, mesh)), np.eye(3), atol=1e-6)
+# COO schedules: num_devices > m and nnz == 0
+assert np.abs(np.asarray(spmv_row_distributed(
+    partition_rows(empty, 8), X4, mesh))).max() == 0
+assert np.abs(np.asarray(spmv_merge_distributed(
+    partition_nnz(empty, 8), X4, mesh))).max() == 0
+np.testing.assert_allclose(np.asarray(spmv_row_distributed(
+    partition_rows(tiny, 8), I3, mesh)), np.eye(3), atol=1e-6)
+print("degenerate mesh cases OK")
+"""))
+
+
+# --------------------------------------------------------------------------
+# Partitioner guards — host-side, no devices needed
+# --------------------------------------------------------------------------
+def _empty_coo(m=5, n=4):
+    from repro.core import to_coo
+    z = np.zeros(0, np.int32)
+    return to_coo(z, z, np.zeros(0, np.float32), (m, n))
+
+
+def test_partition_guards_reject_bad_device_count():
+    import pytest
+    from repro.core.distributed import partition_nnz, partition_rows
+    from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                            partition_sellcs_rows)
+    coo = _empty_coo()
+    sc = coo_to_sellcs(coo, c=2)
+    for fn, arg in [(partition_rows, coo), (partition_nnz, coo),
+                    (partition_sellcs_rows, sc), (partition_sellcs_nnz, sc)]:
+        with pytest.raises(ValueError):
+            fn(arg, 0)
+        with pytest.raises(ValueError):
+            fn(arg, -3)
+
+
+def test_partition_rows_empty_matrix_keeps_sane_shard_shapes():
+    """Regression: a zero-nnz matrix used to put every row in the last
+    band, inflating rows_per_shard to m; now bands split evenly."""
+    from repro.core.distributed import partition_nnz, partition_rows
+    coo = _empty_coo(m=64, n=16)
+    s = partition_rows(coo, 8)
+    assert s.rows.shape == (8, 1)
+    assert s.rows_per_shard == 8            # == m / P, not m
+    assert np.asarray(s.row_offset).tolist() == list(range(0, 64, 8))
+    s2 = partition_nnz(coo, 8)
+    assert s2.rows.shape == (8, 1) and s2.rows_per_shard == 1
+
+
+def test_partition_more_devices_than_rows():
+    from repro.core import to_coo
+    from repro.core.distributed import partition_nnz, partition_rows
+    coo = to_coo(np.array([0, 1, 2], np.int32),
+                 np.array([0, 1, 2], np.int32),
+                 np.ones(3, np.float32), (3, 3))
+    for part in (partition_rows, partition_nnz):
+        s = part(coo, 8)
+        assert s.rows.shape[0] == 8
+        assert s.rows_per_shard >= 1
+        # local row ids stay inside the shard buffer
+        assert int(np.asarray(s.rows).max()) < s.rows_per_shard
+        # every shard offset is a valid global row (or 0 for empty shards)
+        offs = np.asarray(s.row_offset)
+        assert offs.min() >= 0 and offs.max() < 3
+
+
+def test_partition_sellcs_roundtrip_covers_all_nnz():
+    """Both SELL-C-σ partitioners must conserve the nonzero payload."""
+    from repro.core import to_coo
+    from repro.data import matrices
+    from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                            partition_sellcs_rows)
+    coo = to_coo(*matrices.mawi_like(200, 180, 1500, 0.3, 2))
+    sc = coo_to_sellcs(coo, c=8, sigma=32)
+    total = float(np.abs(np.asarray(sc.data)).sum())
+    for part in (partition_sellcs_rows, partition_sellcs_nnz):
+        for P in (1, 3, 8, 64):
+            sh = part(sc, P)
+            got = float(np.abs(np.asarray(sh.data)).sum())
+            assert abs(got - total) < 1e-3, (part.__name__, P)
+            assert sh.data.shape[0] == P
+
+
+def test_distributed_schedule_mismatch_raises():
+    import pytest
+    import jax
+    from repro.launch.mesh import make_mesh
+    from repro.spmm import (coo_to_sellcs, partition_sellcs_rows,
+                            spmm_merge_distributed)
+    if len(jax.devices()) != 1:
+        return                       # in-process guard only needs 1 device
+    mesh = make_mesh((1,), ("data",))
+    sc = coo_to_sellcs(_empty_coo(), c=2)
+    sharded = partition_sellcs_rows(sc, 1)
+    with pytest.raises(ValueError, match="schedule"):
+        spmm_merge_distributed(sharded, np.ones((4, 2), np.float32), mesh)

@@ -8,8 +8,8 @@ import pytest
 
 from repro.checkpoint import latest_step, restore, save
 from repro.data.pipeline import TokenPipeline, make_batch_iterator
-from repro.optim import (adafactor, adamw, constant_lr, global_norm,
-                         make_optimizer, warmup_cosine)
+from repro.optim import (adamw, constant_lr, global_norm, make_optimizer,
+                         warmup_cosine)
 from repro.runtime import StragglerMonitor, Supervisor
 
 

@@ -1,7 +1,6 @@
 """End-to-end behaviour tests for the paper's system."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 
 def test_spmv_pipeline_end_to_end():
