@@ -13,6 +13,19 @@ Rules, per record ({"section", "name", "us_per_call", "derived"}):
   * a file with zero records fails (an empty emission means the benchmark
     silently did nothing).
 
+Cross-row rule (the chunked-psum overlap gate): for every
+``.../sellcs+merge@Pdev/chunks=<c>/k=<k>`` group emitted by
+``benchmarks.spmm_sweep --chunks``, IF the sweep's own roofline
+prediction (the ``model_us`` derived field) says some pipelined depth
+should be at least as fast as the monolithic fixup, then the BEST
+measured chunked row (c > 1) must not run more than
+``CHUNK_REGRESSION_TOLERANCE`` slower than the ``chunks=1`` row — where
+the model says overlap pays, pipelining must never cost real time, only
+hide it. Groups where the model itself predicts chunking loses (tiny
+smoke matrices, launch-dominated psums, host-platform meshes with no
+async collectives) are recorded but not gated — failing them would
+punish the code for physics the model already prices.
+
 ``spmvs_to_amortize=inf`` and friends are legitimate (a format that never
 breaks even), so only the keys named above are validated.
 """
@@ -20,13 +33,20 @@ from __future__ import annotations
 
 import json
 import math
+import re
 import sys
-from typing import Iterator, List, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 # derived keys that must be finite and strictly positive
 _POSITIVE_KEYS = ("gflops",)
 # row-name prefixes whose us_per_call is analytic (no timing collected)
 _ANALYTIC_PREFIXES = ("break_even.",)
+
+# best chunked merge row may be at most 10% slower than the monolithic one
+CHUNK_REGRESSION_TOLERANCE = 1.10
+
+_CHUNK_ROW_RE = re.compile(
+    r"^(?P<base>.*sellcs\+merge@\d+dev)/chunks=(?P<c>\d+)/k=(?P<k>\d+)$")
 
 
 def _derived_fields(derived: str) -> Iterator[Tuple[str, str]]:
@@ -34,6 +54,56 @@ def _derived_fields(derived: str) -> Iterator[Tuple[str, str]]:
         if "=" in part:
             key, val = part.split("=", 1)
             yield key.strip(), val.strip()
+
+
+def _model_us(rec: dict) -> Optional[float]:
+    for key, val in _derived_fields(str(rec.get("derived", ""))):
+        if key == "model_us":
+            try:
+                v = float(val)
+            except ValueError:
+                return None
+            return v if math.isfinite(v) else None
+    return None
+
+
+def check_chunk_regressions(records: List[dict], origin: str) -> List[str]:
+    """The overlap gate: per (merge-row base, k) group whose own roofline
+    prediction says some pipelined depth beats the monolithic fixup, the
+    fastest measured chunked row must stay within
+    CHUNK_REGRESSION_TOLERANCE of the chunks=1 row."""
+    groups: Dict[Tuple[str, str],
+                 Dict[int, Tuple[float, Optional[float]]]] = {}
+    for rec in records:
+        m = _CHUNK_ROW_RE.match(str(rec.get("name", "")))
+        us = rec.get("us_per_call")
+        if not m or not isinstance(us, (int, float)) or not \
+                math.isfinite(us) or us <= 0:
+            continue
+        groups.setdefault((m["base"], m["k"]), {})[int(m["c"])] = \
+            (float(us), _model_us(rec))
+    problems = []
+    for (base, k), rows in sorted(groups.items()):
+        mono = rows.get(1)
+        chunked = {c: r for c, r in rows.items() if c > 1}
+        if mono is None or not chunked:
+            continue                    # nothing to compare against
+        # arm the gate only where the model predicts overlap pays at THIS
+        # size (otherwise a measured loss is the physics, not a bug)
+        models = [r[1] for r in chunked.values()]
+        if mono[1] is None or any(mu is None for mu in models) or \
+                min(models) > mono[1]:
+            continue
+        best_c, (best_us, _) = min(chunked.items(), key=lambda t: t[1][0])
+        if best_us > CHUNK_REGRESSION_TOLERANCE * mono[0]:
+            problems.append(
+                f"{origin}:{base}/k={k}: best chunked merge row "
+                f"(chunks={best_c}, {best_us:.4g} us) regresses "
+                f"{best_us / mono[0]:.2f}x over the monolithic chunks=1 "
+                f"row ({mono[0]:.4g} us) although the model predicts "
+                f"overlap pays here; tolerance is "
+                f"{CHUNK_REGRESSION_TOLERANCE:.2f}x")
+    return problems
 
 
 def check_records(records: List[dict], origin: str) -> List[str]:
@@ -62,6 +132,7 @@ def check_records(records: List[dict], origin: str) -> List[str]:
             if not math.isfinite(v) or v <= 0:
                 problems.append(f"{name}: {key}={val} must be finite and "
                                 "> 0")
+    problems.extend(check_chunk_regressions(records, origin))
     return problems
 
 

@@ -12,6 +12,9 @@ roofline model's ideal-CSR prediction from ``repro.roofline``.
 ``--devices P`` additionally times the distributed SELL-C-σ schedules
 (``repro.spmm.distributed``) on a P-device mesh per k; when jax has not
 been imported yet the host-platform device count is forced automatically.
+``--chunks 1,2,8`` sweeps the merge-psum pipelining depth too — one
+``chunks=<c>`` row per count, so ``benchmarks.smoke_check`` can gate the
+chunked rows against the monolithic (``chunks=1``) baseline.
 
 Emits the same CSV columns and JSON schema as ``benchmarks.run``.
 """
@@ -58,9 +61,15 @@ def sweep_matrix(name: str, coo, ks, impl: str, reps: int, csv) -> None:
 
 
 def sweep_distributed(name: str, coo, ks, devices: int, reps: int,
-                      csv) -> None:
+                      csv, chunk_counts=(1,)) -> None:
     """Distributed schedules on a `devices`-wide mesh (ref impl bodies —
-    the host-platform mesh has no TPU cores to feed the Pallas path)."""
+    the host-platform mesh has no TPU cores to feed the Pallas path).
+
+    The merge schedule is swept once per entry of ``chunk_counts`` (the
+    psum pipelining depth) so the BENCH trajectory records chunked rows
+    next to the monolithic (``chunks=1``) one; the row schedule has no
+    collective to chunk and appears once.
+    """
     import jax
     import jax.numpy as jnp
     from repro.launch.mesh import make_mesh
@@ -76,13 +85,22 @@ def sweep_distributed(name: str, coo, ks, devices: int, reps: int,
         if nnz else 0
     mesh = make_mesh((devices,), ("data",))
     sc = coo_to_sellcs(coo)
-    parts = {"row": (partition_sellcs_rows(sc, devices),
-                     spmm_row_distributed),
-             "merge": (partition_sellcs_nnz(sc, devices),
-                       spmm_merge_distributed)}
+    row_sharded = partition_sellcs_rows(sc, devices)
+    # one shared merge partition for every depth: the span re-deal happens
+    # at trace time inside the jitted closure, so no per-depth copies of
+    # the base device-dealt arrays are kept alive for the whole sweep
+    mrg_sharded = partition_sellcs_nnz(sc, devices)
+    variants = [("row", None,
+                 jax.jit(lambda X: spmm_row_distributed(
+                     row_sharded, X, mesh)))]
+    for c in chunk_counts:
+        variants.append(("merge", int(c),
+                         jax.jit(lambda X, c=int(c): spmm_merge_distributed(
+                             mrg_sharded, X, mesh, num_chunks=c))))
     rng = np.random.default_rng(1)
-    for sched, (sharded, fn) in parts.items():
-        jitted = jax.jit(lambda X, f=fn, s=sharded: f(s, X, mesh))
+    for sched, nc, jitted in variants:
+        tag = f"{name}/sellcs+{sched}@{devices}dev" + \
+            (f"/chunks={nc}" if nc is not None else "")
         for k in ks:
             X = jnp.asarray(rng.standard_normal((n, k)).astype(np.float32))
             sec = harness.time_fn(lambda: jitted(X), reps=reps, warmup=1)
@@ -90,14 +108,16 @@ def sweep_distributed(name: str, coo, ks, devices: int, reps: int,
             hbm, coll = spmm_distributed_traffic(
                 m, n, k, devices, sched, nnz=nnz, max_row_nnz=max_row)
             model_s = spmm_distributed_time(
-                m, n, k, devices, sched, nnz=nnz, max_row_nnz=max_row)
-            csv.row(f"{name}/sellcs+{sched}@{devices}dev/k={k}", sec,
+                m, n, k, devices, sched, nnz=nnz, max_row_nnz=max_row,
+                num_chunks=nc or 1)
+            csv.row(f"{tag}/k={k}", sec,
                     f"gflops={gflops:.4g};hbm_mb={hbm / 1e6:.4g};"
                     f"coll_mb={coll / 1e6:.4g};model_us={model_s * 1e6:.4g}")
 
 
 def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
-        reps: int = 3, matrices_only=None, devices: int = 1) -> None:
+        reps: int = 3, matrices_only=None, devices: int = 1,
+        chunk_counts=(1,)) -> None:
     from repro.data import matrices
     from . import harness
 
@@ -109,7 +129,8 @@ def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
     suite = matrices.test_suite(scale=suite_scale)
     names = matrices_only or ["hhh_like", "livejournal_like", "mawi_like"]
     title = f"SpMM k-sweep (impl={impl}, k in {ks}" + \
-        (f", devices={devices})" if devices > 1 else ")")
+        (f", devices={devices}, chunks={list(chunk_counts)})"
+         if devices > 1 else ")")
     csv = harness.Csv(title)
     for name in names:
         if name not in suite:
@@ -117,7 +138,8 @@ def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
         coo = matrices.as_coo(suite[name].make())
         sweep_matrix(name, coo, ks, impl, reps, csv)
         if devices > 1:
-            sweep_distributed(name, coo, ks, devices, reps, csv)
+            sweep_distributed(name, coo, ks, devices, reps, csv,
+                              chunk_counts=chunk_counts)
 
 
 def main(argv=None) -> None:
@@ -134,7 +156,18 @@ def main(argv=None) -> None:
     ap.add_argument("--devices", type=int, default=1,
                     help="also sweep the distributed schedules over a mesh "
                          "of this many devices")
+    ap.add_argument("--chunks", default="1",
+                    help="comma-separated merge-psum pipelining depths to "
+                         "sweep (with --devices); each count emits its own "
+                         "chunks=<c> rows next to the monolithic chunks=1")
     args = ap.parse_args(argv)
+    try:
+        chunk_counts = tuple(int(c) for c in args.chunks.split(",") if c)
+    except ValueError:
+        raise SystemExit(f"--chunks must be comma-separated ints, got "
+                         f"{args.chunks!r}")
+    if not chunk_counts or any(c < 1 for c in chunk_counts):
+        raise SystemExit(f"--chunks entries must be >= 1, got {args.chunks!r}")
 
     if args.devices > 1 and "jax" not in sys.modules:
         # must happen before the first jax import anywhere in the process
@@ -155,7 +188,7 @@ def main(argv=None) -> None:
     run(suite_scale=args.scale, kmax=args.kmax, impl=args.impl,
         reps=args.reps,
         matrices_only=args.matrices.split(",") if args.matrices else None,
-        devices=args.devices)
+        devices=args.devices, chunk_counts=chunk_counts)
     if args.json:
         harness.dump_json(args.json)
 

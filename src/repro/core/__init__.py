@@ -13,7 +13,8 @@ from .curves import (curve_key, hilbert_decode, hilbert_key, hilbert_key_np,
 from .mergepath import (MergePartition, balanced_row_bands,
                         merge_path_partition, merge_path_partition_np,
                         span_block_aligned)
-from .selector import (SCHEDULES, MachineSpec, MatrixStats, amortized_cost,
+from .selector import (CHUNK_CANDIDATES, SCHEDULES, DistributedChoice,
+                       MachineSpec, MatrixStats, amortized_cost,
                        break_even_spmvs, matrix_stats, select,
                        select_algorithm, select_distributed,
                        spmm_cost_scale)
@@ -30,7 +31,8 @@ __all__ = [
     "hilbert_decode", "hilbert_key", "hilbert_key_np", "morton_decode",
     "morton_key", "MergePartition", "balanced_row_bands",
     "merge_path_partition", "merge_path_partition_np", "span_block_aligned",
-    "MachineSpec", "MatrixStats", "SCHEDULES", "amortized_cost",
+    "MachineSpec", "MatrixStats", "SCHEDULES", "CHUNK_CANDIDATES",
+    "DistributedChoice", "amortized_cost",
     "break_even_spmvs", "matrix_stats", "select", "select_algorithm",
     "select_distributed", "spmm_cost_scale", "autotune",
     "TuneResult", "spmv", "spmv_blocked", "spmv_coo",

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -207,10 +207,9 @@ def select(stats: MatrixStats, machine: Optional[MachineSpec] = None,
     ``select_distributed`` directly when the schedule is needed too.
     """
     if num_devices is not None and num_devices > 1:
-        algo, _ = select_distributed(
+        return select_distributed(
             stats, k=k, num_devices=num_devices, num_spmvs=num_spmvs,
-            conversion_cost=conversion_cost)
-        return algo
+            conversion_cost=conversion_cost).algorithm
     if machine is None:
         machine = MachineSpec(num_devices or 1)
     if k <= 1:
@@ -240,9 +239,32 @@ def select(stats: MatrixStats, machine: Optional[MachineSpec] = None,
 
 
 # --------------------------------------------------------------------------
-# Distributed extension: the (format × schedule × k × devices) grid
+# Distributed extension: the (format × schedule × k × devices × chunks) grid
 # --------------------------------------------------------------------------
 SCHEDULES = ("row", "merge")
+
+# Candidate psum pipelining depths for the "merge" schedule (1 = the
+# monolithic fixup). "row" has no collective, so its depth is always 1.
+CHUNK_CANDIDATES = (1, 2, 4, 8)
+
+
+def distributed_schedule_grid(pinned_chunks: Optional[int] = None,
+                              chunk_candidates: Tuple[int, ...] =
+                              CHUNK_CANDIDATES) -> list:
+    """The (schedule × psum-chunking) axis of the distributed grid, shared
+    by :func:`select_distributed`, ``core.autotune`` and ``launch.serve``
+    so the merge-only chunk rule lives in exactly one place: "merge"
+    sweeps the pipelining depths (or a single pinned depth), "row" has no
+    collective to chunk and always pairs with depth 1."""
+    grid = []
+    for schedule in SCHEDULES:
+        if schedule == "merge":
+            chunks = ((int(pinned_chunks),) if pinned_chunks
+                      else chunk_candidates)
+        else:
+            chunks = (1,)
+        grid.extend((schedule, int(nc)) for nc in chunks)
+    return grid
 
 # Formats with an executable mesh multiply: "parcrs" drives the ShardedCOO
 # path in core.distributed (its nonzero stream is the row-sorted COO both
@@ -253,26 +275,40 @@ SCHEDULES = ("row", "merge")
 DISTRIBUTED_ALGOS = ("parcrs", "sellcs")
 
 
+class DistributedChoice(NamedTuple):
+    """Winner of the joint (format × schedule × chunks) grid. Unpacks like
+    the old ``(format, schedule)`` pair with ``num_chunks`` riding third."""
+    algorithm: str
+    schedule: str
+    num_chunks: int
+
+
 def select_distributed(stats: MatrixStats, *, k: int = 1,
                        num_devices: int = 1, num_spmvs: int = 1000,
                        conversion_cost: Optional[Dict[str, float]] = None,
-                       dtype_bytes: int = 4) -> Tuple[str, str]:
-    """Joint (format, cross-device schedule) choice for a mesh of
-    ``num_devices`` devices multiplying a ``[n, k]`` block ``num_spmvs``
-    times.
+                       dtype_bytes: int = 4,
+                       chunk_candidates: Tuple[int, ...] = CHUNK_CANDIDATES
+                       ) -> DistributedChoice:
+    """Joint (format, cross-device schedule, psum chunking) choice for a
+    mesh of ``num_devices`` devices multiplying a ``[n, k]`` block
+    ``num_spmvs`` times.
 
     Scored entirely with the ``repro.roofline`` traffic model
     (:func:`repro.roofline.analysis.spmm_distributed_time`): each
     candidate's per-multiply time counts its streamed matrix bytes
     (per-format footprint, dense-row imbalance for the "row" schedule),
     the replicated-X read, the shard-local vs full-partial Y write, and —
-    for "merge" — the psum carry-out all-reduce over the ICI link. Times
-    are normalized to the single-device ParCRS stream so the paper's
+    for "merge" — the *exposed* psum seconds after pipelining the fixup
+    into ``num_chunks`` spans (chunked collectives hide under the slice
+    stream; each chunk pays a launch, so the optimum depth is finite).
+    Times are normalized to the single-device ParCRS stream so the paper's
     conversion-cost priors keep their units, then amortized exactly like
     :func:`amortized_cost`.
 
-    Returns ``(format, schedule)``; ``num_devices = 1`` degrades to the
-    single-device model where both schedules tie and "row" wins by order.
+    Returns a :class:`DistributedChoice`; ``num_devices = 1`` degrades to
+    the single-device model where both schedules tie and "row" wins by
+    order. The "row" schedule has no collective and always reports
+    ``num_chunks = 1``.
     """
     from repro.roofline.analysis import spmm_distributed_time
     if num_devices < 1:
@@ -285,16 +321,20 @@ def select_distributed(stats: MatrixStats, *, k: int = 1,
         stats.m, stats.n, 1, 1, "row",
         matrix_bytes=_matrix_bytes_est("parcrs", stats, dtype_bytes),
         dtype_bytes=dtype_bytes)
-    best, best_cost = (None, None), math.inf
+    grid = distributed_schedule_grid(chunk_candidates=chunk_candidates)
+    best, best_cost = None, math.inf
     for algo in DISTRIBUTED_ALGOS:
         mat_bytes = _matrix_bytes_est(algo, stats, dtype_bytes)
-        for schedule in SCHEDULES:
+        for schedule, nc in grid:
             sec = spmm_distributed_time(
                 stats.m, stats.n, k, num_devices, schedule,
                 matrix_bytes=mat_bytes, dtype_bytes=dtype_bytes,
-                max_row_nnz=stats.max_row_nnz)
+                max_row_nnz=stats.max_row_nnz, num_chunks=nc)
             per_spmv = sec / max(base_s, 1e-30)
             cost = conv[algo] + num_spmvs * per_spmv
-            if cost < best_cost:
-                best, best_cost = (algo, schedule), cost
+            # "or best is None" keeps a valid choice even when every
+            # cost is inf (e.g. all-inf conversion priors)
+            if cost < best_cost or best is None:
+                best = DistributedChoice(algo, schedule, nc)
+                best_cost = cost
     return best

@@ -12,12 +12,13 @@ amortized over the batch), measured against serving them one by one:
       --matrix mawi_like --requests 64 --max-batch 32
 
 Mesh serving — ``--devices P`` answers each flush with a *distributed*
-SpMM over a P-device mesh (``repro.spmm.distributed``); format and
-cross-device schedule come from ``core.select_distributed``. On CPU, force
-host-platform devices first:
+SpMM over a P-device mesh (``repro.spmm.distributed``); format,
+cross-device schedule and the merge-psum pipelining depth come from the
+``core.select_distributed`` grid (``--chunks c`` pins the depth). On CPU,
+force host-platform devices first:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --mode spmv --matrix mawi_like \
-      --requests 64 --max-batch 32 --devices 8 --impl ref
+      --requests 64 --max-batch 32 --devices 8 --impl ref --chunks 4
 """
 from __future__ import annotations
 
@@ -42,8 +43,10 @@ def _pick_chunk(m: int, num_devices: int, default: int = 128) -> int:
 
 
 def _make_distributed_spmm(coo, stats, args):
-    """Build (matrix, spmm_fn, label, schedule) for the --devices path."""
-    from repro.core.selector import SCHEDULES, _matrix_bytes_est
+    """Build (matrix, spmm_fn, label, schedule, chunks) for the --devices
+    path."""
+    from repro.core.selector import (_matrix_bytes_est,
+                                     distributed_schedule_grid)
     from repro.launch.mesh import make_mesh
     from repro.roofline import spmm_distributed_time
     from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
@@ -63,12 +66,16 @@ def _make_distributed_spmm(coo, stats, args):
             "(repro.spmm.distributed); drop --algorithm or pass sellcs")
     mesh = make_mesh((args.devices,), ("data",))
     # the executable mesh format is the SELL-C-σ slice stream, so score the
-    # cross-device schedule with sellcs's own byte footprint (conversion
-    # cost is shared by both schedules, so it drops out)
+    # (schedule × chunks) grid with sellcs's own byte footprint (conversion
+    # cost is shared by every candidate, so it drops out); --chunks pins
+    # the merge psum pipelining depth instead of modelling it
     sellcs_bytes = _matrix_bytes_est("sellcs", stats)
-    schedule = min(SCHEDULES, key=lambda s: spmm_distributed_time(
-        stats.m, stats.n, args.max_batch, args.devices, s,
-        matrix_bytes=sellcs_bytes, max_row_nnz=stats.max_row_nnz))
+    grid = distributed_schedule_grid(
+        pinned_chunks=args.chunks if args.chunks > 0 else None)
+    schedule, chunks = min(grid, key=lambda t: spmm_distributed_time(
+        stats.m, stats.n, args.max_batch, args.devices, t[0],
+        matrix_bytes=sellcs_bytes, max_row_nnz=stats.max_row_nnz,
+        num_chunks=t[1]))
     sc = coo_to_sellcs(coo, c=_pick_chunk(stats.m, args.devices))
     impl = "ref" if args.impl == "auto" and \
         jax.default_backend() != "tpu" else args.impl
@@ -76,17 +83,21 @@ def _make_distributed_spmm(coo, stats, args):
         impl = "pallas"
     if schedule == "row":
         sharded = partition_sellcs_rows(sc, args.devices)
-        dist = spmm_row_distributed
+        jitted = jax.jit(lambda X: spmm_row_distributed(
+            sharded, X, mesh, impl=impl))
+        label = f"sellcs+row@{args.devices}dev"
     else:
-        sharded = partition_sellcs_nnz(sc, args.devices)
-        dist = spmm_merge_distributed
-    # jit the closure so repeated flushes of one batch shape don't retrace
-    # the shard_map body
-    jitted = jax.jit(lambda X: dist(sharded, X, mesh, impl=impl))
+        # the span plan is baked at partition time; the multiply reuses it
+        sharded = partition_sellcs_nnz(sc, args.devices, num_chunks=chunks)
+        jitted = jax.jit(lambda X: spmm_merge_distributed(
+            sharded, X, mesh, impl=impl, num_chunks=chunks))
+        label = f"sellcs+merge@{args.devices}dev/chunks={chunks}"
+    # the jitted closure keeps repeated flushes of one batch shape from
+    # retracing the shard_map body
 
     def spmm_fn(_mat, X):
         return jitted(X)
-    return sc, spmm_fn, f"sellcs+{schedule}@{args.devices}dev", schedule
+    return sc, spmm_fn, label, schedule, chunks
 
 
 def serve_spmv(args):
@@ -106,8 +117,10 @@ def serve_spmv(args):
     # into ceil(requests / max_batch) SpMM calls
     num_spmms = -(-args.requests // args.max_batch)
     spmm_fn = sched = None
+    chunks = 1
     if args.devices > 1:
-        mat, spmm_fn, algo, sched = _make_distributed_spmm(coo, stats, args)
+        mat, spmm_fn, algo, sched, chunks = _make_distributed_spmm(
+            coo, stats, args)
     else:
         algo = args.algorithm or select(stats, MachineSpec(1),
                                         num_spmvs=num_spmms,
@@ -152,13 +165,22 @@ def serve_spmv(args):
     print(f"[serve-spmv] modelled intensity {ai1:.3f} -> {aik:.3f} "
           f"flop/byte at k={args.max_batch}")
     if args.devices > 1:
-        from repro.roofline import spmm_distributed_traffic
+        from repro.roofline import (spmm_distributed_collective_s,
+                                    spmm_distributed_traffic)
         hbm, coll = spmm_distributed_traffic(
             stats.m, stats.n, args.max_batch, args.devices, sched,
             nnz=stats.nnz, max_row_nnz=stats.max_row_nnz)
         print(f"[serve-spmv] modelled per-device traffic: {hbm / 1e6:.2f} MB "
               f"HBM + {coll / 1e6:.2f} MB collective per flush "
-              f"({args.devices} devices, schedule={sched})")
+              f"({args.devices} devices, schedule={sched}, chunks={chunks})")
+        if sched == "merge":
+            mono, over = (spmm_distributed_collective_s(
+                stats.m, stats.n, args.max_batch, args.devices, sched,
+                nnz=stats.nnz, max_row_nnz=stats.max_row_nnz, num_chunks=c)
+                for c in (1, chunks))
+            print(f"[serve-spmv] exposed collective_s: {mono * 1e6:.2f} us "
+                  f"monolithic -> {over * 1e6:.2f} us with {chunks} "
+                  "chunk(s) pipelined under the slice stream")
     return t_batched, t_seq
 
 
@@ -177,6 +199,10 @@ def main(argv=None):
                     help="serve each flush with a distributed SpMM over a "
                          "mesh of this many devices (schedule chosen by "
                          "core.select_distributed)")
+    ap.add_argument("--chunks", type=int, default=0,
+                    help="pipeline the merge-schedule psum into this many "
+                         "chunks (0 = pick by the roofline overlap model; "
+                         "ignored by the row schedule)")
     ap.add_argument("--impl", default="auto",
                     choices=("auto", "ref", "pallas", "pallas_interpret"))
     ap.add_argument("--reduced", action="store_true")

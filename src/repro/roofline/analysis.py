@@ -195,9 +195,12 @@ def spmm_distributed_traffic(m: int, n: int, k: int, num_devices: int,
 
     * ``"merge"`` (equal-nnz spans): perfect nnz balance (matrix_bytes/P
       even with a dense row), but every device writes a full [m, k] partial
-      and the carry-out fixup is one all-reduce on Y — 2*(P-1)/P*m*k bytes
+      and the carry-out fixup is an all-reduce on Y — 2*(P-1)/P*m*k bytes
       on the ring, ≈ 2*m*k (the same approximation ``collective_bytes_total``
-      applies to compiled HLO).
+      applies to compiled HLO). The bytes price the TRUE k: the kernel
+      slices the k-tile padding (kp - k columns) off before the collective,
+      so model and wire agree. Chunking the fixup does not change the bytes
+      — only when they are paid; see ``spmm_distributed_collective_s``.
 
     ``num_devices == 1`` degrades to the single-device stream for both.
     """
@@ -221,19 +224,65 @@ def spmm_distributed_traffic(m: int, n: int, k: int, num_devices: int,
     return stream + x_bytes + y_bytes, psum_bytes
 
 
+# Fixed cost of issuing one collective (launch + ring sync). Keeps the
+# chunked model honest: more chunks shrink the exposed wire time but pay
+# this per psum, so the modelled optimum is interior, not "always max".
+COLLECTIVE_LAUNCH_S = 1e-6
+
+
+def spmm_distributed_collective_s(m: int, n: int, k: int, num_devices: int,
+                                  schedule: str,
+                                  matrix_bytes: Optional[float] = None,
+                                  nnz: int = 0, dtype_bytes: int = 4,
+                                  max_row_nnz: int = 0, num_chunks: int = 1,
+                                  hbm_bw: float = HBM_BW,
+                                  link_bw: float = ICI_LINK_BW) -> float:
+    """EXPOSED collective seconds of one distributed multiply — the part of
+    the wire time that does not hide under the slice stream.
+
+    Monolithic (``num_chunks = 1``): the whole all-reduce serializes after
+    all local compute, so everything is exposed (plus one launch).
+
+    Chunked (``num_chunks = c``): the slice stream is split into c spans
+    and each span's psum is issued while the next span computes — the
+    standard communication/computation overlap of distributed-memory SpMV
+    (Eckstein & Mátyásfalvi, arXiv:1812.00904). Per-chunk wire time
+    ``tl = coll_s/c + launch`` overlaps per-chunk compute ``tc = hbm_s/c``;
+    the pipeline exposes ``(c-1) * max(0, tl - tc) + tl``: the last chunk's
+    collective always drains after the stream ends, earlier chunks only
+    leak what compute cannot cover.
+    """
+    if num_chunks < 1:
+        raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
+    hbm, coll = spmm_distributed_traffic(
+        m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
+        dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz)
+    if coll <= 0.0:
+        return 0.0                    # "row" / single device: no wire time
+    c = int(num_chunks)
+    tl = coll / link_bw / c + COLLECTIVE_LAUNCH_S
+    tc = (hbm / hbm_bw) / c
+    return (c - 1) * max(0.0, tl - tc) + tl
+
+
 def spmm_distributed_time(m: int, n: int, k: int, num_devices: int,
                           schedule: str,
                           matrix_bytes: Optional[float] = None,
                           nnz: int = 0, dtype_bytes: int = 4,
-                          max_row_nnz: int = 0,
+                          max_row_nnz: int = 0, num_chunks: int = 1,
                           hbm_bw: float = HBM_BW,
                           link_bw: float = ICI_LINK_BW) -> float:
-    """Modelled seconds per distributed multiply: HBM term + collective
-    term (no overlap assumed — both are on the Y critical path)."""
-    hbm, coll = spmm_distributed_traffic(
+    """Modelled seconds per distributed multiply: HBM term + the *exposed*
+    collective term. ``num_chunks = 1`` keeps the PR-2 no-overlap model
+    (both terms on the Y critical path, plus one launch); ``num_chunks > 1``
+    prices the pipelined fixup of ``spmm_merge_distributed(num_chunks=)``."""
+    hbm, _ = spmm_distributed_traffic(
         m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
         dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz)
-    return hbm / hbm_bw + coll / link_bw
+    return hbm / hbm_bw + spmm_distributed_collective_s(
+        m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
+        dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
+        num_chunks=num_chunks, hbm_bw=hbm_bw, link_bw=link_bw)
 
 
 def from_compiled(compiled, chips: int, model_flops: float = 0.0,

@@ -59,7 +59,10 @@ def batch_spmv(matrix, requests: Sequence, *, impl: str = "auto",
         if x.shape != (n,):
             raise ValueError(
                 f"request vector shape {x.shape} != matrix n ({n},)")
-    X = jnp.stack(xs, axis=1)                       # [n, k]
+    # promote across the whole batch: one low-precision request must not
+    # downcast its neighbours' columns
+    dtype = jnp.result_type(*xs)
+    X = jnp.stack([x.astype(dtype) for x in xs], axis=1)   # [n, k]
     if spmm_fn is not None:
         Y = spmm_fn(matrix, X)                      # [m, k]
     else:
@@ -120,8 +123,13 @@ class RequestBatcher:
         k = len(batch)
         n = self.matrix.shape[1]
         kp = min(_next_pow2(k), self.max_batch) if self.pad_pow2 else k
-        X = jnp.zeros((n, kp), batch[0].x.dtype)
-        X = X.at[:, :k].set(jnp.stack([r.x for r in batch], axis=1))
+        # the batch dtype is the promotion over every queued request, not
+        # whatever the first one happened to be — a mixed-dtype queue must
+        # not silently downcast later columns
+        dtype = jnp.result_type(*(r.x for r in batch))
+        X = jnp.zeros((n, kp), dtype)
+        X = X.at[:, :k].set(jnp.stack([r.x.astype(dtype) for r in batch],
+                                      axis=1))
         if self.spmm_fn is not None:
             Y = self.spmm_fn(self.matrix, X)
         else:

@@ -15,8 +15,12 @@ schedules one-liners over it:
 * ``partition_sellcs_nnz`` + ``spmm_merge_distributed`` — merge-path
   across the mesh: equal spans of *width-rows* regardless of slice
   boundaries (a dense row's slice is split mid-stream), partial slot
-  contributions combined with one ``psum`` — the cross-device carry-out
-  fixup, at the cost of an all-reduce on Y.
+  contributions combined with a ``psum`` — the cross-device carry-out
+  fixup, at the cost of an all-reduce on Y. With ``num_chunks > 1`` the
+  fixup is *pipelined*: the slot space is split into spans of consecutive
+  slices and each span's psum is issued right after its local compute, so
+  the collective hides under the next span's slice stream instead of
+  serializing after all of it (Eckstein & Mátyásfalvi, arXiv:1812.00904).
 
 Both shard_map bodies reuse the PR-1 compute verbatim: the k-tiled Pallas
 kernel (``kernels.sellcs_slots``) on TPU, its jnp twin
@@ -37,8 +41,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.distributed import _check_devices
 from repro.core.mergepath import balanced_row_bands
-from .kernels import LANE, choose_k_tile, sellcs_slots
-from .reference import _as_2d, sellcs_slots_ref
+from .kernels import LANE, choose_k_tile, sellcs_slots, sellcs_slots_chunk
+from .reference import _as_2d, sellcs_slots_chunk_ref, sellcs_slots_ref
 from .sellcs import SellCS
 
 
@@ -59,6 +63,11 @@ class ShardedSellCS(NamedTuple):
     slices_per_shard: int    # local slot space height ("row"; S for "merge")
     nnz: int
     schedule: str            # "row" | "merge"
+    chunk_plan: Optional[Tuple] = None
+                             # (num_chunks, spans) precomputed by
+                             #   partition_sellcs_nnz(num_chunks=) so the
+                             #   pipelined multiply never re-deals the
+                             #   stream host-side per call
 
 
 def partition_sellcs_rows(sc: SellCS, num_devices: int) -> ShardedSellCS:
@@ -100,12 +109,21 @@ def partition_sellcs_rows(sc: SellCS, num_devices: int) -> ShardedSellCS:
         sc.shape, C, S, Sp, sc.nnz, "row")
 
 
-def partition_sellcs_nnz(sc: SellCS, num_devices: int) -> ShardedSellCS:
+def partition_sellcs_nnz(sc: SellCS, num_devices: int, *,
+                         num_chunks: int = 1) -> ShardedSellCS:
     """Merge-style equal spans over the width-row stream (slices — and with
     them dense rows — may straddle devices). ``slice_of`` stays global:
     every device scatters into the full slot space and the carry-out is
-    fixed with one psum."""
+    fixed with a psum.
+
+    ``num_chunks > 1`` additionally precomputes the pipelined-fixup span
+    plan (``_chunk_substreams``) here, at convert time, so
+    ``spmm_merge_distributed(..., num_chunks=num_chunks)`` reuses it
+    instead of re-dealing the stream host-side on every multiply.
+    """
     _check_devices(num_devices)
+    if num_chunks < 1:
+        raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
     C = sc.chunk
     S = sc.num_slices
     data = np.asarray(sc.data)
@@ -126,10 +144,15 @@ def partition_sellcs_nnz(sc: SellCS, num_devices: int) -> ShardedSellCS:
             D[p, :ln] = data[a:b]
             Cc[p, :ln] = cols[a:b]
             So[p, :ln] = slice_of[a:b].astype(np.int32)
-    return ShardedSellCS(
+    sharded = ShardedSellCS(
         jnp.asarray(D), jnp.asarray(Cc), jnp.asarray(So),
         jnp.zeros((num_devices,), jnp.int32), sc.row_perm,
         sc.shape, C, S, S, sc.nnz, "merge")
+    if num_chunks > 1:
+        sharded = sharded._replace(
+            chunk_plan=(int(num_chunks),
+                        _chunk_substreams(sharded, num_chunks)))
+    return sharded
 
 
 def _prep(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh, axis: str,
@@ -162,6 +185,84 @@ def _prep(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh, axis: str,
         kt = k_tile
         x_pad = x2
     return x2, squeeze, k, kt, x_pad, use_pallas
+
+
+def _out_dtype(sharded: ShardedSellCS, x2: jax.Array, use_pallas: bool):
+    """The dtype the nonzero compute path would produce: the Pallas kernel
+    accumulates in float32; the jnp twin promotes (data, X)."""
+    if use_pallas:
+        return jnp.float32
+    return jnp.promote_types(sharded.data.dtype, x2.dtype)
+
+
+class _ChunkSpan(NamedTuple):
+    """One pipelined span of the slice stream: the merge partitioning
+    applied to a slice range (every device holds an equal share of THIS
+    span's width-rows, so all devices finish a span together and its psum
+    overlaps the next span's compute)."""
+    slice_start: int         # first global slice of the span
+    num_slices: int          # slices in the span (> 0)
+    data: jax.Array          # [P, Wc, C] — zero-padded equal shares
+    cols: jax.Array          # int32[P, Wc, C]
+    slice_of: jax.Array      # int32[P, Wc] — GLOBAL slice ids
+
+
+def _chunk_substreams(sharded: ShardedSellCS,
+                      num_chunks: int) -> Tuple[_ChunkSpan, ...]:
+    """Host-side: split the σ-sorted slice stream into ``num_chunks``
+    width-balanced slice spans (``balanced_row_bands`` over the cumulative
+    width, the same splitter both partitioners use) and re-partition EACH
+    span's width-rows equally across all devices.
+
+    The per-span re-partitioning is what makes the pipeline honest: the
+    merge psum sums slot partials over every device anyway, so a width-row
+    may live on any device — giving each device ``W_span / P`` rows of
+    every span keeps per-device compute at the monolithic ``W / P`` total
+    (no cross-span padding blow-up) and lets all devices reach span ``i``'s
+    psum at the same time, with span ``i+1``'s compute ready to hide it.
+
+    ``num_chunks > S`` degenerates to one span per nonempty slice (empty
+    bands are dropped); the spans exactly tile ``[0, S)`` in order.
+    """
+    data = np.asarray(sharded.data)                  # [P, Wp, C]
+    cols = np.asarray(sharded.cols)
+    so = np.asarray(sharded.slice_of, np.int64)      # [P, Wp] global ids
+    Pdev, _, C = data.shape
+    S = sharded.num_slices
+    nc = int(num_chunks)
+    # flatten back to the global width-row stream: device spans are
+    # contiguous and ordered, and all-zero padding rows carry no payload
+    real = np.any(data != 0, axis=2)                 # [P, Wp]
+    g_data = data[real]                              # [W', C] global order
+    g_cols = cols[real]
+    g_so = so[real]
+    widths = (np.bincount(g_so, minlength=S) if g_so.size
+              else np.zeros(S, np.int64))
+    slice_ptr = np.zeros(S + 1, np.int64)
+    np.cumsum(widths, out=slice_ptr[1:])
+    bounds = balanced_row_bands(slice_ptr, nc).astype(np.int64)
+    spans = []
+    for i in range(nc):
+        s0, s1 = int(bounds[i]), int(bounds[i + 1])
+        if s1 <= s0:
+            continue                                 # empty band (nc > S)
+        a, b = int(slice_ptr[s0]), int(slice_ptr[s1])
+        Wi = b - a
+        Wc = max(-(-Wi // Pdev), 1)
+        D = np.zeros((Pdev, Wc, C), data.dtype)
+        Cc = np.zeros((Pdev, Wc, C), np.int32)
+        So = np.full((Pdev, Wc), s0, np.int32)       # padding rebases to 0
+        db = (np.arange(Pdev + 1, dtype=np.int64) * Wi) // Pdev
+        for p in range(Pdev):
+            ln = int(db[p + 1] - db[p])
+            if ln:
+                D[p, :ln] = g_data[a + db[p]:a + db[p + 1]]
+                Cc[p, :ln] = g_cols[a + db[p]:a + db[p + 1]]
+                So[p, :ln] = g_so[a + db[p]:a + db[p + 1]].astype(np.int32)
+        spans.append(_ChunkSpan(s0, s1 - s0, jnp.asarray(D),
+                                jnp.asarray(Cc), jnp.asarray(So)))
+    return tuple(spans)      # nonempty: bounds pin [0, S] and S >= 1
+
 
 
 def _local_slots(data, cols, slice_of, x_rep, *, num_slices, chunk,
@@ -197,7 +298,7 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     x2, squeeze, k, kt, x_pad, use_pallas = _prep(
         sharded, x, mesh, axis, impl, k_tile, "row")
     if sharded.nnz == 0:
-        y = jnp.zeros((m, k), jnp.float32)
+        y = jnp.zeros((m, k), _out_dtype(sharded, x2, use_pallas))
         return y[:, 0] if squeeze else y
 
     def local(data, cols, slice_of, x_rep):
@@ -231,29 +332,85 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
 
 def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
                            axis: str = "data", *, impl: str = "ref",
-                           k_tile: Optional[int] = None) -> jax.Array:
-    """Y = A @ X with equal-width spans: per-device slot partials + one
-    psum carry-out fixup (the only collective). Survives the mawi dense-row
-    pathology — the dense slice splits mid-stream."""
+                           k_tile: Optional[int] = None,
+                           num_chunks: int = 1) -> jax.Array:
+    """Y = A @ X with equal-width spans: per-device slot partials + psum
+    carry-out fixup (the only collective). Survives the mawi dense-row
+    pathology — the dense slice splits mid-stream.
+
+    ``num_chunks > 1`` pipelines the fixup: the slice stream is split into
+    width-balanced spans of consecutive slices and each span's width-rows
+    are re-dealt equally across the devices (``_chunk_substreams``), so
+    every device reaches span ``i``'s psum together and XLA's async
+    all-reduce of span ``i`` overlaps the kernel of span ``i+1`` instead of
+    serializing after all local work. Only the true ``k`` columns cross the
+    wire — the ``kp - k`` k-tile padding columns never enter the
+    collective. Each slot is still reduced by exactly one psum, so the
+    result equals the monolithic schedule up to fp summation order.
+    ``num_chunks = 1`` is the monolithic schedule; ``num_chunks > S``
+    degenerates to one span per nonempty slice.
+    """
     m, n = sharded.shape
     C, S = sharded.chunk, sharded.num_slices
+    nc = int(num_chunks)
+    if nc < 1:
+        raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
     x2, squeeze, k, kt, x_pad, use_pallas = _prep(
         sharded, x, mesh, axis, impl, k_tile, "merge")
     if sharded.nnz == 0:
-        y = jnp.zeros((m, k), jnp.float32)
+        y = jnp.zeros((m, k), _out_dtype(sharded, x2, use_pallas))
         return y[:, 0] if squeeze else y
+    interpret = impl == "pallas_interpret"
 
-    def local(data, cols, slice_of, x_rep):
-        y_loc = _local_slots(data, cols, slice_of, x_rep, num_slices=S,
-                             chunk=C, use_pallas=use_pallas, k_tile=kt,
-                             interpret=impl == "pallas_interpret")
-        return jax.lax.psum(y_loc, axis)
+    if nc == 1:
+        def local(data, cols, slice_of, x_rep):
+            y_loc = _local_slots(data, cols, slice_of, x_rep, num_slices=S,
+                                 chunk=C, use_pallas=use_pallas, k_tile=kt,
+                                 interpret=interpret)
+            # all-reduce the true k columns only, not the k-tile padding
+            return jax.lax.psum(y_loc[:, :k], axis)
 
+        y_slots = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(axis, None, None), P(axis, None, None),
+                      P(axis, None), P(None, None)),
+            out_specs=P(None, None),
+            check_vma=False if use_pallas else None)(
+                sharded.data, sharded.cols, sharded.slice_of, x_pad)
+        return _unpermute(sharded, y_slots, k, squeeze)
+
+    if sharded.chunk_plan is not None and sharded.chunk_plan[0] == nc:
+        spans = sharded.chunk_plan[1]    # precomputed at partition time
+    else:
+        spans = _chunk_substreams(sharded, nc)
+    meta = [(sp.slice_start, sp.num_slices) for sp in spans]
+
+    def local(datas, colss, sos, x_rep):
+        # one (kernel -> psum) pair per span with no cross-span data
+        # dependency: the span-i all-reduce-start can run under the
+        # span-(i+1) kernel.
+        outs = []
+        for (s0, ns), data, cols, slice_of in zip(meta, datas, colss, sos):
+            if use_pallas:
+                y_c = sellcs_slots_chunk(
+                    data[0], cols[0], slice_of[0], x_rep, slice_start=s0,
+                    num_slices=ns, chunk=C, k_tile=kt, interpret=interpret)
+            else:
+                y_c = sellcs_slots_chunk_ref(
+                    data[0], cols[0], slice_of[0], x_rep, slice_start=s0,
+                    num_slices=ns, chunk=C)
+            outs.append(jax.lax.psum(y_c[:, :k], axis))
+        # span i's rows sit at global slots [s0*C, (s0 + ns)*C); the spans
+        # tile [0, S) in order, so concatenation IS the slot array
+        return jnp.concatenate(outs, axis=0)
+
+    span_spec = tuple(P(axis, None, None) for _ in spans)
     y_slots = shard_map(
         local, mesh=mesh,
-        in_specs=(P(axis, None, None), P(axis, None, None), P(axis, None),
-                  P(None, None)),
+        in_specs=(span_spec, span_spec,
+                  tuple(P(axis, None) for _ in spans), P(None, None)),
         out_specs=P(None, None),
         check_vma=False if use_pallas else None)(
-            sharded.data, sharded.cols, sharded.slice_of, x_pad)
+            tuple(sp.data for sp in spans), tuple(sp.cols for sp in spans),
+            tuple(sp.slice_of for sp in spans), x_pad)
     return _unpermute(sharded, y_slots, k, squeeze)

@@ -304,6 +304,26 @@ def sellcs_slots(data: jax.Array, cols: jax.Array, slice_of: jax.Array,
     )(slice_of, data, cols, x_pad)
 
 
+def sellcs_slots_chunk(data: jax.Array, cols: jax.Array,
+                       slice_of: jax.Array, x_pad: jax.Array, *,
+                       slice_start: int, num_slices: int, chunk: int,
+                       k_tile: int, interpret: bool = False) -> jax.Array:
+    """``sellcs_slots`` over one *chunk sub-stream* of the slice stream.
+
+    The chunked distributed merge schedule (``repro.spmm.distributed``)
+    splits the σ-sorted stream into spans of ``num_slices`` consecutive
+    slices so each span's psum can overlap the next span's compute.
+    ``slice_of`` stays GLOBAL in the sub-stream; this entry point rebases it
+    to the chunk-local slot space ``[num_slices * chunk, Kp]`` starting at
+    global slice ``slice_start``. Padding width-rows (zero data) may carry
+    any slice id — they are clipped into range and contribute nothing.
+    """
+    local = jnp.clip(slice_of.astype(jnp.int32) - slice_start, 0,
+                     max(num_slices - 1, 0))
+    return sellcs_slots(data, cols, local, x_pad, num_slices=num_slices,
+                        chunk=chunk, k_tile=k_tile, interpret=interpret)
+
+
 def _sellcs_spmm_slots(sc: SellCS, x_pad: jax.Array, *, k_tile: int,
                        interpret: bool = False) -> jax.Array:
     """Accumulate into σ-sorted row slots [S*C, Kp]; the caller undoes the

@@ -84,6 +84,18 @@ def sellcs_slots_ref(data: Array, cols: Array, slice_of: Array, x2: Array,
     return jnp.zeros((num_slices * chunk, k), dtype).at[slot].add(contrib)
 
 
+def sellcs_slots_chunk_ref(data: Array, cols: Array, slice_of: Array,
+                           x2: Array, *, slice_start: int, num_slices: int,
+                           chunk: int) -> Array:
+    """jnp twin of ``kernels.sellcs_slots_chunk``: slot accumulation over a
+    chunk sub-stream whose ``slice_of`` is still global, rebased to the
+    chunk-local slot space starting at ``slice_start``."""
+    local = jnp.clip(slice_of.astype(jnp.int32) - slice_start, 0,
+                     max(num_slices - 1, 0))
+    return sellcs_slots_ref(data, cols, local, x2, num_slices=num_slices,
+                            chunk=chunk)
+
+
 @jax.jit
 def spmm_sellcs(sc: SellCS, x: Array) -> Array:
     """Slice-structured SpMM: one gather + FMA per width-row, then a single

@@ -1,0 +1,82 @@
+"""benchmarks.smoke_check — the CI gates over BENCH_*.json emissions,
+including the chunked-psum overlap gate added with the pipelined merge
+schedule: where the sweep's own roofline prediction (model_us) says a
+pipelined depth beats the monolithic fixup, the best measured chunked row
+must not regress >10% vs the chunks=1 row; where the model predicts
+chunking loses (launch-dominated smoke sizes), nothing is gated."""
+import benchmarks.smoke_check as sk
+
+
+def _row(name, us, model_us=None, gflops=1.0):
+    derived = f"gflops={gflops}"
+    if model_us is not None:
+        derived += f";model_us={model_us}"
+    return {"section": "s", "name": name, "us_per_call": us,
+            "derived": derived}
+
+
+MERGE = "mawi_like/sellcs+merge@4dev"
+
+
+def test_chunk_gate_passes_when_chunked_is_fast():
+    records = [_row(f"{MERGE}/chunks=1/k=8", 100.0, model_us=10.0),
+               _row(f"{MERGE}/chunks=2/k=8", 105.0, model_us=6.0),
+               _row(f"{MERGE}/chunks=4/k=8", 140.0, model_us=5.0)]
+    assert sk.check_chunk_regressions(records, "f.json") == []
+    assert sk.check_records(records, "f.json") == []
+
+
+def test_chunk_gate_fails_on_regression_where_model_pays():
+    records = [_row(f"{MERGE}/chunks=1/k=8", 100.0, model_us=10.0),
+               _row(f"{MERGE}/chunks=2/k=8", 120.0, model_us=6.0),
+               _row(f"{MERGE}/chunks=4/k=8", 150.0, model_us=5.0)]
+    problems = sk.check_chunk_regressions(records, "f.json")
+    assert len(problems) == 1 and "chunks=2" in problems[0] \
+        and "1.20x" in problems[0]
+    # and the per-record rules surface it through check_records too
+    assert any("chunks=2" in p for p in sk.check_records(records, "f.json"))
+
+
+def test_chunk_gate_disarmed_when_model_predicts_loss():
+    """The smoke-scale case: launch-dominated psums make the model itself
+    predict chunking loses (model_us grows with depth) — a measured loss
+    is then the physics the model prices, not a regression."""
+    records = [_row(f"{MERGE}/chunks=1/k=8", 100.0, model_us=1.1),
+               _row(f"{MERGE}/chunks=2/k=8", 250.0, model_us=2.1),
+               _row(f"{MERGE}/chunks=4/k=8", 400.0, model_us=4.1)]
+    assert sk.check_chunk_regressions(records, "f.json") == []
+
+
+def test_chunk_gate_groups_by_matrix_and_k():
+    """k=16 regresses (model pays), k=8 does not; only k=16 is reported.
+    Rows of other schedules / old-format names never join a group."""
+    records = [_row(f"{MERGE}/chunks=1/k=16", 100.0, model_us=10.0),
+               _row(f"{MERGE}/chunks=2/k=16", 250.0, model_us=6.0),
+               _row(f"{MERGE}/chunks=1/k=8", 100.0, model_us=10.0),
+               _row(f"{MERGE}/chunks=2/k=8", 101.0, model_us=6.0),
+               _row("mawi_like/sellcs+row@4dev/k=16", 999.0, model_us=1.0),
+               _row("mawi_like/sellcs+merge@4dev/k=16", 999.0,
+                    model_us=1.0)]                           # PR-2 name
+    problems = sk.check_chunk_regressions(records, "f.json")
+    assert len(problems) == 1 and "/k=16" in problems[0]
+
+
+def test_chunk_gate_needs_baseline_and_model():
+    """Chunked rows without a chunks=1 row, or rows missing the model_us
+    field, gate nothing."""
+    assert sk.check_chunk_regressions(
+        [_row(f"{MERGE}/chunks=2/k=8", 500.0, model_us=1.0)], "f") == []
+    assert sk.check_chunk_regressions(
+        [_row(f"{MERGE}/chunks=1/k=8", 1.0, model_us=9.0)], "f") == []
+    assert sk.check_chunk_regressions(
+        [_row(f"{MERGE}/chunks=1/k=8", 100.0),
+         _row(f"{MERGE}/chunks=2/k=8", 500.0)], "f") == []   # no model_us
+
+
+def test_basic_rules_still_hold():
+    """The pre-existing NaN / zero-GFLOP/s rules are untouched."""
+    assert sk.check_records([], "f.json")                 # empty emission
+    bad = sk.check_records([_row("x/k=1", float("nan"))], "f.json")
+    assert any("not finite" in p for p in bad)
+    bad = sk.check_records([_row("x/k=1", 1.0, gflops=0)], "f.json")
+    assert any("must be finite and" in p for p in bad)

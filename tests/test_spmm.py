@@ -192,6 +192,44 @@ def test_autotune_k_smoke():
 # --------------------------------------------------------------------------
 # distributed (format x schedule x k) scoring
 # --------------------------------------------------------------------------
+def test_spmm_distributed_collective_s_chunked_overlap():
+    """ISSUE 3 acceptance: the chunked merge model's exposed collective
+    seconds are strictly below the monolithic model for k >= 8 on >= 2
+    devices (the psum hides under the slice stream)."""
+    from repro.roofline import (spmm_distributed_collective_s,
+                                spmm_distributed_time)
+    m = n = 100_000
+    nnz = 10_000_000
+    for k in (8, 64, 256):
+        for P in (2, 8):
+            mono = spmm_distributed_collective_s(m, n, k, P, "merge",
+                                                 nnz=nnz, num_chunks=1)
+            assert mono > 0.0
+            for c in (2, 4, 8):
+                over = spmm_distributed_collective_s(m, n, k, P, "merge",
+                                                     nnz=nnz, num_chunks=c)
+                assert 0.0 < over < mono, (k, P, c)
+            # the time model inherits the same strict ordering
+            assert spmm_distributed_time(m, n, k, P, "merge", nnz=nnz,
+                                         num_chunks=4) < \
+                spmm_distributed_time(m, n, k, P, "merge", nnz=nnz,
+                                      num_chunks=1)
+    # "row" has no collective to chunk; single device has no wire at all
+    assert spmm_distributed_collective_s(m, n, 8, 8, "row", nnz=nnz,
+                                         num_chunks=4) == 0.0
+    assert spmm_distributed_collective_s(m, n, 8, 1, "merge", nnz=nnz,
+                                         num_chunks=4) == 0.0
+    # per-psum launch cost keeps the optimum finite: absurd depths lose
+    tiny = spmm_distributed_collective_s(500, 500, 8, 8, "merge", nnz=4000,
+                                         num_chunks=1)
+    assert spmm_distributed_collective_s(500, 500, 8, 8, "merge", nnz=4000,
+                                         num_chunks=10_000) > tiny
+    import pytest as _pytest
+    with _pytest.raises(ValueError):
+        spmm_distributed_collective_s(m, n, 8, 8, "merge", nnz=nnz,
+                                      num_chunks=0)
+
+
 def test_spmm_distributed_traffic_model_properties():
     from repro.roofline import (spmm_distributed_time,
                                 spmm_distributed_traffic)
@@ -218,7 +256,9 @@ def test_spmm_distributed_traffic_model_properties():
 
 def test_select_distributed_schedule_tracks_skew_and_k():
     """The joint grid: heavy skew -> merge at small k (psum is cheap),
-    row at large k (psum bytes scale with k); uniform -> always row."""
+    row at large k (psum bytes scale with k); uniform -> always row. The
+    chunking axis does not flip either crossover: even fully pipelined,
+    the last chunk's psum drain keeps merge above row at large k."""
     from repro.core import select_distributed
     from repro.core.selector import MatrixStats
     mawi = MatrixStats(m=230_000, n=230_000, nnz=270_000_000,
@@ -235,6 +275,25 @@ def test_select_distributed_schedule_tracks_skew_and_k():
         select_distributed(uni, k=1, num_devices=0)
 
 
+def test_select_distributed_records_num_chunks():
+    """The grid gained a chunking axis: the choice is a named 3-tuple, the
+    row schedule always reports 1, and a merge-winning matrix with real
+    psum bytes picks a pipelined depth > 1."""
+    from repro.core import CHUNK_CANDIDATES, select_distributed
+    from repro.core.selector import DistributedChoice, MatrixStats
+    mawi = MatrixStats(m=230_000, n=230_000, nnz=270_000_000,
+                       max_row_nnz=120_000_000, row_var=1e9)
+    uni = MatrixStats(m=230_000, n=230_000, nnz=270_000_000,
+                      max_row_nnz=2_000, row_var=10.0)
+    choice = select_distributed(mawi, k=1, num_devices=8)
+    assert isinstance(choice, DistributedChoice)
+    assert choice.schedule == "merge" and choice.num_chunks in \
+        CHUNK_CANDIDATES and choice.num_chunks > 1
+    algo, sched, nc = choice                  # unpacks like a tuple
+    assert (algo, sched, nc) == tuple(choice)
+    assert select_distributed(uni, k=8, num_devices=8).num_chunks == 1
+
+
 def test_select_num_devices_keyword():
     """select(num_devices=P>1) routes through the joint grid and still
     returns a plain format name; num_devices=None keeps the old path."""
@@ -248,7 +307,7 @@ def test_select_num_devices_keyword():
 
 
 def test_autotune_num_devices_records_schedule():
-    from repro.core import autotune
+    from repro.core import CHUNK_CANDIDATES, autotune
     coo = to_coo(*matrices.uniform(150, 150, 1500, seed=4))
     best, results = autotune(coo, num_spmvs=3, reps=1, k=8, num_devices=8,
                              algorithms=("parcrs", "sellcs"))
@@ -256,6 +315,12 @@ def test_autotune_num_devices_records_schedule():
     assert all(r.schedule in ("row", "merge") for r in results)
     assert all(r.dist_model_s is not None and r.dist_model_s > 0
                for r in results)
+    # ISSUE 3 acceptance: the tuner records a num_chunks choice — 1 for
+    # the collective-free row schedule, a CHUNK_CANDIDATES entry for merge
+    assert all(r.num_chunks == 1 for r in results if r.schedule == "row")
+    assert all(r.num_chunks in CHUNK_CANDIDATES for r in results
+               if r.schedule == "merge")
+    assert best.num_chunks is not None and best.num_chunks >= 1
 
 
 # --------------------------------------------------------------------------
@@ -365,6 +430,43 @@ def test_batcher_pad_pow2_off_uses_exact_k():
         np.testing.assert_allclose(np.asarray(out[rid]),
                                    np.asarray(spmv_coo(coo, x)),
                                    rtol=RTOL, atol=ATOL)
+
+
+def test_batcher_mixed_dtype_queue_promotes():
+    """Regression: flush() used to build X with batch[0]'s dtype, silently
+    downcasting every later request — a float16 head request truncated its
+    float32 neighbours. The batch dtype is now the promotion over the whole
+    queue (and batch_spmv mirrors it)."""
+    coo = _matrices()["uniform"]
+    csr = coo_to_csr(coo)
+    seen = []
+
+    def probe(mat, X):
+        seen.append(X.dtype)
+        return M.spmm_ref(mat, X)
+
+    rng = np.random.default_rng(37)
+    x16 = jnp.asarray(rng.standard_normal(coo.shape[1]).astype(np.float16))
+    x32 = jnp.asarray(rng.standard_normal(coo.shape[1]).astype(np.float32))
+    b = M.RequestBatcher(csr, max_batch=8, spmm_fn=probe)
+    r16, r32 = b.submit(x16), b.submit(x32)      # low-precision head
+    out = b.flush()
+    assert seen == [jnp.float32]
+    # the f32 request keeps full precision (f16 truncation would miss)
+    np.testing.assert_allclose(np.asarray(out[r32]),
+                               np.asarray(spmv_coo(coo, x32)),
+                               rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(out[r16]),
+                               np.asarray(spmv_coo(coo, x16.astype(
+                                   jnp.float32))),
+                               rtol=1e-2, atol=1e-2)
+    # batch_spmv takes the same promotion path
+    seen.clear()
+    ys = M.batch_spmv(csr, [x16, x32], spmm_fn=probe)
+    assert seen == [jnp.float32]
+    np.testing.assert_allclose(np.asarray(ys[1]),
+                               np.asarray(spmv_coo(coo, x32)),
+                               rtol=RTOL, atol=ATOL)
 
 
 def test_batch_spmv_spmm_fn_override():

@@ -94,6 +94,99 @@ print("distributed pallas kernel body OK")
 """))
 
 
+def test_spmm_merge_chunked_matches_monolithic():
+    """ISSUE 3 acceptance: the chunked/pipelined merge schedule is
+    summation-equivalent (within fp tolerance) to the monolithic one for
+    num_chunks in {1, 2, 8}, k in {1, 8, 64}, including the mawi dense-row
+    case and the num_chunks > S degenerate setting."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.data import matrices
+from repro.launch.mesh import make_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz, spmm_coo,
+                        spmm_merge_distributed)
+mesh = make_mesh((8,), ("data",))
+for name, gen in [("uniform", matrices.uniform(500, 430, 4000, 0)),
+                  ("mawi_like", matrices.mawi_like(400, 400, 3000, 0.4, 1))]:
+    coo = to_coo(*gen)
+    sc = coo_to_sellcs(coo, c=16, sigma=64)
+    mrg = partition_sellcs_nnz(sc, 8)
+    S = sc.num_slices
+    for k in (1, 8, 64):
+        X = jnp.asarray(np.random.default_rng(k).standard_normal(
+            (coo.shape[1], k)).astype(np.float32))
+        yo = np.asarray(spmm_coo(coo, X))
+        y1 = np.asarray(spmm_merge_distributed(mrg, X, mesh, num_chunks=1))
+        np.testing.assert_allclose(y1, yo, rtol=1e-5, atol=1e-4,
+                                   err_msg=f"{name} k={k} monolithic")
+        for c in (2, 8, S + 5):        # S + 5 > S: empty tail chunks
+            yc = np.asarray(spmm_merge_distributed(mrg, X, mesh,
+                                                   num_chunks=c))
+            np.testing.assert_allclose(yc, y1, rtol=1e-6, atol=1e-5,
+                                       err_msg=f"{name} k={k} chunks={c}")
+    # the Pallas kernel body chunks identically (interpret mode off-TPU)
+    X = jnp.asarray(np.random.default_rng(3).standard_normal(
+        (coo.shape[1], 8)).astype(np.float32))
+    yc = np.asarray(spmm_merge_distributed(
+        mrg, X, mesh, impl="pallas_interpret", k_tile=4, num_chunks=3))
+    np.testing.assert_allclose(yc, np.asarray(spmm_coo(coo, X)),
+                               rtol=1e-5, atol=1e-4)
+    # partition-time span plan (the serve path) gives the same answer
+    baked = partition_sellcs_nnz(sc, 8, num_chunks=2)
+    assert baked.chunk_plan is not None and baked.chunk_plan[0] == 2
+    yb = np.asarray(spmm_merge_distributed(baked, X, mesh, num_chunks=2))
+    np.testing.assert_allclose(yb, np.asarray(spmm_coo(coo, X)),
+                               rtol=1e-5, atol=1e-4, err_msg=name)
+import pytest
+with pytest.raises(ValueError):
+    spmm_merge_distributed(mrg, X, mesh, num_chunks=0)
+print("chunked merge equivalence OK")
+"""))
+
+
+def test_spmm_distributed_dtype_follows_kernel():
+    """Regression: the nnz == 0 early-returns used to hardcode float32;
+    they must produce the dtype the nonzero kernel path would — the
+    (data, X) promotion on the ref path, which is also what the spmm_coo
+    oracle reports. An empty matrix (data stored float32) multiplied by a
+    complex64 X must come out complex64, not float32."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.launch.mesh import make_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, spmm_coo,
+                        spmm_merge_distributed, spmm_row_distributed)
+mesh = make_mesh((8,), ("data",))
+z = np.zeros(0, np.int32)
+empty = to_coo(z, z, np.zeros(0, np.float32), (6, 4))
+tiny = to_coo(np.array([0, 1, 2], np.int32), np.array([0, 1, 2], np.int32),
+              np.ones(3, np.float32), (6, 4))
+X16 = jnp.ones((4, 3), jnp.float16)
+Xc = jnp.ones((4, 3), jnp.complex64)
+se = coo_to_sellcs(empty, c=2, sigma=4)
+st = coo_to_sellcs(tiny, c=2, sigma=4)
+for part, fn in [(partition_sellcs_rows, spmm_row_distributed),
+                 (partition_sellcs_nnz, spmm_merge_distributed)]:
+    # the nonzero path and the oracle agree on the (data, X) promotion
+    y16 = fn(part(st, 8), X16, mesh)
+    assert y16.dtype == spmm_coo(tiny, X16).dtype, (fn.__name__, y16.dtype)
+    # nnz == 0 must take the same promotion, not hardcoded float32: with a
+    # complex64 X the nonzero path yields complex64, and so must this
+    ye = fn(part(se, 8), Xc, mesh)
+    assert ye.dtype == spmm_coo(empty, Xc).dtype == jnp.complex64, \\
+        (fn.__name__, ye.dtype)
+    assert np.abs(np.asarray(ye)).max() == 0
+# chunked merge keeps the same dtype contract as the monolithic schedule
+yc = spmm_merge_distributed(partition_sellcs_nnz(st, 8), X16, mesh,
+                            num_chunks=2)
+assert yc.dtype == spmm_merge_distributed(
+    partition_sellcs_nnz(st, 8), X16, mesh).dtype
+print("distributed dtype contract OK")
+"""))
+
+
 def test_sharded_coo_multi_rhs_and_batcher_distributed():
     """core.distributed accepts [n, k] X; RequestBatcher drives a
     distributed spmm_fn closure (partial last flush included)."""
