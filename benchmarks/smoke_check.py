@@ -26,6 +26,21 @@ smoke matrices, launch-dominated psums, host-platform meshes with no
 async collectives) are recorded but not gated — failing them would
 punish the code for physics the model already prices.
 
+Second cross-row rule (the 2-D mesh gate): for every
+``.../sellcs+<sched>@PdxPmmesh[/chunks=<c>]/k=<k>`` group emitted by
+``benchmarks.spmm_sweep --mesh``, rows that factor the same device total
+are compared across mesh shapes: IF the traffic model (``model_us``)
+says some model-sharded shape (``Pm > 1``) is at least as fast as the
+pure-data (``Pm = 1``) shape, the best measured model-sharded row must
+not run more than ``MESH_REGRESSION_TOLERANCE`` slower than the pure-data
+row — where the model says the model axis pays, column-sharding X/Y must
+never cost real time. Groups where the model predicts the model axis
+loses (small k, stream-dominated) are recorded but not gated, and so are
+rows measured on a backend without per-device memory (``backend=cpu`` —
+a host-platform mesh keeps "replicated" X as one shared buffer, so the
+model-axis byte saving is physically unobservable there and a measured
+loss is mesh overhead, not a bug).
+
 ``spmvs_to_amortize=inf`` and friends are legitimate (a format that never
 breaks even), so only the keys named above are validated.
 """
@@ -45,8 +60,17 @@ _ANALYTIC_PREFIXES = ("break_even.",)
 # best chunked merge row may be at most 10% slower than the monolithic one
 CHUNK_REGRESSION_TOLERANCE = 1.10
 
+# best model-sharded (Pm > 1) mesh row may be at most 10% slower than the
+# pure-data (Pm = 1) row of the same device total, where the model says the
+# model axis pays
+MESH_REGRESSION_TOLERANCE = 1.10
+
 _CHUNK_ROW_RE = re.compile(
     r"^(?P<base>.*sellcs\+merge@\d+dev)/chunks=(?P<c>\d+)/k=(?P<k>\d+)$")
+
+_MESH_ROW_RE = re.compile(
+    r"^(?P<base>.*sellcs\+(?:row|merge))@(?P<pd>\d+)x(?P<pm>\d+)mesh"
+    r"(?P<chunks>/chunks=\d+)?/k=(?P<k>\d+)$")
 
 
 def _derived_fields(derived: str) -> Iterator[Tuple[str, str]]:
@@ -64,6 +88,13 @@ def _model_us(rec: dict) -> Optional[float]:
             except ValueError:
                 return None
             return v if math.isfinite(v) else None
+    return None
+
+
+def _backend(rec: dict) -> Optional[str]:
+    for key, val in _derived_fields(str(rec.get("derived", ""))):
+        if key == "backend":
+            return val
     return None
 
 
@@ -106,6 +137,52 @@ def check_chunk_regressions(records: List[dict], origin: str) -> List[str]:
     return problems
 
 
+def check_mesh_regressions(records: List[dict], origin: str) -> List[str]:
+    """The 2-D mesh gate: per (row base, device total, chunks, k) group
+    whose own traffic model says some model-sharded (Pm > 1) factorization
+    is at least as fast as the pure-data (Pm = 1) one, the best measured
+    model-sharded row must stay within MESH_REGRESSION_TOLERANCE of the
+    pure-data row. Rows measured on a ``backend=cpu`` host-platform mesh
+    are never gated — there the replicated X is one shared buffer, so the
+    model-axis saving cannot show up in wall time."""
+    groups: Dict[Tuple[str, int, str, str],
+                 Dict[Tuple[int, int], Tuple[float, Optional[float]]]] = {}
+    for rec in records:
+        m = _MESH_ROW_RE.match(str(rec.get("name", "")))
+        us = rec.get("us_per_call")
+        if not m or not isinstance(us, (int, float)) or not \
+                math.isfinite(us) or us <= 0:
+            continue
+        if _backend(rec) in (None, "cpu"):
+            continue            # no per-device memory -> nothing to gate
+        pd, pm = int(m["pd"]), int(m["pm"])
+        key = (m["base"], pd * pm, m["chunks"] or "", m["k"])
+        groups.setdefault(key, {})[(pd, pm)] = (float(us), _model_us(rec))
+    problems = []
+    for (base, total, chunks, k), rows in sorted(groups.items()):
+        pure = next((r for (pd, pm), r in rows.items() if pm == 1), None)
+        sharded = {s: r for s, r in rows.items() if s[1] > 1}
+        if pure is None or not sharded:
+            continue                    # nothing to compare against
+        # arm the gate only where the model predicts the model axis pays
+        # at THIS size (otherwise a measured loss is physics, not a bug)
+        models = [r[1] for r in sharded.values()]
+        if pure[1] is None or any(mu is None for mu in models) or \
+                min(models) > pure[1]:
+            continue
+        (bpd, bpm), (best_us, _) = min(sharded.items(),
+                                       key=lambda t: t[1][0])
+        if best_us > MESH_REGRESSION_TOLERANCE * pure[0]:
+            problems.append(
+                f"{origin}:{base}@{total}dev{chunks}/k={k}: best "
+                f"model-sharded mesh row ({bpd}x{bpm}, {best_us:.4g} us) "
+                f"regresses {best_us / pure[0]:.2f}x over the pure-data "
+                f"row ({pure[0]:.4g} us) although the model predicts the "
+                f"model axis pays here; tolerance is "
+                f"{MESH_REGRESSION_TOLERANCE:.2f}x")
+    return problems
+
+
 def check_records(records: List[dict], origin: str) -> List[str]:
     """Return a list of human-readable violations (empty == clean)."""
     problems = []
@@ -133,6 +210,7 @@ def check_records(records: List[dict], origin: str) -> List[str]:
                 problems.append(f"{name}: {key}={val} must be finite and "
                                 "> 0")
     problems.extend(check_chunk_regressions(records, origin))
+    problems.extend(check_mesh_regressions(records, origin))
     return problems
 
 

@@ -16,6 +16,12 @@ been imported yet the host-platform device count is forced automatically.
 ``chunks=<c>`` row per count, so ``benchmarks.smoke_check`` can gate the
 chunked rows against the monolithic (``chunks=1``) baseline.
 
+``--mesh 8x1,4x2`` sweeps 2-D (data, model) mesh factorizations instead of
+(or next to) the 1-D ``--devices`` mesh: one ``@PdxPmmesh`` row group per
+shape, each with the 2-D traffic model's ``model_us`` prediction, so
+``smoke_check`` can gate the model-sharded rows against the pure-data
+(``Pm = 1``) baseline wherever the model says the model axis pays.
+
 Emits the same CSV columns and JSON schema as ``benchmarks.run``.
 """
 from __future__ import annotations
@@ -60,19 +66,18 @@ def sweep_matrix(name: str, coo, ks, impl: str, reps: int, csv) -> None:
                     f"ai_ideal={ai_ideal:.4f};roof_gflops={roof:.1f}")
 
 
-def sweep_distributed(name: str, coo, ks, devices: int, reps: int,
-                      csv, chunk_counts=(1,)) -> None:
-    """Distributed schedules on a `devices`-wide mesh (ref impl bodies —
-    the host-platform mesh has no TPU cores to feed the Pallas path).
-
-    The merge schedule is swept once per entry of ``chunk_counts`` (the
-    psum pipelining depth) so the BENCH trajectory records chunked rows
-    next to the monolithic (``chunks=1``) one; the row schedule has no
-    collective to chunk and appears once.
+def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
+                  chunk_counts, tag_of) -> None:
+    """Shared measurement core of ``sweep_distributed`` / ``sweep_mesh2d``:
+    both schedules per (P_data, P_model) shape (ref impl bodies — the
+    host-platform mesh has no TPU cores to feed the Pallas path), the
+    merge schedule once per ``chunk_counts`` entry, each row priced by the
+    (2-D) traffic model. ``tag_of(pd, pm)`` renders the mesh part of the
+    row name.
     """
     import jax
     import jax.numpy as jnp
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_spmm_mesh
     from repro.roofline import spmm_distributed_time, spmm_distributed_traffic
     from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
                             partition_sellcs_rows, spmm_merge_distributed,
@@ -83,41 +88,70 @@ def sweep_distributed(name: str, coo, ks, devices: int, reps: int,
     nnz = coo.nnz
     max_row = int(np.bincount(np.asarray(coo.rows), minlength=m).max()) \
         if nnz else 0
-    mesh = make_mesh((devices,), ("data",))
     sc = coo_to_sellcs(coo)
-    row_sharded = partition_sellcs_rows(sc, devices)
-    # one shared merge partition for every depth: the span re-deal happens
-    # at trace time inside the jitted closure, so no per-depth copies of
-    # the base device-dealt arrays are kept alive for the whole sweep
-    mrg_sharded = partition_sellcs_nnz(sc, devices)
-    variants = [("row", None,
-                 jax.jit(lambda X: spmm_row_distributed(
-                     row_sharded, X, mesh)))]
-    for c in chunk_counts:
-        variants.append(("merge", int(c),
-                         jax.jit(lambda X, c=int(c): spmm_merge_distributed(
-                             mrg_sharded, X, mesh, num_chunks=c))))
     rng = np.random.default_rng(1)
-    for sched, nc, jitted in variants:
-        tag = f"{name}/sellcs+{sched}@{devices}dev" + \
-            (f"/chunks={nc}" if nc is not None else "")
-        for k in ks:
-            X = jnp.asarray(rng.standard_normal((n, k)).astype(np.float32))
-            sec = harness.time_fn(lambda: jitted(X), reps=reps, warmup=1)
-            gflops = 2.0 * nnz * k / sec / 1e9
-            hbm, coll = spmm_distributed_traffic(
-                m, n, k, devices, sched, nnz=nnz, max_row_nnz=max_row)
-            model_s = spmm_distributed_time(
-                m, n, k, devices, sched, nnz=nnz, max_row_nnz=max_row,
-                num_chunks=nc or 1)
-            csv.row(f"{tag}/k={k}", sec,
-                    f"gflops={gflops:.4g};hbm_mb={hbm / 1e6:.4g};"
-                    f"coll_mb={coll / 1e6:.4g};model_us={model_s * 1e6:.4g}")
+    # the mesh gate needs to know whether the mesh had per-device memory:
+    # on a host-platform (cpu) mesh the "replicated" X is one shared buffer
+    # and column-sharding it saves nothing, so measured 2-D rows there are
+    # recorded but never gated (smoke_check.check_mesh_regressions)
+    backend = jax.default_backend()
+    for pd, pm in mesh_shapes:
+        mesh = make_spmm_mesh((pd, pm))
+        row_sharded = partition_sellcs_rows(sc, pd)
+        # one shared merge partition for every depth: the span re-deal
+        # happens at trace time inside the jitted closure, so no per-depth
+        # copies of the base device-dealt arrays stay alive for the sweep
+        mrg_sharded = partition_sellcs_nnz(sc, pd)
+        variants = [("row", None,
+                     jax.jit(lambda X, rs=row_sharded, me=mesh:
+                             spmm_row_distributed(rs, X, me)))]
+        for c in chunk_counts:
+            variants.append(
+                ("merge", int(c),
+                 jax.jit(lambda X, ms=mrg_sharded, me=mesh, c=int(c):
+                         spmm_merge_distributed(ms, X, me, num_chunks=c))))
+        for sched, nc, jitted in variants:
+            tag = f"{name}/sellcs+{sched}{tag_of(pd, pm)}" + \
+                (f"/chunks={nc}" if nc is not None else "")
+            for k in ks:
+                X = jnp.asarray(rng.standard_normal(
+                    (n, k)).astype(np.float32))
+                sec = harness.time_fn(lambda: jitted(X), reps=reps,
+                                      warmup=1)
+                gflops = 2.0 * nnz * k / sec / 1e9
+                hbm, coll = spmm_distributed_traffic(
+                    m, n, k, pd, sched, nnz=nnz, max_row_nnz=max_row,
+                    model_devices=pm)
+                model_s = spmm_distributed_time(
+                    m, n, k, pd, sched, nnz=nnz, max_row_nnz=max_row,
+                    num_chunks=nc or 1, model_devices=pm)
+                csv.row(f"{tag}/k={k}", sec,
+                        f"gflops={gflops:.4g};hbm_mb={hbm / 1e6:.4g};"
+                        f"coll_mb={coll / 1e6:.4g};"
+                        f"model_us={model_s * 1e6:.4g};"
+                        f"backend={backend}")
+
+
+def sweep_distributed(name: str, coo, ks, devices: int, reps: int,
+                      csv, chunk_counts=(1,)) -> None:
+    """Distributed schedules on a 1-D `devices`-wide data mesh: the
+    ``@{P}dev`` row family ``smoke_check``'s chunk gate consumes."""
+    _sweep_shapes(name, coo, ks, ((devices, 1),), reps, csv, chunk_counts,
+                  lambda pd, pm: f"@{pd}dev")
+
+
+def sweep_mesh2d(name: str, coo, ks, mesh_shapes, reps: int, csv,
+                 chunk_counts=(1,)) -> None:
+    """Both schedules over 2-D (data, model) mesh factorizations: the
+    ``@{Pd}x{Pm}mesh`` row family — include a ``Pm = 1`` shape to give
+    ``smoke_check``'s model-axis gate its pure-data baseline."""
+    _sweep_shapes(name, coo, ks, mesh_shapes, reps, csv, chunk_counts,
+                  lambda pd, pm: f"@{pd}x{pm}mesh")
 
 
 def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
         reps: int = 3, matrices_only=None, devices: int = 1,
-        chunk_counts=(1,)) -> None:
+        chunk_counts=(1,), mesh_shapes=()) -> None:
     from repro.data import matrices
     from . import harness
 
@@ -128,9 +162,12 @@ def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
         k *= 2
     suite = matrices.test_suite(scale=suite_scale)
     names = matrices_only or ["hhh_like", "livejournal_like", "mawi_like"]
-    title = f"SpMM k-sweep (impl={impl}, k in {ks}" + \
-        (f", devices={devices}, chunks={list(chunk_counts)})"
-         if devices > 1 else ")")
+    extra = ""
+    if devices > 1:
+        extra += f", devices={devices}, chunks={list(chunk_counts)}"
+    if mesh_shapes:
+        extra += f", meshes={['%dx%d' % s for s in mesh_shapes]}"
+    title = f"SpMM k-sweep (impl={impl}, k in {ks}{extra})"
     csv = harness.Csv(title)
     for name in names:
         if name not in suite:
@@ -140,6 +177,9 @@ def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
         if devices > 1:
             sweep_distributed(name, coo, ks, devices, reps, csv,
                               chunk_counts=chunk_counts)
+        if mesh_shapes:
+            sweep_mesh2d(name, coo, ks, mesh_shapes, reps, csv,
+                         chunk_counts=chunk_counts)
 
 
 def main(argv=None) -> None:
@@ -160,6 +200,11 @@ def main(argv=None) -> None:
                     help="comma-separated merge-psum pipelining depths to "
                          "sweep (with --devices); each count emits its own "
                          "chunks=<c> rows next to the monolithic chunks=1")
+    ap.add_argument("--mesh", default=None,
+                    help="comma-separated 2-D (data, model) mesh shapes to "
+                         "sweep as PdxPm, e.g. 8x1,4x2 — include a Pm=1 "
+                         "shape so smoke_check's model-axis gate has its "
+                         "pure-data baseline")
     args = ap.parse_args(argv)
     try:
         chunk_counts = tuple(int(c) for c in args.chunks.split(",") if c)
@@ -168,19 +213,32 @@ def main(argv=None) -> None:
                          f"{args.chunks!r}")
     if not chunk_counts or any(c < 1 for c in chunk_counts):
         raise SystemExit(f"--chunks entries must be >= 1, got {args.chunks!r}")
+    mesh_shapes = ()
+    if args.mesh:
+        try:
+            mesh_shapes = tuple(
+                tuple(int(p) for p in s.split("x"))
+                for s in args.mesh.split(",") if s)
+        except ValueError:
+            raise SystemExit(f"--mesh must be comma-separated PdxPm "
+                             f"entries, got {args.mesh!r}")
+        if any(len(s) != 2 or s[0] < 1 or s[1] < 1 for s in mesh_shapes):
+            raise SystemExit(f"--mesh entries must be PdxPm with both "
+                             f">= 1, got {args.mesh!r}")
 
-    if args.devices > 1 and "jax" not in sys.modules:
+    need = max([args.devices] + [pd * pm for pd, pm in mesh_shapes])
+    if need > 1 and "jax" not in sys.modules:
         # must happen before the first jax import anywhere in the process
         os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.devices} "
+            f"--xla_force_host_platform_device_count={need} "
             + os.environ.get("XLA_FLAGS", ""))
-    if args.devices > 1:
+    if need > 1:
         import jax
-        if len(jax.devices()) < args.devices:
+        if len(jax.devices()) < need:
             raise SystemExit(
-                f"--devices {args.devices} but jax sees "
+                f"the sweep needs {need} devices but jax sees "
                 f"{len(jax.devices())}; set XLA_FLAGS="
-                f"--xla_force_host_platform_device_count={args.devices} "
+                f"--xla_force_host_platform_device_count={need} "
                 "before any jax import")
 
     from . import harness
@@ -188,7 +246,8 @@ def main(argv=None) -> None:
     run(suite_scale=args.scale, kmax=args.kmax, impl=args.impl,
         reps=args.reps,
         matrices_only=args.matrices.split(",") if args.matrices else None,
-        devices=args.devices, chunk_counts=chunk_counts)
+        devices=args.devices, chunk_counts=chunk_counts,
+        mesh_shapes=mesh_shapes)
     if args.json:
         harness.dump_json(args.json)
 

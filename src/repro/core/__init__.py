@@ -15,8 +15,8 @@ from .mergepath import (MergePartition, balanced_row_bands,
                         span_block_aligned)
 from .selector import (CHUNK_CANDIDATES, SCHEDULES, DistributedChoice,
                        MachineSpec, MatrixStats, amortized_cost,
-                       break_even_spmvs, matrix_stats, select,
-                       select_algorithm, select_distributed,
+                       break_even_spmvs, matrix_stats, mesh_factorizations,
+                       select, select_algorithm, select_distributed,
                        spmm_cost_scale)
 from .autotune import TuneResult, autotune
 from .spmv import (spmv, spmv_blocked, spmv_coo, spmv_csr, spmv_dense_oracle,
@@ -32,7 +32,7 @@ __all__ = [
     "morton_key", "MergePartition", "balanced_row_bands",
     "merge_path_partition", "merge_path_partition_np", "span_block_aligned",
     "MachineSpec", "MatrixStats", "SCHEDULES", "CHUNK_CANDIDATES",
-    "DistributedChoice", "amortized_cost",
+    "DistributedChoice", "amortized_cost", "mesh_factorizations",
     "break_even_spmvs", "matrix_stats", "select", "select_algorithm",
     "select_distributed", "spmm_cost_scale", "autotune",
     "TuneResult", "spmv", "spmv_blocked", "spmv_coo",

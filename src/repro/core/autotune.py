@@ -47,6 +47,9 @@ class TuneResult:
     dist_model_s: Optional[float] = None  # modelled distributed multiply
     num_chunks: Optional[int] = None  # psum pipelining depth ("merge";
                                       #   1 = monolithic fixup)
+    mesh_shape: Optional[Tuple[int, int]] = None
+                                      # (P_data, P_model) factorization the
+                                      #   distributed score picked
 
 
 def _measure(fn: Callable, reps: int = 5, warmup: int = 2) -> float:
@@ -149,23 +152,25 @@ def autotune(coo: COO, *, num_spmvs: int = 100,
 def _rescore_distributed(r: TuneResult, stats, k: int, num_devices: int,
                          num_spmvs: int) -> TuneResult:
     """Scale a measured single-device result across the mesh with the
-    roofline traffic model and pick the best (schedule, num_chunks) for
-    it — "merge" sweeps the psum pipelining depths, "row" has no
-    collective to chunk."""
+    roofline traffic model and pick the best (schedule, mesh shape,
+    num_chunks) for it — "merge" sweeps the psum pipelining depths, "row"
+    has no collective to chunk, and both sweep every (P_data, P_model)
+    factorization of the mesh."""
     from repro.roofline.analysis import spmm_distributed_time
     from .selector import _matrix_bytes_est, distributed_schedule_grid
     mat_bytes = _matrix_bytes_est(r.algorithm, stats)
     base_s = spmm_distributed_time(stats.m, stats.n, k, 1, "row",
                                    matrix_bytes=mat_bytes)
-    grid = distributed_schedule_grid()
-    (schedule, num_chunks), model_s = min(
-        (((s, nc), spmm_distributed_time(stats.m, stats.n, k, num_devices,
-                                         s, matrix_bytes=mat_bytes,
-                                         max_row_nnz=stats.max_row_nnz,
-                                         num_chunks=nc))
-         for s, nc in grid), key=lambda t: t[1])
+    grid = distributed_schedule_grid(num_devices)
+    (schedule, num_chunks, mesh_shape), model_s = min(
+        (((s, nc, mesh),
+          spmm_distributed_time(stats.m, stats.n, k, mesh[0],
+                                s, matrix_bytes=mat_bytes,
+                                max_row_nnz=stats.max_row_nnz,
+                                num_chunks=nc, model_devices=mesh[1]))
+         for s, nc, mesh in grid), key=lambda t: t[1])
     per_multiply = r.spmv_s * (model_s / max(base_s, 1e-30))
     return dataclasses.replace(
         r, total_s=r.convert_s + num_spmvs * per_multiply,
         num_devices=num_devices, schedule=schedule, dist_model_s=model_s,
-        num_chunks=num_chunks)
+        num_chunks=num_chunks, mesh_shape=mesh_shape)

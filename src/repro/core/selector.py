@@ -203,13 +203,18 @@ def select(stats: MatrixStats, machine: Optional[MachineSpec] = None,
     scoring of :func:`select_distributed` — format and cross-device
     schedule must be chosen together (replicated-X bytes and the merge
     psum both enter the modelled intensity), and the paper's NUMA prior
-    alone cannot see either. The return value stays a format name; call
-    ``select_distributed`` directly when the schedule is needed too.
+    alone cannot see either. A caller-measured ``throughput`` table is
+    threaded through (it rescales each format's single-device multiply
+    exactly as in :func:`amortized_cost`; the traffic model then carries it
+    across the mesh). The return value stays a format name; call
+    ``select_distributed`` directly when the schedule, mesh shape or
+    chunking depth is needed too.
     """
     if num_devices is not None and num_devices > 1:
         return select_distributed(
             stats, k=k, num_devices=num_devices, num_spmvs=num_spmvs,
-            conversion_cost=conversion_cost).algorithm
+            conversion_cost=conversion_cost,
+            throughput=throughput).algorithm
     if machine is None:
         machine = MachineSpec(num_devices or 1)
     if k <= 1:
@@ -239,7 +244,8 @@ def select(stats: MatrixStats, machine: Optional[MachineSpec] = None,
 
 
 # --------------------------------------------------------------------------
-# Distributed extension: the (format × schedule × k × devices × chunks) grid
+# Distributed extension:
+# the (format × schedule × k × mesh shape × chunks) grid
 # --------------------------------------------------------------------------
 SCHEDULES = ("row", "merge")
 
@@ -248,14 +254,38 @@ SCHEDULES = ("row", "merge")
 CHUNK_CANDIDATES = (1, 2, 4, 8)
 
 
-def distributed_schedule_grid(pinned_chunks: Optional[int] = None,
+def mesh_factorizations(num_devices: int) -> list:
+    """Every (P_data, P_model) factorization of ``num_devices``, pure-data
+    first — ties in the scored grid then keep the 1-D mesh, which is the
+    pre-2-D behavior."""
+    if num_devices < 1:
+        raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+    return [(num_devices // pm, pm) for pm in range(1, num_devices + 1)
+            if num_devices % pm == 0]
+
+
+def distributed_schedule_grid(num_devices: int = 1,
+                              pinned_chunks: Optional[int] = None,
                               chunk_candidates: Tuple[int, ...] =
-                              CHUNK_CANDIDATES) -> list:
-    """The (schedule × psum-chunking) axis of the distributed grid, shared
-    by :func:`select_distributed`, ``core.autotune`` and ``launch.serve``
-    so the merge-only chunk rule lives in exactly one place: "merge"
-    sweeps the pipelining depths (or a single pinned depth), "row" has no
-    collective to chunk and always pairs with depth 1."""
+                              CHUNK_CANDIDATES,
+                              pinned_mesh: Optional[Tuple[int, int]] = None
+                              ) -> list:
+    """The (schedule × mesh shape × psum-chunking) axes of the distributed
+    grid, shared by :func:`select_distributed`, ``core.autotune`` and
+    ``launch.serve`` so the merge-only chunk rule and the mesh sweep live
+    in exactly one place. Entries are ``(schedule, num_chunks,
+    (P_data, P_model))``: "merge" sweeps the pipelining depths (or a single
+    pinned depth), "row" has no collective to chunk and always pairs with
+    depth 1; the mesh axis sweeps every (P_data, P_model) factorization of
+    ``num_devices`` unless ``pinned_mesh`` fixes one."""
+    if pinned_mesh is not None:
+        pd, pm = int(pinned_mesh[0]), int(pinned_mesh[1])
+        if pd < 1 or pm < 1:
+            raise ValueError(f"pinned_mesh must be positive, got "
+                             f"{pinned_mesh}")
+        meshes = [(pd, pm)]
+    else:
+        meshes = mesh_factorizations(num_devices)
     grid = []
     for schedule in SCHEDULES:
         if schedule == "merge":
@@ -263,7 +293,8 @@ def distributed_schedule_grid(pinned_chunks: Optional[int] = None,
                       else chunk_candidates)
         else:
             chunks = (1,)
-        grid.extend((schedule, int(nc)) for nc in chunks)
+        grid.extend((schedule, int(nc), mesh)
+                    for mesh in meshes for nc in chunks)
     return grid
 
 # Formats with an executable mesh multiply: "parcrs" drives the ShardedCOO
@@ -276,21 +307,26 @@ DISTRIBUTED_ALGOS = ("parcrs", "sellcs")
 
 
 class DistributedChoice(NamedTuple):
-    """Winner of the joint (format × schedule × chunks) grid. Unpacks like
-    the old ``(format, schedule)`` pair with ``num_chunks`` riding third."""
+    """Winner of the joint (format × schedule × mesh × chunks) grid.
+    Unpacks like the old ``(format, schedule, num_chunks)`` triple with
+    ``mesh_shape`` — the chosen (P_data, P_model) factorization — riding
+    fourth."""
     algorithm: str
     schedule: str
     num_chunks: int
+    mesh_shape: Tuple[int, int] = (1, 1)
 
 
 def select_distributed(stats: MatrixStats, *, k: int = 1,
                        num_devices: int = 1, num_spmvs: int = 1000,
                        conversion_cost: Optional[Dict[str, float]] = None,
                        dtype_bytes: int = 4,
-                       chunk_candidates: Tuple[int, ...] = CHUNK_CANDIDATES
+                       chunk_candidates: Tuple[int, ...] = CHUNK_CANDIDATES,
+                       mesh_shape: Optional[Tuple[int, int]] = None,
+                       throughput: Optional[Dict[str, float]] = None
                        ) -> DistributedChoice:
-    """Joint (format, cross-device schedule, psum chunking) choice for a
-    mesh of ``num_devices`` devices multiplying a ``[n, k]`` block
+    """Joint (format, cross-device schedule, mesh shape, psum chunking)
+    choice for ``num_devices`` devices multiplying a ``[n, k]`` block
     ``num_spmvs`` times.
 
     Scored entirely with the ``repro.roofline`` traffic model
@@ -301,9 +337,20 @@ def select_distributed(stats: MatrixStats, *, k: int = 1,
     for "merge" — the *exposed* psum seconds after pipelining the fixup
     into ``num_chunks`` spans (chunked collectives hide under the slice
     stream; each chunk pays a launch, so the optimum depth is finite).
-    Times are normalized to the single-device ParCRS stream so the paper's
-    conversion-cost priors keep their units, then amortized exactly like
-    :func:`amortized_cost`.
+    The mesh axis sweeps every (P_data, P_model) factorization of
+    ``num_devices`` (``mesh_shape`` pins one): a ``model`` axis divides
+    every k-proportional byte term by P_model at the cost of a shallower
+    matrix-stream split, so it starts paying once k is large enough that
+    X/Y/psum bytes dominate the stream. Times are normalized to the
+    single-device ParCRS stream so the paper's conversion-cost priors keep
+    their units, then amortized exactly like :func:`amortized_cost`.
+
+    A caller-measured ``throughput`` table (same schema as
+    :func:`select_algorithm`'s) replaces the modelled single-device ratio
+    between formats: per-multiply cost becomes ``thr["parcrs"] / thr[algo]``
+    scaled by the *mesh ratio* of the traffic model — measured where a
+    measurement exists, modelled only across the mesh the caller cannot
+    run. Without it the model prices both axes alone.
 
     Returns a :class:`DistributedChoice`; ``num_devices = 1`` degrades to
     the single-device model where both schedules tie and "row" wins by
@@ -317,24 +364,46 @@ def select_distributed(stats: MatrixStats, *, k: int = 1,
         raise ValueError(f"k must be >= 1, got {k}")
     conv = dict(conversion_cost or DEFAULT_CONVERSION_COST)
     conv.setdefault("sellcs", SELLCS_CONVERSION_COST)
+    thr = None
+    if throughput is not None:
+        thr = dict(throughput)
+        if "sellcs" not in thr:
+            skewed = stats.has_dense_row or \
+                _row_skew(stats) > _VVAR_SKEW_THRESHOLD
+            bonus = SELLCS_SKEW_BONUS if skewed else SELLCS_BASE_BONUS
+            thr["sellcs"] = thr.get("csb", min(thr.values())) * bonus
     base_s = spmm_distributed_time(
         stats.m, stats.n, 1, 1, "row",
         matrix_bytes=_matrix_bytes_est("parcrs", stats, dtype_bytes),
         dtype_bytes=dtype_bytes)
-    grid = distributed_schedule_grid(chunk_candidates=chunk_candidates)
+    grid = distributed_schedule_grid(num_devices,
+                                     chunk_candidates=chunk_candidates,
+                                     pinned_mesh=mesh_shape)
     best, best_cost = None, math.inf
     for algo in DISTRIBUTED_ALGOS:
         mat_bytes = _matrix_bytes_est(algo, stats, dtype_bytes)
-        for schedule, nc in grid:
+        if thr is not None:
+            # measured single-device multiply, carried across the mesh by
+            # the model's (mesh time / single-device time) ratio per format
+            algo_base_s = spmm_distributed_time(
+                stats.m, stats.n, k, 1, "row", matrix_bytes=mat_bytes,
+                dtype_bytes=dtype_bytes)
+            measured = thr["parcrs"] / thr[algo] * spmm_cost_scale(
+                algo, stats, k, dtype_bytes)
+        for schedule, nc, (pd, pm) in grid:
             sec = spmm_distributed_time(
-                stats.m, stats.n, k, num_devices, schedule,
+                stats.m, stats.n, k, pd, schedule,
                 matrix_bytes=mat_bytes, dtype_bytes=dtype_bytes,
-                max_row_nnz=stats.max_row_nnz, num_chunks=nc)
-            per_spmv = sec / max(base_s, 1e-30)
+                max_row_nnz=stats.max_row_nnz, num_chunks=nc,
+                model_devices=pm)
+            if thr is None:
+                per_spmv = sec / max(base_s, 1e-30)
+            else:
+                per_spmv = measured * sec / max(algo_base_s, 1e-30)
             cost = conv[algo] + num_spmvs * per_spmv
             # "or best is None" keeps a valid choice even when every
             # cost is inf (e.g. all-inf conversion priors)
             if cost < best_cost or best is None:
-                best = DistributedChoice(algo, schedule, nc)
+                best = DistributedChoice(algo, schedule, nc, (pd, pm))
                 best_cost = cost
     return best

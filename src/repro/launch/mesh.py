@@ -43,6 +43,33 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...],
     return jax.make_mesh(shape, axes, devices=devs[:need], **kw)
 
 
+def make_spmm_mesh(mesh_shape: Tuple[int, int],
+                   devices: Optional[Sequence] = None) -> Mesh:
+    """Mesh for the distributed SpMM schedules from a (P_data, P_model)
+    factorization: 1-D ``("data",)`` when the model axis is trivial (the
+    pre-2-D layout every existing call site uses), 2-D ``("data", "model")``
+    otherwise — ``repro.spmm.distributed`` auto-adopts the ``model`` axis
+    and shards the X/Y k-slabs across it."""
+    pd, pm = int(mesh_shape[0]), int(mesh_shape[1])
+    if pd < 1 or pm < 1:
+        raise ValueError(f"mesh_shape must be positive, got {mesh_shape}")
+    if pm == 1:
+        return make_mesh((pd,), ("data",), devices=devices)
+    return make_mesh((pd, pm), ("data", "model"), devices=devices)
+
+
+def parse_mesh_shape(spec: str) -> Tuple[int, int]:
+    """Parse a ``"Pd,Pm"`` (or ``"PdxPm"``) CLI mesh argument."""
+    parts = spec.replace("x", ",").split(",")
+    try:
+        pd, pm = (int(p) for p in parts)
+    except ValueError:
+        raise SystemExit(f"--mesh must be Pd,Pm (two ints), got {spec!r}")
+    if pd < 1 or pm < 1:
+        raise SystemExit(f"--mesh entries must be >= 1, got {spec!r}")
+    return pd, pm
+
+
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     """Axes carrying the batch dimension."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

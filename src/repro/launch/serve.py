@@ -14,11 +14,14 @@ amortized over the batch), measured against serving them one by one:
 Mesh serving — ``--devices P`` answers each flush with a *distributed*
 SpMM over a P-device mesh (``repro.spmm.distributed``); format,
 cross-device schedule and the merge-psum pipelining depth come from the
-``core.select_distributed`` grid (``--chunks c`` pins the depth). On CPU,
-force host-platform devices first:
+``core.select_distributed`` grid (``--chunks c`` pins the depth).
+``--mesh Pd,Pm`` pins a 2-D (data, model) factorization instead: the model
+axis column-shards the X/Y k-slabs so per-device psum and replicated-X
+bytes drop by Pm — the k ≫ 128 scaling axis. On CPU, force host-platform
+devices first:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --mode spmv --matrix mawi_like \
-      --requests 64 --max-batch 32 --devices 8 --impl ref --chunks 4
+      --requests 64 --max-batch 32 --mesh 4,2 --impl ref --chunks 4
 """
 from __future__ import annotations
 
@@ -42,62 +45,70 @@ def _pick_chunk(m: int, num_devices: int, default: int = 128) -> int:
     return c
 
 
-def _make_distributed_spmm(coo, stats, args):
-    """Build (matrix, spmm_fn, label, schedule, chunks) for the --devices
-    path."""
+def _make_distributed_spmm(coo, stats, args, mesh_shape):
+    """Build (matrix, spmm_fn, label, schedule, chunks, mesh_shape) for
+    the --devices / --mesh path. ``mesh_shape`` is a (P_data, P_model)
+    factorization, or None to let the traffic model keep the 1-D mesh
+    (the --devices behavior)."""
     from repro.core.selector import (_matrix_bytes_est,
                                      distributed_schedule_grid)
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_spmm_mesh
     from repro.roofline import spmm_distributed_time
     from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
                             partition_sellcs_rows, spmm_merge_distributed,
                             spmm_row_distributed)
 
+    total = args.devices
     ndev = len(jax.devices())
-    if ndev < args.devices:
+    if ndev < total:
         raise SystemExit(
-            f"--devices {args.devices} but jax sees only {ndev}; on CPU "
-            "set XLA_FLAGS=--xla_force_host_platform_device_count="
-            f"{args.devices} before launching")
+            f"the mesh needs {total} devices but jax sees only {ndev}; on "
+            "CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{total} before launching")
     if args.algorithm and args.algorithm != "sellcs":
         raise SystemExit(
             f"--algorithm {args.algorithm} cannot be served on a mesh: the "
             "--devices path multiplies the SELL-C-σ slice stream "
             "(repro.spmm.distributed); drop --algorithm or pass sellcs")
-    mesh = make_mesh((args.devices,), ("data",))
     # the executable mesh format is the SELL-C-σ slice stream, so score the
-    # (schedule × chunks) grid with sellcs's own byte footprint (conversion
-    # cost is shared by every candidate, so it drops out); --chunks pins
-    # the merge psum pipelining depth instead of modelling it
+    # (schedule × mesh × chunks) grid with sellcs's own byte footprint
+    # (conversion cost is shared by every candidate, so it drops out);
+    # --chunks pins the merge psum pipelining depth and --mesh the
+    # (P_data, P_model) factorization instead of modelling them
     sellcs_bytes = _matrix_bytes_est("sellcs", stats)
     grid = distributed_schedule_grid(
-        pinned_chunks=args.chunks if args.chunks > 0 else None)
-    schedule, chunks = min(grid, key=lambda t: spmm_distributed_time(
-        stats.m, stats.n, args.max_batch, args.devices, t[0],
-        matrix_bytes=sellcs_bytes, max_row_nnz=stats.max_row_nnz,
-        num_chunks=t[1]))
-    sc = coo_to_sellcs(coo, c=_pick_chunk(stats.m, args.devices))
+        total, pinned_chunks=args.chunks if args.chunks > 0 else None,
+        pinned_mesh=mesh_shape or (total, 1))
+    (schedule, chunks, mesh_shape) = min(
+        grid, key=lambda t: spmm_distributed_time(
+            stats.m, stats.n, args.max_batch, t[2][0], t[0],
+            matrix_bytes=sellcs_bytes, max_row_nnz=stats.max_row_nnz,
+            num_chunks=t[1], model_devices=t[2][1]))
+    pd, pm = mesh_shape
+    mesh = make_spmm_mesh(mesh_shape)
+    sc = coo_to_sellcs(coo, c=_pick_chunk(stats.m, pd))
     impl = "ref" if args.impl == "auto" and \
         jax.default_backend() != "tpu" else args.impl
     if impl == "auto":
         impl = "pallas"
+    mesh_tag = f"{pd}x{pm}mesh" if pm > 1 else f"{pd}dev"
     if schedule == "row":
-        sharded = partition_sellcs_rows(sc, args.devices)
+        sharded = partition_sellcs_rows(sc, pd)
         jitted = jax.jit(lambda X: spmm_row_distributed(
             sharded, X, mesh, impl=impl))
-        label = f"sellcs+row@{args.devices}dev"
+        label = f"sellcs+row@{mesh_tag}"
     else:
         # the span plan is baked at partition time; the multiply reuses it
-        sharded = partition_sellcs_nnz(sc, args.devices, num_chunks=chunks)
+        sharded = partition_sellcs_nnz(sc, pd, num_chunks=chunks)
         jitted = jax.jit(lambda X: spmm_merge_distributed(
             sharded, X, mesh, impl=impl, num_chunks=chunks))
-        label = f"sellcs+merge@{args.devices}dev/chunks={chunks}"
+        label = f"sellcs+merge@{mesh_tag}/chunks={chunks}"
     # the jitted closure keeps repeated flushes of one batch shape from
     # retracing the shard_map body
 
     def spmm_fn(_mat, X):
         return jitted(X)
-    return sc, spmm_fn, label, schedule, chunks
+    return sc, spmm_fn, label, schedule, chunks, mesh_shape
 
 
 def serve_spmv(args):
@@ -118,9 +129,14 @@ def serve_spmv(args):
     num_spmms = -(-args.requests // args.max_batch)
     spmm_fn = sched = None
     chunks = 1
+    mesh_shape = None
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh_shape
+        mesh_shape = parse_mesh_shape(args.mesh)
+        args.devices = mesh_shape[0] * mesh_shape[1]
     if args.devices > 1:
-        mat, spmm_fn, algo, sched, chunks = _make_distributed_spmm(
-            coo, stats, args)
+        mat, spmm_fn, algo, sched, chunks, mesh_shape = \
+            _make_distributed_spmm(coo, stats, args, mesh_shape)
     else:
         algo = args.algorithm or select(stats, MachineSpec(1),
                                         num_spmvs=num_spmms,
@@ -167,16 +183,18 @@ def serve_spmv(args):
     if args.devices > 1:
         from repro.roofline import (spmm_distributed_collective_s,
                                     spmm_distributed_traffic)
+        pd, pm = mesh_shape
         hbm, coll = spmm_distributed_traffic(
-            stats.m, stats.n, args.max_batch, args.devices, sched,
-            nnz=stats.nnz, max_row_nnz=stats.max_row_nnz)
+            stats.m, stats.n, args.max_batch, pd, sched,
+            nnz=stats.nnz, max_row_nnz=stats.max_row_nnz, model_devices=pm)
         print(f"[serve-spmv] modelled per-device traffic: {hbm / 1e6:.2f} MB "
               f"HBM + {coll / 1e6:.2f} MB collective per flush "
-              f"({args.devices} devices, schedule={sched}, chunks={chunks})")
+              f"(mesh=({pd},{pm}), schedule={sched}, chunks={chunks})")
         if sched == "merge":
             mono, over = (spmm_distributed_collective_s(
-                stats.m, stats.n, args.max_batch, args.devices, sched,
-                nnz=stats.nnz, max_row_nnz=stats.max_row_nnz, num_chunks=c)
+                stats.m, stats.n, args.max_batch, pd, sched,
+                nnz=stats.nnz, max_row_nnz=stats.max_row_nnz, num_chunks=c,
+                model_devices=pm)
                 for c in (1, chunks))
             print(f"[serve-spmv] exposed collective_s: {mono * 1e6:.2f} us "
                   f"monolithic -> {over * 1e6:.2f} us with {chunks} "
@@ -197,8 +215,14 @@ def main(argv=None):
                     help="force a format (default: core.select with k)")
     ap.add_argument("--devices", type=int, default=1,
                     help="serve each flush with a distributed SpMM over a "
-                         "mesh of this many devices (schedule chosen by "
-                         "core.select_distributed)")
+                         "1-D data mesh of this many devices (schedule "
+                         "chosen by core.select_distributed)")
+    ap.add_argument("--mesh", default=None, metavar="Pd,Pm",
+                    help="pin a 2-D (data, model) mesh factorization for "
+                         "the distributed SpMM, e.g. 4,2 — the model axis "
+                         "column-shards the X/Y k-slabs so per-device psum "
+                         "and replicated-X bytes drop by Pm (overrides "
+                         "--devices with Pd*Pm)")
     ap.add_argument("--chunks", type=int, default=0,
                     help="pipeline the merge-schedule psum into this many "
                          "chunks (0 = pick by the roofline overlap model; "

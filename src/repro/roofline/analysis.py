@@ -181,7 +181,7 @@ def spmm_distributed_traffic(m: int, n: int, k: int, num_devices: int,
                              schedule: str,
                              matrix_bytes: Optional[float] = None,
                              nnz: int = 0, dtype_bytes: int = 4,
-                             max_row_nnz: int = 0
+                             max_row_nnz: int = 0, model_devices: int = 1
                              ) -> Tuple[float, float]:
     """(per-device HBM bytes, per-device collective bytes) of one k-RHS
     distributed SpMM under the two paper schedules.
@@ -202,7 +202,20 @@ def spmm_distributed_traffic(m: int, n: int, k: int, num_devices: int,
       so model and wire agree. Chunking the fixup does not change the bytes
       — only when they are paid; see ``spmm_distributed_collective_s``.
 
-    ``num_devices == 1`` degrades to the single-device stream for both.
+    ``num_devices`` counts the DATA mesh axis. ``model_devices > 1`` prices
+    the 2-D (data, model) mesh of ``repro.spmm.distributed``: the X/Y
+    k-slabs are column-sharded across ``model``, so every k-proportional
+    term — the replicated-X read, the Y write, and the merge psum — divides
+    by ``P_model`` exactly, while the matrix stream (replicated along
+    ``model``) and the dense-row floor do not. Total devices are
+    ``num_devices * model_devices``. The bytes price the ideal
+    ``k / P_model`` column share; the executable's k_tile-aligned column
+    split can ship up to ``k_tile * P_model`` extra padding columns —
+    negligible at the k ≫ 128 sizes the model axis exists for.
+
+    ``num_devices == 1`` degrades to the single-device stream for both
+    (per model shard when ``model_devices > 1``: full matrix stream, a
+    ``k / P_model`` column slab, no collective — the psum axis is trivial).
     """
     if schedule not in ("row", "merge"):
         raise ValueError(f"schedule must be 'row' or 'merge', got "
@@ -210,17 +223,19 @@ def spmm_distributed_traffic(m: int, n: int, k: int, num_devices: int,
     if matrix_bytes is None:
         matrix_bytes = float(csr_stream_bytes(nnz, m, dtype_bytes))
     P = max(int(num_devices), 1)
-    x_bytes = float(n) * k * dtype_bytes          # replicated X, read fully
+    Pm = max(int(model_devices), 1)
+    kc = float(k) / Pm                   # X/Y columns owned per model shard
+    x_bytes = float(n) * kc * dtype_bytes
     if P == 1:
-        return matrix_bytes + x_bytes + float(m) * k * dtype_bytes, 0.0
+        return matrix_bytes + x_bytes + float(m) * kc * dtype_bytes, 0.0
     if schedule == "row":
         stream = max(matrix_bytes / P,
                      float(max_row_nnz) * (4 + dtype_bytes))
-        y_bytes = (float(m) / P) * k * dtype_bytes
+        y_bytes = (float(m) / P) * kc * dtype_bytes
         return stream + x_bytes + y_bytes, 0.0
     stream = matrix_bytes / P
-    y_bytes = float(m) * k * dtype_bytes          # full partial per device
-    psum_bytes = 2.0 * float(m) * k * dtype_bytes
+    y_bytes = float(m) * kc * dtype_bytes         # full partial per device
+    psum_bytes = 2.0 * float(m) * kc * dtype_bytes
     return stream + x_bytes + y_bytes, psum_bytes
 
 
@@ -236,7 +251,8 @@ def spmm_distributed_collective_s(m: int, n: int, k: int, num_devices: int,
                                   nnz: int = 0, dtype_bytes: int = 4,
                                   max_row_nnz: int = 0, num_chunks: int = 1,
                                   hbm_bw: float = HBM_BW,
-                                  link_bw: float = ICI_LINK_BW) -> float:
+                                  link_bw: float = ICI_LINK_BW,
+                                  model_devices: int = 1) -> float:
     """EXPOSED collective seconds of one distributed multiply — the part of
     the wire time that does not hide under the slice stream.
 
@@ -256,7 +272,8 @@ def spmm_distributed_collective_s(m: int, n: int, k: int, num_devices: int,
         raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
     hbm, coll = spmm_distributed_traffic(
         m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
-        dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz)
+        dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
+        model_devices=model_devices)
     if coll <= 0.0:
         return 0.0                    # "row" / single device: no wire time
     c = int(num_chunks)
@@ -271,18 +288,23 @@ def spmm_distributed_time(m: int, n: int, k: int, num_devices: int,
                           nnz: int = 0, dtype_bytes: int = 4,
                           max_row_nnz: int = 0, num_chunks: int = 1,
                           hbm_bw: float = HBM_BW,
-                          link_bw: float = ICI_LINK_BW) -> float:
+                          link_bw: float = ICI_LINK_BW,
+                          model_devices: int = 1) -> float:
     """Modelled seconds per distributed multiply: HBM term + the *exposed*
     collective term. ``num_chunks = 1`` keeps the PR-2 no-overlap model
     (both terms on the Y critical path, plus one launch); ``num_chunks > 1``
-    prices the pipelined fixup of ``spmm_merge_distributed(num_chunks=)``."""
+    prices the pipelined fixup of ``spmm_merge_distributed(num_chunks=)``;
+    ``model_devices > 1`` prices the 2-D (data, model) mesh (k-proportional
+    terms divide by ``P_model``)."""
     hbm, _ = spmm_distributed_traffic(
         m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
-        dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz)
+        dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
+        model_devices=model_devices)
     return hbm / hbm_bw + spmm_distributed_collective_s(
         m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
         dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
-        num_chunks=num_chunks, hbm_bw=hbm_bw, link_bw=link_bw)
+        num_chunks=num_chunks, hbm_bw=hbm_bw, link_bw=link_bw,
+        model_devices=model_devices)
 
 
 def from_compiled(compiled, chips: int, model_flops: float = 0.0,

@@ -28,6 +28,18 @@ kernel (``kernels.sellcs_slots``) on TPU, its jnp twin
 shorter stream with its own ``slice_of`` relabeling. The σ-sort row
 permutation is global, so it is undone once, *after* the mesh region, by
 the same single scatter the single-device path uses.
+
+2-D (``data``, ``model``) meshes — the k ≫ 128 scaling axis: when the mesh
+carries a ``model`` axis, both multiplies additionally shard the padded X
+and Y k-slabs across it. Each model shard owns ``kp / P_model`` columns of
+X (and computes only those columns of Y), the slice stream is replicated
+along ``model``, and every psum of the merge fixup runs on the ``data``
+axis alone — so per-device collective bytes AND per-device replicated-X
+read bytes both drop by ``P_model``. The column split composes with the
+chunked pipeline orthogonally: columns are independent, so no extra
+collective appears. This is the distributed-memory cure of Eckstein &
+Mátyásfalvi applied to the vector dimension: shrink what crosses the wire
+instead of pushing it harder.
 """
 from __future__ import annotations
 
@@ -68,6 +80,13 @@ class ShardedSellCS(NamedTuple):
                              #   partition_sellcs_nnz(num_chunks=) so the
                              #   pipelined multiply never re-deals the
                              #   stream host-side per call
+    row_counts: Optional[jax.Array] = None
+                             # int32[Pdev] — REAL width-rows per shard,
+                             #   recorded at partition time. The stream can
+                             #   carry width-rows whose stored values are
+                             #   all explicit zeros (SellCS.to_coo
+                             #   round-trips them by design), so real vs
+                             #   padding is NOT derivable from the values.
 
 
 def partition_sellcs_rows(sc: SellCS, num_devices: int) -> ShardedSellCS:
@@ -106,7 +125,8 @@ def partition_sellcs_rows(sc: SellCS, num_devices: int) -> ShardedSellCS:
     return ShardedSellCS(
         jnp.asarray(D), jnp.asarray(Cc), jnp.asarray(So),
         jnp.asarray(bounds[:-1].astype(np.int32)), sc.row_perm,
-        sc.shape, C, S, Sp, sc.nnz, "row")
+        sc.shape, C, S, Sp, sc.nnz, "row",
+        row_counts=jnp.asarray(np.diff(w_start).astype(np.int32)))
 
 
 def partition_sellcs_nnz(sc: SellCS, num_devices: int, *,
@@ -147,7 +167,8 @@ def partition_sellcs_nnz(sc: SellCS, num_devices: int, *,
     sharded = ShardedSellCS(
         jnp.asarray(D), jnp.asarray(Cc), jnp.asarray(So),
         jnp.zeros((num_devices,), jnp.int32), sc.row_perm,
-        sc.shape, C, S, S, sc.nnz, "merge")
+        sc.shape, C, S, S, sc.nnz, "merge",
+        row_counts=jnp.asarray(np.diff(bounds).astype(np.int32)))
     if num_chunks > 1:
         sharded = sharded._replace(
             chunk_plan=(int(num_chunks),
@@ -155,8 +176,26 @@ def partition_sellcs_nnz(sc: SellCS, num_devices: int, *,
     return sharded
 
 
+def _resolve_model_axis(mesh: Mesh, axis: str,
+                        model_axis: Optional[str]) -> Tuple[Optional[str],
+                                                            int]:
+    """(model axis name or None, P_model). An explicit ``model_axis`` must
+    exist in the mesh; ``None`` auto-adopts a ``"model"`` mesh axis when
+    present (the 2-D (data, model) mesh convention of ``launch.mesh``)."""
+    if model_axis is None:
+        model_axis = "model" if "model" in mesh.axis_names else None
+    elif model_axis not in mesh.axis_names:
+        raise ValueError(f"model_axis {model_axis!r} is not a mesh axis; "
+                         f"mesh has {tuple(mesh.axis_names)}")
+    if model_axis == axis:
+        raise ValueError(f"model_axis {model_axis!r} collides with the "
+                         f"data axis {axis!r}")
+    return model_axis, (int(mesh.shape[model_axis]) if model_axis else 1)
+
+
 def _prep(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh, axis: str,
-          impl: str, k_tile: Optional[int], expect: str):
+          impl: str, k_tile: Optional[int], expect: str,
+          model_axis: Optional[str]):
     if sharded.schedule != expect:
         raise ValueError(
             f"sharded matrix was partitioned for the {sharded.schedule!r} "
@@ -167,6 +206,7 @@ def _prep(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh, axis: str,
         raise ValueError(
             f"matrix is partitioned over {ndev} devices but mesh axis "
             f"{axis!r} has {mesh.shape[axis]}")
+    maxis, pm = _resolve_model_axis(mesh, axis, model_axis)
     if impl not in ("ref", "pallas", "pallas_interpret"):
         raise ValueError(f"impl must be ref|pallas|pallas_interpret, "
                          f"got {impl!r}")
@@ -176,15 +216,22 @@ def _prep(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh, axis: str,
         raise ValueError(f"X rows {x2.shape[0]} != matrix n {n}")
     k = x2.shape[1]
     use_pallas = impl != "ref"
+    # kc = X/Y columns owned by ONE model shard. The k-tile (and with it the
+    # Pallas k-grid) lives inside a model shard, so it is chosen for kc, not
+    # the global k; kp = kc * pm is the padded global slab width.
+    kc = -(-k // pm)
     if use_pallas:
-        kt = k_tile or choose_k_tile(sharded.shape, k, nnz=sharded.nnz)
+        kt = k_tile or choose_k_tile(sharded.shape, kc, nnz=sharded.nnz)
+        kc = -(-kc // kt) * kt
         np_ = -(-max(n, 1) // LANE) * LANE
-        kp = -(-k // kt) * kt
-        x_pad = jnp.zeros((np_, kp), x2.dtype).at[:n, :k].set(x2)
+        x_pad = jnp.zeros((np_, kc * pm), x2.dtype).at[:n, :k].set(x2)
     else:
         kt = k_tile
-        x_pad = x2
-    return x2, squeeze, k, kt, x_pad, use_pallas
+        if kc * pm == k:
+            x_pad = x2
+        else:
+            x_pad = jnp.zeros((n, kc * pm), x2.dtype).at[:, :k].set(x2)
+    return x2, squeeze, k, kt, x_pad, use_pallas, maxis, pm
 
 
 def _out_dtype(sharded: ShardedSellCS, x2: jax.Array, use_pallas: bool):
@@ -230,9 +277,21 @@ def _chunk_substreams(sharded: ShardedSellCS,
     Pdev, _, C = data.shape
     S = sharded.num_slices
     nc = int(num_chunks)
-    # flatten back to the global width-row stream: device spans are
-    # contiguous and ordered, and all-zero padding rows carry no payload
-    real = np.any(data != 0, axis=2)                 # [P, Wp]
+    # Flatten back to the global width-row stream: device spans are
+    # contiguous and ordered, and the partitioner recorded how many REAL
+    # width-rows each shard holds. Real vs padding must come from those
+    # counts, never from the values — a width-row whose stored entries are
+    # all explicit zeros (SellCS.to_coo round-trips them by design) is real
+    # work with real column indices, and dropping it silently skews the
+    # span width accounting below.
+    if sharded.row_counts is None:
+        raise ValueError(
+            "sharded matrix carries no row_counts; rebuild it with "
+            "partition_sellcs_nnz (older ShardedSellCS values cannot be "
+            "chunked — real rows are not derivable from the stored values)")
+    counts = np.asarray(sharded.row_counts, np.int64)          # [P]
+    real = (np.arange(data.shape[1], dtype=np.int64)[None]
+            < counts[:, None])                                 # [P, Wp]
     g_data = data[real]                              # [W', C] global order
     g_cols = cols[real]
     g_so = so[real]
@@ -289,20 +348,27 @@ def _unpermute(sharded: ShardedSellCS, y_slots: jax.Array, k: int,
 
 def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
                          axis: str = "data", *, impl: str = "ref",
-                         k_tile: Optional[int] = None) -> jax.Array:
-    """Y = A @ X with slice banding: X replicated, Y shard-local slots,
-    zero collectives inside the mesh region."""
+                         k_tile: Optional[int] = None,
+                         model_axis: Optional[str] = None) -> jax.Array:
+    """Y = A @ X with slice banding: X replicated along ``axis``, Y
+    shard-local slots, zero collectives inside the mesh region.
+
+    On a mesh carrying a ``model`` axis (or an explicit ``model_axis``),
+    the X/Y k-slabs are additionally column-sharded across it: each model
+    shard reads ``1/P_model`` of the replicated X and writes its own column
+    block of Y — the slice stream itself is replicated along ``model``.
+    """
     m, n = sharded.shape
     C, S, Sp = sharded.chunk, sharded.num_slices, sharded.slices_per_shard
     ndev = sharded.data.shape[0]
-    x2, squeeze, k, kt, x_pad, use_pallas = _prep(
-        sharded, x, mesh, axis, impl, k_tile, "row")
+    x2, squeeze, k, kt, x_pad, use_pallas, maxis, _pm = _prep(
+        sharded, x, mesh, axis, impl, k_tile, "row", model_axis)
     if sharded.nnz == 0:
         y = jnp.zeros((m, k), _out_dtype(sharded, x2, use_pallas))
         return y[:, 0] if squeeze else y
 
-    def local(data, cols, slice_of, x_rep):
-        return _local_slots(data, cols, slice_of, x_rep, num_slices=Sp,
+    def local(data, cols, slice_of, x_loc):
+        return _local_slots(data, cols, slice_of, x_loc, num_slices=Sp,
                             chunk=C, use_pallas=use_pallas, k_tile=kt,
                             interpret=impl == "pallas_interpret")
 
@@ -310,8 +376,8 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     yb = shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None, None), P(axis, None, None), P(axis, None),
-                  P(None, None)),
-        out_specs=P(axis, None),
+                  P(None, maxis)),
+        out_specs=P(axis, maxis),
         check_vma=False if use_pallas else None)(
             sharded.data, sharded.cols, sharded.slice_of, x_pad)
     yb = yb.reshape(ndev, Sp * C, -1)
@@ -333,7 +399,8 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
 def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
                            axis: str = "data", *, impl: str = "ref",
                            k_tile: Optional[int] = None,
-                           num_chunks: int = 1) -> jax.Array:
+                           num_chunks: int = 1,
+                           model_axis: Optional[str] = None) -> jax.Array:
     """Y = A @ X with equal-width spans: per-device slot partials + psum
     carry-out fixup (the only collective). Survives the mawi dense-row
     pathology — the dense slice splits mid-stream.
@@ -349,32 +416,51 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     result equals the monolithic schedule up to fp summation order.
     ``num_chunks = 1`` is the monolithic schedule; ``num_chunks > S``
     degenerates to one span per nonempty slice.
+
+    On a mesh carrying a ``model`` axis (or an explicit ``model_axis``),
+    the X/Y k-slabs are column-sharded across it and **every psum runs on
+    the data axis alone** — the model shards hold disjoint Y columns, so
+    nothing of theirs needs reducing. Per-device collective bytes drop by
+    ``P_model``: each device all-reduces only its own ``kc = kp / P_model``
+    column block. Unlike the 1-D path, the tail padding columns (fewer
+    than ``k_tile * P_model`` in aggregate, from rounding ``k`` up to a
+    ``k_tile``-aligned per-shard width) DO ride the wire — a uniform local
+    slice cannot single out the global column ``k`` — which is noise in
+    the k ≫ 128 regime this axis targets; the roofline model prices the
+    ideal ``k / P_model``.
     """
     m, n = sharded.shape
     C, S = sharded.chunk, sharded.num_slices
     nc = int(num_chunks)
     if nc < 1:
         raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
-    x2, squeeze, k, kt, x_pad, use_pallas = _prep(
-        sharded, x, mesh, axis, impl, k_tile, "merge")
+    x2, squeeze, k, kt, x_pad, use_pallas, maxis, pm = _prep(
+        sharded, x, mesh, axis, impl, k_tile, "merge", model_axis)
     if sharded.nnz == 0:
         y = jnp.zeros((m, k), _out_dtype(sharded, x2, use_pallas))
         return y[:, 0] if squeeze else y
     interpret = impl == "pallas_interpret"
+    # Columns to keep of each local slot block before its psum: with one
+    # model shard the true k (the k-tile padding never crosses the wire);
+    # with P_model > 1 every local column block is a distinct slice of the
+    # global slab, so all kc local columns ship and the (kp - k) tail
+    # padding is dropped after the mesh region by _unpermute.
+    k_keep = k if pm == 1 else x_pad.shape[1] // pm
 
     if nc == 1:
-        def local(data, cols, slice_of, x_rep):
-            y_loc = _local_slots(data, cols, slice_of, x_rep, num_slices=S,
+        def local(data, cols, slice_of, x_loc):
+            y_loc = _local_slots(data, cols, slice_of, x_loc, num_slices=S,
                                  chunk=C, use_pallas=use_pallas, k_tile=kt,
                                  interpret=interpret)
-            # all-reduce the true k columns only, not the k-tile padding
-            return jax.lax.psum(y_loc[:, :k], axis)
+            # carry-out fixup on the data axis ONLY: model shards own
+            # disjoint Y columns and never enter the collective
+            return jax.lax.psum(y_loc[:, :k_keep], axis)
 
         y_slots = shard_map(
             local, mesh=mesh,
             in_specs=(P(axis, None, None), P(axis, None, None),
-                      P(axis, None), P(None, None)),
-            out_specs=P(None, None),
+                      P(axis, None), P(None, maxis)),
+            out_specs=P(None, maxis),
             check_vma=False if use_pallas else None)(
                 sharded.data, sharded.cols, sharded.slice_of, x_pad)
         return _unpermute(sharded, y_slots, k, squeeze)
@@ -385,7 +471,7 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
         spans = _chunk_substreams(sharded, nc)
     meta = [(sp.slice_start, sp.num_slices) for sp in spans]
 
-    def local(datas, colss, sos, x_rep):
+    def local(datas, colss, sos, x_loc):
         # one (kernel -> psum) pair per span with no cross-span data
         # dependency: the span-i all-reduce-start can run under the
         # span-(i+1) kernel.
@@ -393,13 +479,13 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
         for (s0, ns), data, cols, slice_of in zip(meta, datas, colss, sos):
             if use_pallas:
                 y_c = sellcs_slots_chunk(
-                    data[0], cols[0], slice_of[0], x_rep, slice_start=s0,
+                    data[0], cols[0], slice_of[0], x_loc, slice_start=s0,
                     num_slices=ns, chunk=C, k_tile=kt, interpret=interpret)
             else:
                 y_c = sellcs_slots_chunk_ref(
-                    data[0], cols[0], slice_of[0], x_rep, slice_start=s0,
+                    data[0], cols[0], slice_of[0], x_loc, slice_start=s0,
                     num_slices=ns, chunk=C)
-            outs.append(jax.lax.psum(y_c[:, :k], axis))
+            outs.append(jax.lax.psum(y_c[:, :k_keep], axis))
         # span i's rows sit at global slots [s0*C, (s0 + ns)*C); the spans
         # tile [0, S) in order, so concatenation IS the slot array
         return jnp.concatenate(outs, axis=0)
@@ -408,8 +494,8 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     y_slots = shard_map(
         local, mesh=mesh,
         in_specs=(span_spec, span_spec,
-                  tuple(P(axis, None) for _ in spans), P(None, None)),
-        out_specs=P(None, None),
+                  tuple(P(axis, None) for _ in spans), P(None, maxis)),
+        out_specs=P(None, maxis),
         check_vma=False if use_pallas else None)(
             tuple(sp.data for sp in spans), tuple(sp.cols for sp in spans),
             tuple(sp.slice_of for sp in spans), x_pad)

@@ -65,12 +65,18 @@ class SellCS:
         return self.nnz / p if p else 0.0
 
     def storage_bytes(self) -> int:
-        """Faithful SELL-C-σ cost: padded values + padded column indices +
-        slice pointers + the row permutation."""
+        """Faithful SELL-C-σ cost: every int32/value array the format
+        actually stores — padded values + padded column indices + slice
+        pointers + per-width-row slice ids + the row permutation + per-slot
+        true row lengths. Kept equal to the sum of the member arrays'
+        ``nbytes`` (asserted in the tests) so conversion-amortization
+        comparisons never flatter this format."""
         W = self.data.shape[0]
         return int(W * self.chunk * (self.data.dtype.itemsize + 4)
                    + self.slice_ptr.shape[0] * 4
-                   + self.row_perm.shape[0] * 4)
+                   + self.slice_of.shape[0] * 4
+                   + self.row_perm.shape[0] * 4
+                   + self.row_len.shape[0] * 4)
 
     def to_coo(self) -> COO:
         """Exact round-trip (host-side), including explicit zeros."""

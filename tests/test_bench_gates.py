@@ -7,10 +7,12 @@ chunking loses (launch-dominated smoke sizes), nothing is gated."""
 import benchmarks.smoke_check as sk
 
 
-def _row(name, us, model_us=None, gflops=1.0):
+def _row(name, us, model_us=None, gflops=1.0, backend=None):
     derived = f"gflops={gflops}"
     if model_us is not None:
         derived += f";model_us={model_us}"
+    if backend is not None:
+        derived += f";backend={backend}"
     return {"section": "s", "name": name, "us_per_call": us,
             "derived": derived}
 
@@ -71,6 +73,75 @@ def test_chunk_gate_needs_baseline_and_model():
     assert sk.check_chunk_regressions(
         [_row(f"{MERGE}/chunks=1/k=8", 100.0),
          _row(f"{MERGE}/chunks=2/k=8", 500.0)], "f") == []   # no model_us
+
+
+# --------------------------------------------------------------------------
+# 2-D mesh gate (spmm_sweep --mesh rows)
+# --------------------------------------------------------------------------
+M1 = "mawi_like/sellcs+merge@8x1mesh/chunks=1"
+M2 = "mawi_like/sellcs+merge@4x2mesh/chunks=1"
+
+
+def test_mesh_gate_fails_on_regression_where_model_pays():
+    records = [_row(f"{M1}/k=64", 100.0, model_us=10.0, backend="tpu"),
+               _row(f"{M2}/k=64", 200.0, model_us=5.0, backend="tpu")]
+    problems = sk.check_mesh_regressions(records, "f.json")
+    assert len(problems) == 1 and "4x2" in problems[0] \
+        and "2.00x" in problems[0]
+    assert any("4x2" in p for p in sk.check_records(records, "f.json"))
+
+
+def test_mesh_gate_passes_within_tolerance():
+    records = [_row(f"{M1}/k=64", 100.0, model_us=10.0, backend="tpu"),
+               _row(f"{M2}/k=64", 105.0, model_us=5.0, backend="tpu")]
+    assert sk.check_mesh_regressions(records, "f.json") == []
+
+
+def test_mesh_gate_disarmed_when_model_predicts_loss():
+    """Small-k / stream-dominated: the model itself says the model axis
+    loses, so a measured loss is physics, not a regression."""
+    records = [_row(f"{M1}/k=1", 100.0, model_us=5.0, backend="tpu"),
+               _row(f"{M2}/k=1", 900.0, model_us=10.0, backend="tpu")]
+    assert sk.check_mesh_regressions(records, "f.json") == []
+
+
+def test_mesh_gate_disarmed_on_host_platform_mesh():
+    """The CI case: a cpu host-platform mesh keeps the replicated X as one
+    shared buffer, so the model-axis byte saving cannot appear in wall
+    time — rows are recorded but never gated, even when the TPU byte model
+    says the model axis pays. Rows with no backend field gate nothing."""
+    records = [_row(f"{M1}/k=64", 100.0, model_us=10.0, backend="cpu"),
+               _row(f"{M2}/k=64", 900.0, model_us=5.0, backend="cpu")]
+    assert sk.check_mesh_regressions(records, "f.json") == []
+    assert sk.check_records(records, "f.json") == []
+    records = [_row(f"{M1}/k=64", 100.0, model_us=10.0),
+               _row(f"{M2}/k=64", 900.0, model_us=5.0)]
+    assert sk.check_mesh_regressions(records, "f.json") == []
+
+
+def test_mesh_gate_groups_by_device_total_and_chunks():
+    """A (4,2) row only compares against the Pm=1 row of the SAME device
+    total and chunk depth; row-schedule and merge-schedule rows group
+    separately; 1-D @Ndev rows never join a mesh group."""
+    records = [
+        _row(f"{M1}/k=8", 100.0, model_us=10.0, backend="tpu"),
+        _row(f"{M2}/k=8", 250.0, model_us=6.0, backend="tpu"),
+        # different total (16 devices) — its own group, no baseline
+        _row("mawi_like/sellcs+merge@8x2mesh/chunks=1/k=8", 999.0,
+             model_us=1.0, backend="tpu"),
+        # different chunk depth — its own group, no baseline
+        _row("mawi_like/sellcs+merge@4x2mesh/chunks=2/k=8", 999.0,
+             model_us=1.0, backend="tpu"),
+        # row schedule at the same total, within tolerance
+        _row("mawi_like/sellcs+row@8x1mesh/k=8", 100.0, model_us=10.0,
+             backend="tpu"),
+        _row("mawi_like/sellcs+row@4x2mesh/k=8", 101.0, model_us=5.0,
+             backend="tpu"),
+        # legacy 1-D row name — not a mesh row
+        _row(f"{MERGE}/chunks=1/k=8", 1.0, model_us=1.0)]
+    problems = sk.check_mesh_regressions(records, "f.json")
+    assert len(problems) == 1 and "sellcs+merge" in problems[0] \
+        and "4x2" in problems[0]
 
 
 def test_basic_rules_still_hold():

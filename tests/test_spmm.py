@@ -289,8 +289,9 @@ def test_select_distributed_records_num_chunks():
     assert isinstance(choice, DistributedChoice)
     assert choice.schedule == "merge" and choice.num_chunks in \
         CHUNK_CANDIDATES and choice.num_chunks > 1
-    algo, sched, nc = choice                  # unpacks like a tuple
-    assert (algo, sched, nc) == tuple(choice)
+    algo, sched, nc, mesh = choice            # unpacks like a tuple
+    assert (algo, sched, nc, mesh) == tuple(choice)
+    assert mesh[0] * mesh[1] == 8
     assert select_distributed(uni, k=8, num_devices=8).num_chunks == 1
 
 
@@ -304,6 +305,49 @@ def test_select_num_devices_keyword():
         assert pick in DISTRIBUTED_ALGOS, (name, pick)
         assert select(s, MachineSpec(1), 1000, k=1) == \
             select_algorithm(s, MachineSpec(1), 1000)
+
+
+def test_select_num_devices_threads_throughput_through():
+    """Regression: select(num_devices>1) used to silently drop the
+    caller's measured throughput table — the one path users tune. A table
+    that makes one distributed-capable format overwhelmingly faster must
+    flip the pick both ways, and omitting the table keeps the pure-model
+    choice."""
+    from repro.core import select_distributed
+    s = matrix_stats(_matrices()["uniform"])
+    fast_parcrs = {"parcrs": 100.0, "sellcs": 1.0}
+    fast_sellcs = {"parcrs": 1.0, "sellcs": 100.0}
+    assert select(s, num_spmvs=1000, k=64, num_devices=8,
+                  throughput=fast_parcrs) == "parcrs"
+    assert select(s, num_spmvs=1000, k=64, num_devices=8,
+                  throughput=fast_sellcs) == "sellcs"
+    # the DistributedChoice path accepts it too, and a missing sellcs
+    # entry is defaulted from the csb prior like the 1-device selector
+    c = select_distributed(s, k=64, num_devices=8,
+                           throughput={"parcrs": 1.0, "csb": 100.0})
+    assert c.algorithm == "sellcs"
+    # no table -> unchanged pure-model scoring
+    assert select(s, num_spmvs=1000, k=64, num_devices=8) == \
+        select_distributed(s, k=64, num_devices=8).algorithm
+
+
+def test_sellcs_storage_bytes_counts_every_array():
+    """ISSUE 4 satellite: storage_bytes claimed "faithful SELL-C-σ cost"
+    while omitting the slice_of and row_len int32 arrays; it must equal
+    the summed nbytes of every member array exactly."""
+    for coo in _matrices().values():
+        sc = M.coo_to_sellcs(coo)
+        actual = (sc.data.nbytes + sc.cols.nbytes + sc.slice_ptr.nbytes
+                  + sc.slice_of.nbytes + sc.row_perm.nbytes
+                  + sc.row_len.nbytes)
+        assert sc.storage_bytes() == actual
+    # empty matrix: the fixed-size arrays still count
+    from repro.core import to_coo
+    z = np.zeros(0, np.int32)
+    se = M.coo_to_sellcs(to_coo(z, z, np.zeros(0, np.float32), (6, 4)), c=2)
+    actual = (se.data.nbytes + se.cols.nbytes + se.slice_ptr.nbytes
+              + se.slice_of.nbytes + se.row_perm.nbytes + se.row_len.nbytes)
+    assert se.storage_bytes() == actual
 
 
 def test_autotune_num_devices_records_schedule():

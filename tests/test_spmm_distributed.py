@@ -348,6 +348,99 @@ def test_partition_sellcs_roundtrip_covers_all_nnz():
             assert sh.data.shape[0] == P
 
 
+def _explicit_zero_coo():
+    """m=16, c=4: row 0 stores 3 entries, two of them EXPLICIT ZEROS at
+    cols 2 and 3; rows 1..15 store one entry each. After the σ-sort, slice
+    0 has width 3 and its width-rows j=1,2 carry ONLY row 0's explicit
+    zeros — all-zero data with real column indices, exactly what
+    SellCS.to_coo round-trips and a value-based padding mask destroys."""
+    from repro.core import to_coo
+    rows = np.array([0, 0, 0] + list(range(1, 16)), np.int32)
+    cols = np.array([0, 2, 3] + [r % 4 for r in range(1, 16)], np.int32)
+    vals = np.array([1.0, 0.0, 0.0] + [float(r) for r in range(1, 16)],
+                    np.float32)
+    return to_coo(rows, cols, vals, (16, 4))
+
+
+def test_chunk_plan_preserves_explicit_zero_width_rows():
+    """Regression for the ``np.any(data != 0)`` padding mask in
+    ``_chunk_substreams``: the span plan must rebuild the stream from the
+    partitioner's recorded real-row counts, so (a) the slice spans equal
+    ``balanced_row_bands`` over the TRUE per-slice widths and (b) the
+    explicit-zero width-rows survive into the spans with their column
+    payload. The old mask dropped them, shifting both."""
+    from repro.core import balanced_row_bands
+    from repro.spmm import coo_to_sellcs, partition_sellcs_nnz
+    sc = coo_to_sellcs(_explicit_zero_coo(), c=4, sigma=16)
+    widths = np.diff(np.asarray(sc.slice_ptr, np.int64))
+    assert widths.tolist() == [3, 1, 1, 1]       # slice 0 holds the zeros
+    sharded = partition_sellcs_nnz(sc, 3, num_chunks=2)
+    assert np.asarray(sharded.row_counts).sum() == sc.data.shape[0]
+    spans = sharded.chunk_plan[1]
+    # (a) spans tile [0, S) at the band bounds of the TRUE widths — the
+    # old mask saw widths [1, 1, 1, 1] and cut the stream elsewhere
+    bounds = balanced_row_bands(np.asarray(sc.slice_ptr, np.int64), 2)
+    expect = [(int(a), int(b - a)) for a, b in zip(bounds, bounds[1:])
+              if b > a]
+    assert [(sp.slice_start, sp.num_slices) for sp in spans] == expect
+    # (b) the two explicit-zero width-rows (all-zero values, nonzero cols)
+    # crossed into the spans — the old mask left zero of them
+    zero_rows = sum(
+        int((np.all(np.asarray(sp.data) == 0, axis=-1)
+             & np.any(np.asarray(sp.cols) != 0, axis=-1)).sum())
+        for sp in spans)
+    assert zero_rows == 2
+
+
+def test_chunked_merge_equivalence_with_explicit_zeros():
+    """ISSUE 4 satellite: chunked-vs-monolithic merge equivalence on a COO
+    matrix containing explicit-zero entries, on a real 8-device mesh."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz, spmm_coo,
+                        spmm_merge_distributed)
+from repro.launch.mesh import make_mesh
+rows = np.array([0, 0, 0] + list(range(1, 16)), np.int32)
+cols = np.array([0, 2, 3] + [r % 4 for r in range(1, 16)], np.int32)
+vals = np.array([1.0, 0.0, 0.0] + [float(r) for r in range(1, 16)],
+                np.float32)
+coo = to_coo(rows, cols, vals, (16, 4))
+mesh = make_mesh((8,), ("data",))
+sc = coo_to_sellcs(coo, c=4, sigma=16)
+mrg = partition_sellcs_nnz(sc, 8)
+X = jnp.asarray(np.random.default_rng(0).standard_normal(
+    (4, 8)).astype(np.float32))
+yo = np.asarray(spmm_coo(coo, X))
+y1 = np.asarray(spmm_merge_distributed(mrg, X, mesh, num_chunks=1))
+np.testing.assert_allclose(y1, yo, rtol=1e-5, atol=1e-5)
+for c in (2, 3, 9):
+    yc = np.asarray(spmm_merge_distributed(mrg, X, mesh, num_chunks=c))
+    np.testing.assert_allclose(yc, y1, rtol=1e-6, atol=1e-6,
+                               err_msg=f"chunks={c}")
+print("explicit-zero chunked merge OK")
+"""))
+
+
+def test_partitioners_record_row_counts():
+    """Both partitioners record per-device real width-row counts (the only
+    trustworthy padding mask — see _chunk_substreams)."""
+    from repro.core import to_coo
+    from repro.data import matrices
+    from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                            partition_sellcs_rows)
+    coo = to_coo(*matrices.mawi_like(200, 180, 1500, 0.3, 2))
+    sc = coo_to_sellcs(coo, c=8, sigma=32)
+    W = sc.data.shape[0]
+    for part in (partition_sellcs_rows, partition_sellcs_nnz):
+        for P in (1, 3, 8):
+            sh = part(sc, P)
+            counts = np.asarray(sh.row_counts)
+            assert counts.shape == (P,) and counts.sum() == W
+            assert counts.min() >= 0
+            assert counts.max() <= sh.data.shape[1]
+
+
 def test_distributed_schedule_mismatch_raises():
     import pytest
     import jax

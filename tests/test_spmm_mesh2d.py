@@ -1,0 +1,238 @@
+"""2-D (data, model) mesh SpMM (repro.spmm.distributed) on 8 host-platform
+devices: ISSUE 4 acceptance — both schedules over meshes (8,1), (4,2) and
+(2,4) match the single-device oracle and the 1-D path for k in {8, 64, 256}
+(mawi dense row included), under the jnp reference body and the Pallas
+kernel body in interpret mode, and the traffic model prices the model axis
+as an exact P_model division of the collective and replicated-X bytes.
+
+Device-backed tests run in SUBPROCESSES (the device-count flag must be set
+before jax initializes; the rest of the suite keeps seeing 1 device).
+Model / validation tests are pure host code and run in-process.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_mesh2d_matches_oracle_and_1d_ref():
+    """ISSUE 4 acceptance: meshes (8,1), (4,2), (2,4), k in {8, 64, 256},
+    uniform + mawi dense-row, both schedules plus the chunked merge, all
+    equal to the single-device spmm oracle — and the 2-D results equal the
+    1-D (8,1) results to fp tolerance. The row schedule is compared
+    tightly (the model axis only splits columns; per-column sums are
+    identical), the merge schedule at oracle tolerance (a different
+    P_data means a different psum summation order)."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.data import matrices
+from repro.launch.mesh import make_spmm_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, spmm_coo,
+                        spmm_merge_distributed, spmm_row_distributed)
+for name, gen in [("uniform", matrices.uniform(500, 430, 4000, 0)),
+                  ("mawi_like", matrices.mawi_like(400, 400, 3000, 0.4, 1))]:
+    coo = to_coo(*gen)
+    sc = coo_to_sellcs(coo, c=16, sigma=64)
+    base = {}                    # (schedule, k) -> the 1-D (8,1) result
+    for pd, pm in [(8, 1), (4, 2), (2, 4)]:
+        mesh = make_spmm_mesh((pd, pm))
+        row = partition_sellcs_rows(sc, pd)
+        mrg = partition_sellcs_nnz(sc, pd)
+        for k in (8, 64, 256):
+            X = jnp.asarray(np.random.default_rng(k).standard_normal(
+                (coo.shape[1], k)).astype(np.float32))
+            yo = np.asarray(spmm_coo(coo, X))
+            yr = np.asarray(spmm_row_distributed(row, X, mesh))
+            ym = np.asarray(spmm_merge_distributed(mrg, X, mesh))
+            yc = np.asarray(spmm_merge_distributed(mrg, X, mesh,
+                                                   num_chunks=3))
+            for tag, y in [("row", yr), ("merge", ym), ("chunked", yc)]:
+                np.testing.assert_allclose(
+                    y, yo, rtol=1e-5, atol=1e-4,
+                    err_msg=f"{name} {tag} {pd}x{pm} k={k}")
+            if pm == 1:
+                base[("row", k)], base[("merge", k)] = yr, ym
+            else:
+                np.testing.assert_allclose(yr, base[("row", k)], rtol=1e-6,
+                                           atol=1e-5, err_msg=f"{name} row")
+                np.testing.assert_allclose(ym, base[("merge", k)],
+                                           rtol=1e-5, atol=1e-4,
+                                           err_msg=f"{name} merge")
+    print(name, "mesh2d oracle OK")
+"""))
+
+
+def test_mesh2d_pallas_interpret_kernel_body():
+    """The same PR-1 k-tiled Pallas kernel runs inside each (data, model)
+    shard (interpret mode off-TPU): every mesh shape, k in {8, 64, 256},
+    mawi dense row, monolithic and chunked merge."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.data import matrices
+from repro.launch.mesh import make_spmm_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, spmm_coo,
+                        spmm_merge_distributed, spmm_row_distributed)
+coo = to_coo(*matrices.mawi_like(300, 280, 2400, 0.4, 3))
+sc = coo_to_sellcs(coo, c=16, sigma=64)
+for pd, pm in [(8, 1), (4, 2), (2, 4)]:
+    mesh = make_spmm_mesh((pd, pm))
+    row = partition_sellcs_rows(sc, pd)
+    mrg = partition_sellcs_nnz(sc, pd)
+    for k in (8, 64, 256):
+        X = jnp.asarray(np.random.default_rng(k).standard_normal(
+            (coo.shape[1], k)).astype(np.float32))
+        yo = np.asarray(spmm_coo(coo, X))
+        yr = np.asarray(spmm_row_distributed(
+            row, X, mesh, impl="pallas_interpret", k_tile=4))
+        ym = np.asarray(spmm_merge_distributed(
+            mrg, X, mesh, impl="pallas_interpret", k_tile=4, num_chunks=2))
+        np.testing.assert_allclose(yr, yo, rtol=1e-5, atol=1e-4,
+                                   err_msg=f"row {pd}x{pm} k={k}")
+        np.testing.assert_allclose(ym, yo, rtol=1e-5, atol=1e-4,
+                                   err_msg=f"merge {pd}x{pm} k={k}")
+    print(pd, pm, "interpret OK")
+"""))
+
+
+def test_mesh2d_k_smaller_than_model_axis():
+    """Degenerate column split: k < P_model still answers correctly (some
+    model shards own only padding columns), including the k = 1 SpMV ride-
+    along."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.data import matrices
+from repro.launch.mesh import make_spmm_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, spmm_coo,
+                        spmm_merge_distributed, spmm_row_distributed)
+coo = to_coo(*matrices.uniform(200, 180, 1500, 7))
+sc = coo_to_sellcs(coo, c=16, sigma=64)
+mesh = make_spmm_mesh((2, 4))
+row = partition_sellcs_rows(sc, 2)
+mrg = partition_sellcs_nnz(sc, 2)
+for k in (1, 2, 3):
+    X = jnp.asarray(np.random.default_rng(k).standard_normal(
+        (coo.shape[1], k)).astype(np.float32))
+    yo = np.asarray(spmm_coo(coo, X))
+    np.testing.assert_allclose(np.asarray(spmm_row_distributed(
+        row, X, mesh)), yo, rtol=1e-5, atol=1e-4, err_msg=f"k={k}")
+    np.testing.assert_allclose(np.asarray(spmm_merge_distributed(
+        mrg, X, mesh)), yo, rtol=1e-5, atol=1e-4, err_msg=f"k={k}")
+x = jnp.asarray(np.random.default_rng(9).standard_normal(
+    coo.shape[1]).astype(np.float32))
+y = spmm_row_distributed(row, x, mesh)
+assert y.ndim == 1
+np.testing.assert_allclose(np.asarray(y), np.asarray(spmm_coo(coo, x)),
+                           rtol=1e-5, atol=1e-4)
+print("k < P_model OK")
+"""))
+
+
+# --------------------------------------------------------------------------
+# Host-side: axis validation and the 2-D traffic model
+# --------------------------------------------------------------------------
+def test_model_axis_validation():
+    import jax
+    import numpy as np
+    from repro.launch.mesh import make_mesh
+    from repro.spmm import (coo_to_sellcs, partition_sellcs_rows,
+                            spmm_row_distributed)
+    from repro.core import to_coo
+    if len(jax.devices()) != 1:
+        return                       # in-process guard only needs 1 device
+    coo = to_coo(np.array([0], np.int32), np.array([0], np.int32),
+                 np.ones(1, np.float32), (2, 2))
+    sc = coo_to_sellcs(coo, c=2)
+    sharded = partition_sellcs_rows(sc, 1)
+    mesh = make_mesh((1,), ("data",))
+    X = np.ones((2, 3), np.float32)
+    with pytest.raises(ValueError, match="model_axis"):
+        spmm_row_distributed(sharded, X, mesh, model_axis="model")
+    with pytest.raises(ValueError, match="collides"):
+        spmm_row_distributed(sharded, X, mesh, model_axis="data")
+
+
+def test_traffic_model_model_axis_divides_k_terms_exactly():
+    """ISSUE 4 acceptance: collective bytes drop by exactly P_model, and
+    so do the replicated-X read bytes; the matrix stream and the dense-row
+    floor do not."""
+    from repro.roofline import (spmm_distributed_time,
+                                spmm_distributed_traffic)
+    m = n = 100_000
+    nnz = 10_000_000
+    for pm in (2, 4, 8):
+        _, coll1 = spmm_distributed_traffic(m, n, 256, 8, "merge", nnz=nnz)
+        _, collm = spmm_distributed_traffic(m, n, 256, 8, "merge", nnz=nnz,
+                                            model_devices=pm)
+        assert coll1 / collm == pytest.approx(pm), pm
+    # the X term: row schedule on a dense-row matrix — the stream floor is
+    # pinned by the dense row, so the HBM delta between Pm=1 and Pm=pm is
+    # exactly the (1 - 1/pm) replicated-X + Y saving
+    hot = nnz // 2
+    dt = 4
+    hbm1, _ = spmm_distributed_traffic(m, n, 256, 8, "row", nnz=nnz,
+                                       max_row_nnz=hot)
+    hbm2, _ = spmm_distributed_traffic(m, n, 256, 8, "row", nnz=nnz,
+                                       max_row_nnz=hot, model_devices=2)
+    saved = (n * 256 * dt + (m / 8) * 256 * dt) / 2
+    assert hbm1 - hbm2 == pytest.approx(saved, rel=1e-12)
+    # at k >> 128 the model axis pays; at k = 1 the shallower stream split
+    # makes it lose (uniform matrix)
+    t1 = spmm_distributed_time(m, n, 1024, 8, "merge", nnz=nnz)
+    t2 = spmm_distributed_time(m, n, 1024, 4, "merge", nnz=nnz,
+                               model_devices=2)
+    assert t2 < t1
+    assert spmm_distributed_time(m, n, 1, 4, "merge", nnz=nnz,
+                                 model_devices=2) > \
+        spmm_distributed_time(m, n, 1, 8, "merge", nnz=nnz)
+
+
+def test_mesh_factorizations_and_grid():
+    from repro.core import mesh_factorizations
+    from repro.core.selector import distributed_schedule_grid
+    assert mesh_factorizations(8) == [(8, 1), (4, 2), (2, 4), (1, 8)]
+    assert mesh_factorizations(1) == [(1, 1)]
+    with pytest.raises(ValueError):
+        mesh_factorizations(0)
+    grid = distributed_schedule_grid(8)
+    assert ("row", 1, (4, 2)) in grid and ("merge", 4, (2, 4)) in grid
+    assert all(nc == 1 for s, nc, _ in grid if s == "row")
+    pinned = distributed_schedule_grid(8, pinned_mesh=(4, 2))
+    assert {mesh for _, _, mesh in pinned} == {(4, 2)}
+
+
+def test_select_distributed_mesh_shape_recorded():
+    """The joint grid records the winning (P_data, P_model): small k keeps
+    the pure-data mesh (stream-split dominated), k >> 128 moves the win to
+    a model-sharded shape; a pinned mesh_shape is honored."""
+    from repro.core import select_distributed
+    from repro.core.selector import MatrixStats
+    uni = MatrixStats(m=230_000, n=230_000, nnz=270_000_000,
+                      max_row_nnz=2_000, row_var=10.0)
+    small = select_distributed(uni, k=1, num_devices=8)
+    assert small.mesh_shape == (8, 1)
+    big = select_distributed(uni, k=4096, num_devices=8)
+    assert big.mesh_shape[1] > 1
+    assert big.mesh_shape[0] * big.mesh_shape[1] == 8
+    pinned = select_distributed(uni, k=4096, num_devices=8,
+                                mesh_shape=(8, 1))
+    assert pinned.mesh_shape == (8, 1)
