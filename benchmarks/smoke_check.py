@@ -41,6 +41,22 @@ a host-platform mesh keeps "replicated" X as one shared buffer, so the
 model-axis byte saving is physically unobservable there and a measured
 loss is mesh overhead, not a bug).
 
+Third cross-row rule (the compact-gather gate): for every
+``.../sellcs+<sched>@<mesh>[/chunks=<c>]/cx=<on|off>/k=<k>`` pair emitted
+by ``benchmarks.spmm_sweep --compact-x on,off``, IF the traffic model
+(``model_us``, priced with the partitioner's measured mean ``n_touched``)
+says the sparsity-aware X gather is STRICTLY faster than replication, the
+measured ``cx=on`` row must not run more than
+``COMPACT_REGRESSION_TOLERANCE`` slower than its ``cx=off`` twin — where
+the model says the gather pays, compaction must never cost real time.
+Rows where the model predicts the gather does not strictly win — losses
+AND the exact tie of near-dense columns (``n_touched`` capped at ``n``
+makes the modelled figures equal while the gather's unpriced overhead
+remains) — are recorded but not gated, matching the selector's
+tie-refusal; and — like the mesh gate — so are ``backend=cpu`` rows: a
+host-platform mesh keeps X as one shared buffer, so the gather's byte
+saving is physically unobservable there.
+
 ``spmvs_to_amortize=inf`` and friends are legitimate (a format that never
 breaks even), so only the keys named above are validated.
 """
@@ -65,12 +81,21 @@ CHUNK_REGRESSION_TOLERANCE = 1.10
 # model axis pays
 MESH_REGRESSION_TOLERANCE = 1.10
 
+# a cx=on (sparsity-aware X gather) row may be at most 10% slower than its
+# cx=off twin, where the model says the gather pays
+COMPACT_REGRESSION_TOLERANCE = 1.10
+
 _CHUNK_ROW_RE = re.compile(
-    r"^(?P<base>.*sellcs\+merge@\d+dev)/chunks=(?P<c>\d+)/k=(?P<k>\d+)$")
+    r"^(?P<base>.*sellcs\+merge@\d+dev)/chunks=(?P<c>\d+)"
+    r"(?P<cx>/cx=(?:on|off))?/k=(?P<k>\d+)$")
 
 _MESH_ROW_RE = re.compile(
     r"^(?P<base>.*sellcs\+(?:row|merge))@(?P<pd>\d+)x(?P<pm>\d+)mesh"
-    r"(?P<chunks>/chunks=\d+)?/k=(?P<k>\d+)$")
+    r"(?P<chunks>/chunks=\d+)?(?P<cx>/cx=(?:on|off))?/k=(?P<k>\d+)$")
+
+_COMPACT_ROW_RE = re.compile(
+    r"^(?P<base>.*sellcs\+(?:row|merge)@(?:\d+dev|\d+x\d+mesh)"
+    r"(?:/chunks=\d+)?)/cx=(?P<cx>on|off)/k=(?P<k>\d+)$")
 
 
 def _derived_fields(derived: str) -> Iterator[Tuple[str, str]]:
@@ -103,7 +128,7 @@ def check_chunk_regressions(records: List[dict], origin: str) -> List[str]:
     prediction says some pipelined depth beats the monolithic fixup, the
     fastest measured chunked row must stay within
     CHUNK_REGRESSION_TOLERANCE of the chunks=1 row."""
-    groups: Dict[Tuple[str, str],
+    groups: Dict[Tuple[str, str, str],
                  Dict[int, Tuple[float, Optional[float]]]] = {}
     for rec in records:
         m = _CHUNK_ROW_RE.match(str(rec.get("name", "")))
@@ -111,10 +136,12 @@ def check_chunk_regressions(records: List[dict], origin: str) -> List[str]:
         if not m or not isinstance(us, (int, float)) or not \
                 math.isfinite(us) or us <= 0:
             continue
-        groups.setdefault((m["base"], m["k"]), {})[int(m["c"])] = \
-            (float(us), _model_us(rec))
+        # a cx=on row only compares against chunked cx=on rows (and off
+        # against off) — compaction changes the X bytes under the stream
+        groups.setdefault((m["base"], m["cx"] or "", m["k"]),
+                          {})[int(m["c"])] = (float(us), _model_us(rec))
     problems = []
-    for (base, k), rows in sorted(groups.items()):
+    for (base, cx, k), rows in sorted(groups.items()):
         mono = rows.get(1)
         chunked = {c: r for c, r in rows.items() if c > 1}
         if mono is None or not chunked:
@@ -128,7 +155,7 @@ def check_chunk_regressions(records: List[dict], origin: str) -> List[str]:
         best_c, (best_us, _) = min(chunked.items(), key=lambda t: t[1][0])
         if best_us > CHUNK_REGRESSION_TOLERANCE * mono[0]:
             problems.append(
-                f"{origin}:{base}/k={k}: best chunked merge row "
+                f"{origin}:{base}{cx}/k={k}: best chunked merge row "
                 f"(chunks={best_c}, {best_us:.4g} us) regresses "
                 f"{best_us / mono[0]:.2f}x over the monolithic chunks=1 "
                 f"row ({mono[0]:.4g} us) although the model predicts "
@@ -145,7 +172,7 @@ def check_mesh_regressions(records: List[dict], origin: str) -> List[str]:
     pure-data row. Rows measured on a ``backend=cpu`` host-platform mesh
     are never gated — there the replicated X is one shared buffer, so the
     model-axis saving cannot show up in wall time."""
-    groups: Dict[Tuple[str, int, str, str],
+    groups: Dict[Tuple[str, int, str, str, str],
                  Dict[Tuple[int, int], Tuple[float, Optional[float]]]] = {}
     for rec in records:
         m = _MESH_ROW_RE.match(str(rec.get("name", "")))
@@ -156,10 +183,11 @@ def check_mesh_regressions(records: List[dict], origin: str) -> List[str]:
         if _backend(rec) in (None, "cpu"):
             continue            # no per-device memory -> nothing to gate
         pd, pm = int(m["pd"]), int(m["pm"])
-        key = (m["base"], pd * pm, m["chunks"] or "", m["k"])
+        key = (m["base"], pd * pm, m["chunks"] or "", m["cx"] or "",
+               m["k"])
         groups.setdefault(key, {})[(pd, pm)] = (float(us), _model_us(rec))
     problems = []
-    for (base, total, chunks, k), rows in sorted(groups.items()):
+    for (base, total, chunks, cx, k), rows in sorted(groups.items()):
         pure = next((r for (pd, pm), r in rows.items() if pm == 1), None)
         sharded = {s: r for s, r in rows.items() if s[1] > 1}
         if pure is None or not sharded:
@@ -174,12 +202,60 @@ def check_mesh_regressions(records: List[dict], origin: str) -> List[str]:
                                        key=lambda t: t[1][0])
         if best_us > MESH_REGRESSION_TOLERANCE * pure[0]:
             problems.append(
-                f"{origin}:{base}@{total}dev{chunks}/k={k}: best "
+                f"{origin}:{base}@{total}dev{chunks}{cx}/k={k}: best "
                 f"model-sharded mesh row ({bpd}x{bpm}, {best_us:.4g} us) "
                 f"regresses {best_us / pure[0]:.2f}x over the pure-data "
                 f"row ({pure[0]:.4g} us) although the model predicts the "
                 f"model axis pays here; tolerance is "
                 f"{MESH_REGRESSION_TOLERANCE:.2f}x")
+    return problems
+
+
+def check_compact_regressions(records: List[dict], origin: str
+                              ) -> List[str]:
+    """The sparsity-aware-gather gate: per distributed row pair differing
+    only in ``cx=on|off``, if the traffic model (priced with the measured
+    mean ``n_touched``) says the compacted gather is STRICTLY faster than
+    replication, the measured ``cx=on`` row must stay within
+    COMPACT_REGRESSION_TOLERANCE of the ``cx=off`` row. A modelled tie
+    never arms the gate (dense columns cap ``n_touched`` at ``n``, so the
+    byte model sees a wash while the gather's overhead stays unpriced),
+    and neither do ``backend=cpu`` rows — a host-platform mesh keeps X as
+    one shared buffer, so the gather's byte saving cannot show up in wall
+    time and a measured loss there is gather overhead on zero upside, not
+    a bug."""
+    groups: Dict[Tuple[str, str],
+                 Dict[str, Tuple[float, Optional[float]]]] = {}
+    for rec in records:
+        m = _COMPACT_ROW_RE.match(str(rec.get("name", "")))
+        us = rec.get("us_per_call")
+        if not m or not isinstance(us, (int, float)) or not \
+                math.isfinite(us) or us <= 0:
+            continue
+        if _backend(rec) in (None, "cpu"):
+            continue            # shared X buffer -> nothing to gate
+        groups.setdefault((m["base"], m["k"]), {})[m["cx"]] = \
+            (float(us), _model_us(rec))
+    problems = []
+    for (base, k), rows in sorted(groups.items()):
+        off, on = rows.get("off"), rows.get("on")
+        if off is None or on is None:
+            continue                    # nothing to compare against
+        # arm the gate only where the model predicts the gather STRICTLY
+        # pays at THIS size: near-dense columns cap n_touched at n and
+        # make the modelled figures exactly equal (the wash), and the
+        # gather's own overhead is below the model's resolution — a
+        # measured loss on the tie is physics, not a regression (the
+        # selector refuses compaction on the same tie)
+        if off[1] is None or on[1] is None or on[1] >= off[1]:
+            continue
+        if on[0] > COMPACT_REGRESSION_TOLERANCE * off[0]:
+            problems.append(
+                f"{origin}:{base}/k={k}: compacted-gather row (cx=on, "
+                f"{on[0]:.4g} us) regresses {on[0] / off[0]:.2f}x over "
+                f"the replicated-X row ({off[0]:.4g} us) although the "
+                f"model predicts the gather pays here; tolerance is "
+                f"{COMPACT_REGRESSION_TOLERANCE:.2f}x")
     return problems
 
 
@@ -211,6 +287,7 @@ def check_records(records: List[dict], origin: str) -> List[str]:
                                 "> 0")
     problems.extend(check_chunk_regressions(records, origin))
     problems.extend(check_mesh_regressions(records, origin))
+    problems.extend(check_compact_regressions(records, origin))
     return problems
 
 

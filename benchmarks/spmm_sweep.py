@@ -22,6 +22,15 @@ shape, each with the 2-D traffic model's ``model_us`` prediction, so
 ``smoke_check`` can gate the model-sharded rows against the pure-data
 (``Pm = 1``) baseline wherever the model says the model axis pays.
 
+``--compact-x on,off`` adds a sparsity-aware X gather column to every
+distributed row group: one ``cx=on`` row (per-shard column compaction,
+gathered ``[n_touched, kc]`` slabs) next to each ``cx=off`` row
+(replicated X), each priced by the compact traffic model with the
+partitioner's *measured* mean ``n_touched``, so
+``smoke_check.check_compact_regressions`` can gate the compacted rows
+wherever the model says the gather pays (disarmed on ``backend=cpu``
+like the mesh gate — a host-platform mesh shares one X buffer).
+
 Emits the same CSV columns and JSON schema as ``benchmarks.run``.
 """
 from __future__ import annotations
@@ -67,13 +76,15 @@ def sweep_matrix(name: str, coo, ks, impl: str, reps: int, csv) -> None:
 
 
 def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
-                  chunk_counts, tag_of) -> None:
+                  chunk_counts, tag_of, compact_flags=(False,)) -> None:
     """Shared measurement core of ``sweep_distributed`` / ``sweep_mesh2d``:
     both schedules per (P_data, P_model) shape (ref impl bodies — the
     host-platform mesh has no TPU cores to feed the Pallas path), the
     merge schedule once per ``chunk_counts`` entry, each row priced by the
     (2-D) traffic model. ``tag_of(pd, pm)`` renders the mesh part of the
-    row name.
+    row name; sweeping ``compact_flags`` beyond the plain ``(False,)``
+    appends a ``/cx=on|off`` segment and prices the compact rows with the
+    partitioner's measured mean ``n_touched``.
     """
     import jax
     import jax.numpy as jnp
@@ -90,68 +101,95 @@ def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
         if nnz else 0
     sc = coo_to_sellcs(coo)
     rng = np.random.default_rng(1)
-    # the mesh gate needs to know whether the mesh had per-device memory:
-    # on a host-platform (cpu) mesh the "replicated" X is one shared buffer
-    # and column-sharding it saves nothing, so measured 2-D rows there are
-    # recorded but never gated (smoke_check.check_mesh_regressions)
+    # the mesh/compact gates need to know whether the mesh had per-device
+    # memory: on a host-platform (cpu) mesh the "replicated" X is one
+    # shared buffer and neither column-sharding nor compacting it saves
+    # anything, so measured rows there are recorded but never gated
+    # (smoke_check.check_mesh_regressions / check_compact_regressions)
     backend = jax.default_backend()
+    tag_cx = tuple(compact_flags) != (False,)
     for pd, pm in mesh_shapes:
         mesh = make_spmm_mesh((pd, pm))
-        row_sharded = partition_sellcs_rows(sc, pd)
-        # one shared merge partition for every depth: the span re-deal
-        # happens at trace time inside the jitted closure, so no per-depth
-        # copies of the base device-dealt arrays stay alive for the sweep
-        mrg_sharded = partition_sellcs_nnz(sc, pd)
-        variants = [("row", None,
-                     jax.jit(lambda X, rs=row_sharded, me=mesh:
-                             spmm_row_distributed(rs, X, me)))]
-        for c in chunk_counts:
-            variants.append(
-                ("merge", int(c),
-                 jax.jit(lambda X, ms=mrg_sharded, me=mesh, c=int(c):
-                         spmm_merge_distributed(ms, X, me, num_chunks=c))))
-        for sched, nc, jitted in variants:
-            tag = f"{name}/sellcs+{sched}{tag_of(pd, pm)}" + \
-                (f"/chunks={nc}" if nc is not None else "")
-            for k in ks:
-                X = jnp.asarray(rng.standard_normal(
-                    (n, k)).astype(np.float32))
-                sec = harness.time_fn(lambda: jitted(X), reps=reps,
-                                      warmup=1)
-                gflops = 2.0 * nnz * k / sec / 1e9
-                hbm, coll = spmm_distributed_traffic(
-                    m, n, k, pd, sched, nnz=nnz, max_row_nnz=max_row,
-                    model_devices=pm)
-                model_s = spmm_distributed_time(
-                    m, n, k, pd, sched, nnz=nnz, max_row_nnz=max_row,
-                    num_chunks=nc or 1, model_devices=pm)
-                csv.row(f"{tag}/k={k}", sec,
-                        f"gflops={gflops:.4g};hbm_mb={hbm / 1e6:.4g};"
-                        f"coll_mb={coll / 1e6:.4g};"
-                        f"model_us={model_s * 1e6:.4g};"
-                        f"backend={backend}")
+        for cf in compact_flags:
+            def mean_nt(sh):
+                # the map the multiply EXECUTES: a baked chunk plan
+                # gathers through its re-dealt map, not the base one
+                if not cf:
+                    return None
+                src = (sh.chunk_plan[3] if sh.chunk_plan is not None
+                       else sh.n_touched)
+                return float(np.mean(np.asarray(src)))
+            row_sharded = partition_sellcs_rows(sc, pd, compact_x=cf)
+            # one shared merge partition for every replicated depth: the
+            # span re-deal happens at trace time inside the jitted
+            # closure, so no per-depth copies of the base device-dealt
+            # arrays stay alive. Compacted depths > 1 bake the plan
+            # instead — its re-dealt col_map is what the multiply gathers
+            # through, and the model must price THAT map's n_touched
+            mrg_sharded = partition_sellcs_nnz(sc, pd, compact_x=cf)
+            variants = [("row", None, mean_nt(row_sharded),
+                         jax.jit(lambda X, rs=row_sharded, me=mesh:
+                                 spmm_row_distributed(rs, X, me)))]
+            for c in chunk_counts:
+                ms = mrg_sharded
+                if cf and int(c) > 1:
+                    ms = partition_sellcs_nnz(sc, pd, num_chunks=int(c),
+                                              compact_x=True)
+                variants.append(
+                    ("merge", int(c), mean_nt(ms),
+                     jax.jit(lambda X, ms=ms, me=mesh, c=int(c):
+                             spmm_merge_distributed(ms, X, me,
+                                                    num_chunks=c))))
+            cx = f"/cx={'on' if cf else 'off'}" if tag_cx else ""
+            for sched, nc, n_touched, jitted in variants:
+                tag = f"{name}/sellcs+{sched}{tag_of(pd, pm)}" + \
+                    (f"/chunks={nc}" if nc is not None else "") + cx
+                for k in ks:
+                    X = jnp.asarray(rng.standard_normal(
+                        (n, k)).astype(np.float32))
+                    sec = harness.time_fn(lambda: jitted(X), reps=reps,
+                                          warmup=1)
+                    gflops = 2.0 * nnz * k / sec / 1e9
+                    hbm, coll = spmm_distributed_traffic(
+                        m, n, k, pd, sched, nnz=nnz, max_row_nnz=max_row,
+                        model_devices=pm, compact_x=cf,
+                        n_touched=n_touched)
+                    model_s = spmm_distributed_time(
+                        m, n, k, pd, sched, nnz=nnz, max_row_nnz=max_row,
+                        num_chunks=nc or 1, model_devices=pm,
+                        compact_x=cf, n_touched=n_touched)
+                    derived = (f"gflops={gflops:.4g};"
+                               f"hbm_mb={hbm / 1e6:.4g};"
+                               f"coll_mb={coll / 1e6:.4g};"
+                               f"model_us={model_s * 1e6:.4g};"
+                               f"backend={backend}")
+                    if cf:
+                        derived += f";n_touched={n_touched:.4g}"
+                    csv.row(f"{tag}/k={k}", sec, derived)
 
 
 def sweep_distributed(name: str, coo, ks, devices: int, reps: int,
-                      csv, chunk_counts=(1,)) -> None:
+                      csv, chunk_counts=(1,), compact_flags=(False,)
+                      ) -> None:
     """Distributed schedules on a 1-D `devices`-wide data mesh: the
     ``@{P}dev`` row family ``smoke_check``'s chunk gate consumes."""
     _sweep_shapes(name, coo, ks, ((devices, 1),), reps, csv, chunk_counts,
-                  lambda pd, pm: f"@{pd}dev")
+                  lambda pd, pm: f"@{pd}dev", compact_flags=compact_flags)
 
 
 def sweep_mesh2d(name: str, coo, ks, mesh_shapes, reps: int, csv,
-                 chunk_counts=(1,)) -> None:
+                 chunk_counts=(1,), compact_flags=(False,)) -> None:
     """Both schedules over 2-D (data, model) mesh factorizations: the
     ``@{Pd}x{Pm}mesh`` row family — include a ``Pm = 1`` shape to give
     ``smoke_check``'s model-axis gate its pure-data baseline."""
     _sweep_shapes(name, coo, ks, mesh_shapes, reps, csv, chunk_counts,
-                  lambda pd, pm: f"@{pd}x{pm}mesh")
+                  lambda pd, pm: f"@{pd}x{pm}mesh",
+                  compact_flags=compact_flags)
 
 
 def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
         reps: int = 3, matrices_only=None, devices: int = 1,
-        chunk_counts=(1,), mesh_shapes=()) -> None:
+        chunk_counts=(1,), mesh_shapes=(), compact_flags=(False,)) -> None:
     from repro.data import matrices
     from . import harness
 
@@ -167,6 +205,9 @@ def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
         extra += f", devices={devices}, chunks={list(chunk_counts)}"
     if mesh_shapes:
         extra += f", meshes={['%dx%d' % s for s in mesh_shapes]}"
+    if tuple(compact_flags) != (False,):
+        extra += (", compact_x="
+                  f"{[('on' if f else 'off') for f in compact_flags]}")
     title = f"SpMM k-sweep (impl={impl}, k in {ks}{extra})"
     csv = harness.Csv(title)
     for name in names:
@@ -176,10 +217,12 @@ def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
         sweep_matrix(name, coo, ks, impl, reps, csv)
         if devices > 1:
             sweep_distributed(name, coo, ks, devices, reps, csv,
-                              chunk_counts=chunk_counts)
+                              chunk_counts=chunk_counts,
+                              compact_flags=compact_flags)
         if mesh_shapes:
             sweep_mesh2d(name, coo, ks, mesh_shapes, reps, csv,
-                         chunk_counts=chunk_counts)
+                         chunk_counts=chunk_counts,
+                         compact_flags=compact_flags)
 
 
 def main(argv=None) -> None:
@@ -205,6 +248,11 @@ def main(argv=None) -> None:
                          "sweep as PdxPm, e.g. 8x1,4x2 — include a Pm=1 "
                          "shape so smoke_check's model-axis gate has its "
                          "pure-data baseline")
+    ap.add_argument("--compact-x", default="off", dest="compact_x",
+                    help="comma-separated on/off: sweep the sparsity-aware "
+                         "X gather next to replication — 'on,off' emits a "
+                         "cx=on row per cx=off row so smoke_check's "
+                         "compact gate has its replicated baseline")
     args = ap.parse_args(argv)
     try:
         chunk_counts = tuple(int(c) for c in args.chunks.split(",") if c)
@@ -213,6 +261,11 @@ def main(argv=None) -> None:
                          f"{args.chunks!r}")
     if not chunk_counts or any(c < 1 for c in chunk_counts):
         raise SystemExit(f"--chunks entries must be >= 1, got {args.chunks!r}")
+    cx_entries = tuple(s for s in args.compact_x.split(",") if s)
+    if not cx_entries or any(s not in ("on", "off") for s in cx_entries):
+        raise SystemExit(f"--compact-x must be comma-separated on/off "
+                         f"entries, got {args.compact_x!r}")
+    compact_flags = tuple(s == "on" for s in cx_entries)
     mesh_shapes = ()
     if args.mesh:
         try:
@@ -247,7 +300,7 @@ def main(argv=None) -> None:
         reps=args.reps,
         matrices_only=args.matrices.split(",") if args.matrices else None,
         devices=args.devices, chunk_counts=chunk_counts,
-        mesh_shapes=mesh_shapes)
+        mesh_shapes=mesh_shapes, compact_flags=compact_flags)
     if args.json:
         harness.dump_json(args.json)
 

@@ -50,6 +50,9 @@ class TuneResult:
     mesh_shape: Optional[Tuple[int, int]] = None
                                       # (P_data, P_model) factorization the
                                       #   distributed score picked
+    compact_x: Optional[bool] = None  # sparsity-aware X gather picked by
+                                      #   the distributed score (sellcs
+                                      #   only; None off the mesh)
 
 
 def _measure(fn: Callable, reps: int = 5, warmup: int = 2) -> float:
@@ -153,24 +156,28 @@ def _rescore_distributed(r: TuneResult, stats, k: int, num_devices: int,
                          num_spmvs: int) -> TuneResult:
     """Scale a measured single-device result across the mesh with the
     roofline traffic model and pick the best (schedule, mesh shape,
-    num_chunks) for it — "merge" sweeps the psum pipelining depths, "row"
-    has no collective to chunk, and both sweep every (P_data, P_model)
-    factorization of the mesh."""
+    num_chunks, compact_x) for it — "merge" sweeps the psum pipelining
+    depths, "row" has no collective to chunk, both sweep every
+    (P_data, P_model) factorization of the mesh, and the SELL-C-σ format
+    additionally scores the sparsity-aware X gather (compact=False is
+    scored first, so a dense-columns tie refuses compaction)."""
     from repro.roofline.analysis import spmm_distributed_time
     from .selector import _matrix_bytes_est, distributed_schedule_grid
     mat_bytes = _matrix_bytes_est(r.algorithm, stats)
     base_s = spmm_distributed_time(stats.m, stats.n, k, 1, "row",
                                    matrix_bytes=mat_bytes)
     grid = distributed_schedule_grid(num_devices)
-    (schedule, num_chunks, mesh_shape), model_s = min(
-        (((s, nc, mesh),
+    compacts = (False, True) if r.algorithm == "sellcs" else (False,)
+    (schedule, num_chunks, mesh_shape, compact), model_s = min(
+        (((s, nc, mesh, cf),
           spmm_distributed_time(stats.m, stats.n, k, mesh[0],
                                 s, matrix_bytes=mat_bytes,
                                 max_row_nnz=stats.max_row_nnz,
-                                num_chunks=nc, model_devices=mesh[1]))
-         for s, nc, mesh in grid), key=lambda t: t[1])
+                                num_chunks=nc, model_devices=mesh[1],
+                                compact_x=cf, nnz=stats.nnz))
+         for s, nc, mesh in grid for cf in compacts), key=lambda t: t[1])
     per_multiply = r.spmv_s * (model_s / max(base_s, 1e-30))
     return dataclasses.replace(
         r, total_s=r.convert_s + num_spmvs * per_multiply,
         num_devices=num_devices, schedule=schedule, dist_model_s=model_s,
-        num_chunks=num_chunks, mesh_shape=mesh_shape)
+        num_chunks=num_chunks, mesh_shape=mesh_shape, compact_x=compact)

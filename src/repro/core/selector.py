@@ -307,14 +307,16 @@ DISTRIBUTED_ALGOS = ("parcrs", "sellcs")
 
 
 class DistributedChoice(NamedTuple):
-    """Winner of the joint (format × schedule × mesh × chunks) grid.
-    Unpacks like the old ``(format, schedule, num_chunks)`` triple with
-    ``mesh_shape`` — the chosen (P_data, P_model) factorization — riding
-    fourth."""
+    """Winner of the joint (format × schedule × mesh × chunks × gather)
+    grid. Unpacks like the old ``(format, schedule, num_chunks)`` triple
+    with ``mesh_shape`` — the chosen (P_data, P_model) factorization —
+    riding fourth and ``compact_x`` — whether the sparsity-aware X gather
+    beats replication — fifth."""
     algorithm: str
     schedule: str
     num_chunks: int
     mesh_shape: Tuple[int, int] = (1, 1)
+    compact_x: bool = False
 
 
 def select_distributed(stats: MatrixStats, *, k: int = 1,
@@ -341,9 +343,16 @@ def select_distributed(stats: MatrixStats, *, k: int = 1,
     ``num_devices`` (``mesh_shape`` pins one): a ``model`` axis divides
     every k-proportional byte term by P_model at the cost of a shallower
     matrix-stream split, so it starts paying once k is large enough that
-    X/Y/psum bytes dominate the stream. Times are normalized to the
-    single-device ParCRS stream so the paper's conversion-cost priors keep
-    their units, then amortized exactly like :func:`amortized_cost`.
+    X/Y/psum bytes dominate the stream. For the SELL-C-σ mesh format the
+    grid additionally scores the sparsity-aware X gather
+    (``compact_x=True``): the replicated-X term becomes nnz-proportional
+    (:func:`repro.roofline.analysis.spmm_touched_fraction`), so compaction
+    wins exactly when the matrix's columns are sparse enough that a shard
+    touches fewer than ``n`` of them — on near-dense columns the modelled
+    terms tie and the strict comparison keeps replication (the gather
+    would be a wash that still pays a col_map). Times are normalized to
+    the single-device ParCRS stream so the paper's conversion-cost priors
+    keep their units, then amortized exactly like :func:`amortized_cost`.
 
     A caller-measured ``throughput`` table (same schema as
     :func:`select_algorithm`'s) replaces the modelled single-device ratio
@@ -390,20 +399,28 @@ def select_distributed(stats: MatrixStats, *, k: int = 1,
                 dtype_bytes=dtype_bytes)
             measured = thr["parcrs"] / thr[algo] * spmm_cost_scale(
                 algo, stats, k, dtype_bytes)
+        # the compact-gather knob is executable only on the SELL-C-σ slice
+        # stream; recommending it for a format that cannot run it would be
+        # worse than a coarser score (same rule as DISTRIBUTED_ALGOS)
+        compacts = (False, True) if algo == "sellcs" else (False,)
         for schedule, nc, (pd, pm) in grid:
-            sec = spmm_distributed_time(
-                stats.m, stats.n, k, pd, schedule,
-                matrix_bytes=mat_bytes, dtype_bytes=dtype_bytes,
-                max_row_nnz=stats.max_row_nnz, num_chunks=nc,
-                model_devices=pm)
-            if thr is None:
-                per_spmv = sec / max(base_s, 1e-30)
-            else:
-                per_spmv = measured * sec / max(algo_base_s, 1e-30)
-            cost = conv[algo] + num_spmvs * per_spmv
-            # "or best is None" keeps a valid choice even when every
-            # cost is inf (e.g. all-inf conversion priors)
-            if cost < best_cost or best is None:
-                best = DistributedChoice(algo, schedule, nc, (pd, pm))
-                best_cost = cost
+            for compact in compacts:
+                sec = spmm_distributed_time(
+                    stats.m, stats.n, k, pd, schedule,
+                    matrix_bytes=mat_bytes, dtype_bytes=dtype_bytes,
+                    max_row_nnz=stats.max_row_nnz, num_chunks=nc,
+                    model_devices=pm, compact_x=compact, nnz=stats.nnz)
+                if thr is None:
+                    per_spmv = sec / max(base_s, 1e-30)
+                else:
+                    per_spmv = measured * sec / max(algo_base_s, 1e-30)
+                cost = conv[algo] + num_spmvs * per_spmv
+                # "or best is None" keeps a valid choice even when every
+                # cost is inf (e.g. all-inf conversion priors); the strict
+                # "<" with compact=False scored first refuses compaction
+                # whenever it ties replication (dense-columns wash)
+                if cost < best_cost or best is None:
+                    best = DistributedChoice(algo, schedule, nc, (pd, pm),
+                                             compact)
+                    best_cost = cost
     return best

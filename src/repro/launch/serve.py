@@ -17,7 +17,10 @@ cross-device schedule and the merge-psum pipelining depth come from the
 ``core.select_distributed`` grid (``--chunks c`` pins the depth).
 ``--mesh Pd,Pm`` pins a 2-D (data, model) factorization instead: the model
 axis column-shards the X/Y k-slabs so per-device psum and replicated-X
-bytes drop by Pm — the k ≫ 128 scaling axis. On CPU, force host-platform
+bytes drop by Pm — the k ≫ 128 scaling axis. ``--compact-x on`` partitions
+with per-shard column compaction (each data shard gathers only the X rows
+its nonzeros touch instead of reading the replicated slab; ``auto`` asks
+the traffic model whether the gather pays). On CPU, force host-platform
 devices first:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --mode spmv --matrix mawi_like \
@@ -79,11 +82,18 @@ def _make_distributed_spmm(coo, stats, args, mesh_shape):
     grid = distributed_schedule_grid(
         total, pinned_chunks=args.chunks if args.chunks > 0 else None,
         pinned_mesh=mesh_shape or (total, 1))
-    (schedule, chunks, mesh_shape) = min(
-        grid, key=lambda t: spmm_distributed_time(
-            stats.m, stats.n, args.max_batch, t[2][0], t[0],
+    # --compact-x on/off pins the sparsity-aware X gather; auto lets the
+    # traffic model decide (off is scored first, so a modelled tie —
+    # near-dense columns — refuses the gather)
+    compacts = {"auto": (False, True), "on": (True,),
+                "off": (False,)}[args.compact_x]
+    (schedule, chunks, mesh_shape, compact) = min(
+        ((t[0], t[1], t[2], cf) for t in grid for cf in compacts),
+        key=lambda q: spmm_distributed_time(
+            stats.m, stats.n, args.max_batch, q[2][0], q[0],
             matrix_bytes=sellcs_bytes, max_row_nnz=stats.max_row_nnz,
-            num_chunks=t[1], model_devices=t[2][1]))
+            num_chunks=q[1], model_devices=q[2][1], compact_x=q[3],
+            nnz=stats.nnz))
     pd, pm = mesh_shape
     mesh = make_spmm_mesh(mesh_shape)
     sc = coo_to_sellcs(coo, c=_pick_chunk(stats.m, pd))
@@ -92,23 +102,35 @@ def _make_distributed_spmm(coo, stats, args, mesh_shape):
     if impl == "auto":
         impl = "pallas"
     mesh_tag = f"{pd}x{pm}mesh" if pm > 1 else f"{pd}dev"
+    cx_tag = "/cx=on" if compact else ""
     if schedule == "row":
-        sharded = partition_sellcs_rows(sc, pd)
+        sharded = partition_sellcs_rows(sc, pd, compact_x=compact)
         jitted = jax.jit(lambda X: spmm_row_distributed(
             sharded, X, mesh, impl=impl))
-        label = f"sellcs+row@{mesh_tag}"
+        label = f"sellcs+row@{mesh_tag}{cx_tag}"
     else:
         # the span plan is baked at partition time; the multiply reuses it
-        sharded = partition_sellcs_nnz(sc, pd, num_chunks=chunks)
+        sharded = partition_sellcs_nnz(sc, pd, num_chunks=chunks,
+                                       compact_x=compact)
         jitted = jax.jit(lambda X: spmm_merge_distributed(
             sharded, X, mesh, impl=impl, num_chunks=chunks))
-        label = f"sellcs+merge@{mesh_tag}/chunks={chunks}"
+        label = f"sellcs+merge@{mesh_tag}/chunks={chunks}{cx_tag}"
     # the jitted closure keeps repeated flushes of one batch shape from
-    # retracing the shard_map body
+    # retracing the shard_map body.
+    # price the gather with the map the multiply EXECUTES: the chunked
+    # merge gathers through the chunk plan's re-dealt map, not the base
+    # partition's (the re-deal hands every device rows of every span, so
+    # the two touched sets differ)
+    n_touched = None
+    if compact:
+        nt_src = (sharded.chunk_plan[3]
+                  if sharded.chunk_plan is not None else sharded.n_touched)
+        n_touched = float(np.mean(np.asarray(nt_src)))
 
     def spmm_fn(_mat, X):
         return jitted(X)
-    return sc, spmm_fn, label, schedule, chunks, mesh_shape
+    return (sc, spmm_fn, label, schedule, chunks, mesh_shape, compact,
+            n_touched)
 
 
 def serve_spmv(args):
@@ -130,13 +152,14 @@ def serve_spmv(args):
     spmm_fn = sched = None
     chunks = 1
     mesh_shape = None
+    compact, n_touched = False, None
     if args.mesh:
         from repro.launch.mesh import parse_mesh_shape
         mesh_shape = parse_mesh_shape(args.mesh)
         args.devices = mesh_shape[0] * mesh_shape[1]
     if args.devices > 1:
-        mat, spmm_fn, algo, sched, chunks, mesh_shape = \
-            _make_distributed_spmm(coo, stats, args, mesh_shape)
+        (mat, spmm_fn, algo, sched, chunks, mesh_shape, compact,
+         n_touched) = _make_distributed_spmm(coo, stats, args, mesh_shape)
     else:
         algo = args.algorithm or select(stats, MachineSpec(1),
                                         num_spmvs=num_spmms,
@@ -186,10 +209,21 @@ def serve_spmv(args):
         pd, pm = mesh_shape
         hbm, coll = spmm_distributed_traffic(
             stats.m, stats.n, args.max_batch, pd, sched,
-            nnz=stats.nnz, max_row_nnz=stats.max_row_nnz, model_devices=pm)
+            nnz=stats.nnz, max_row_nnz=stats.max_row_nnz, model_devices=pm,
+            compact_x=compact, n_touched=n_touched)
         print(f"[serve-spmv] modelled per-device traffic: {hbm / 1e6:.2f} MB "
               f"HBM + {coll / 1e6:.2f} MB collective per flush "
-              f"(mesh=({pd},{pm}), schedule={sched}, chunks={chunks})")
+              f"(mesh=({pd},{pm}), schedule={sched}, chunks={chunks}, "
+              f"compact_x={'on' if compact else 'off'})")
+        if compact:
+            hbm_rep, _ = spmm_distributed_traffic(
+                stats.m, stats.n, args.max_batch, pd, sched,
+                nnz=stats.nnz, max_row_nnz=stats.max_row_nnz,
+                model_devices=pm)
+            print(f"[serve-spmv] compact gather: mean n_touched "
+                  f"{n_touched:.0f} of n={stats.n} rows per shard — "
+                  f"{(hbm_rep - hbm) / 1e6:.2f} MB HBM saved vs "
+                  "replicated X per flush")
         if sched == "merge":
             mono, over = (spmm_distributed_collective_s(
                 stats.m, stats.n, args.max_batch, pd, sched,
@@ -227,6 +261,13 @@ def main(argv=None):
                     help="pipeline the merge-schedule psum into this many "
                          "chunks (0 = pick by the roofline overlap model; "
                          "ignored by the row schedule)")
+    ap.add_argument("--compact-x", default="auto",
+                    choices=("auto", "on", "off"), dest="compact_x",
+                    help="sparsity-aware X gather for the distributed SpMM:"
+                         " partition with per-shard column compaction so "
+                         "each data shard gathers only the X rows its "
+                         "nonzeros touch (auto = let the traffic model "
+                         "decide when the gather beats replication)")
     ap.add_argument("--impl", default="auto",
                     choices=("auto", "ref", "pallas", "pallas_interpret"))
     ap.add_argument("--reduced", action="store_true")

@@ -177,11 +177,25 @@ def spmm_roofline_gflops(ai: float, peak_flops: float = PEAK_FLOPS_BF16,
 # Distributed SpMM traffic model — used by core.selector.select_distributed
 # and core.autotune(num_devices=) to score (format x schedule x k) jointly.
 # --------------------------------------------------------------------------
+def spmm_touched_fraction(n: int, nnz: int, num_devices: int = 1) -> float:
+    """Modelled fraction of the ``n`` X rows one *data* shard's compacted
+    gather reads: a shard holding ``nnz / P`` nonzeros touches at most that
+    many distinct columns (and never more than ``n``) — the exactly
+    nnz-proportional bound the ``compact_x`` traffic term prices when no
+    measured per-shard ``n_touched`` is supplied."""
+    if n <= 0:
+        return 0.0
+    P = max(int(num_devices), 1)
+    return min(float(nnz) / P, float(n)) / float(n)
+
+
 def spmm_distributed_traffic(m: int, n: int, k: int, num_devices: int,
                              schedule: str,
                              matrix_bytes: Optional[float] = None,
                              nnz: int = 0, dtype_bytes: int = 4,
-                             max_row_nnz: int = 0, model_devices: int = 1
+                             max_row_nnz: int = 0, model_devices: int = 1,
+                             compact_x: bool = False,
+                             n_touched: Optional[float] = None
                              ) -> Tuple[float, float]:
     """(per-device HBM bytes, per-device collective bytes) of one k-RHS
     distributed SpMM under the two paper schedules.
@@ -213,6 +227,17 @@ def spmm_distributed_traffic(m: int, n: int, k: int, num_devices: int,
     split can ship up to ``k_tile * P_model`` extra padding columns —
     negligible at the k ≫ 128 sizes the model axis exists for.
 
+    ``compact_x=True`` prices the sparsity-aware gather of
+    ``repro.spmm.distributed``: each data shard reads only the X rows its
+    nonzeros name, so the X term becomes ``min(n_touched, n) * kc``
+    bytes — exactly nnz-proportional via :func:`spmm_touched_fraction`
+    when no measured per-shard mean ``n_touched`` is supplied, and never
+    above the replicated figure (near-dense columns cap at ``n``, where
+    the gather is a wash and the selector keeps replication). The int32
+    map read and the convert-time relabel are priced by
+    ``ShardedSellCS.storage_bytes``, not per multiply — like the k-tile
+    padding, they are below the model's resolution.
+
     ``num_devices == 1`` degrades to the single-device stream for both
     (per model shard when ``model_devices > 1``: full matrix stream, a
     ``k / P_model`` column slab, no collective — the psum axis is trivial).
@@ -225,7 +250,12 @@ def spmm_distributed_traffic(m: int, n: int, k: int, num_devices: int,
     P = max(int(num_devices), 1)
     Pm = max(int(model_devices), 1)
     kc = float(k) / Pm                   # X/Y columns owned per model shard
-    x_bytes = float(n) * kc * dtype_bytes
+    if compact_x:
+        nt = (min(float(n_touched), float(n)) if n_touched is not None
+              else spmm_touched_fraction(n, nnz, P) * float(n))
+        x_bytes = nt * kc * dtype_bytes
+    else:
+        x_bytes = float(n) * kc * dtype_bytes
     if P == 1:
         return matrix_bytes + x_bytes + float(m) * kc * dtype_bytes, 0.0
     if schedule == "row":
@@ -252,7 +282,10 @@ def spmm_distributed_collective_s(m: int, n: int, k: int, num_devices: int,
                                   max_row_nnz: int = 0, num_chunks: int = 1,
                                   hbm_bw: float = HBM_BW,
                                   link_bw: float = ICI_LINK_BW,
-                                  model_devices: int = 1) -> float:
+                                  model_devices: int = 1,
+                                  compact_x: bool = False,
+                                  n_touched: Optional[float] = None
+                                  ) -> float:
     """EXPOSED collective seconds of one distributed multiply — the part of
     the wire time that does not hide under the slice stream.
 
@@ -273,7 +306,8 @@ def spmm_distributed_collective_s(m: int, n: int, k: int, num_devices: int,
     hbm, coll = spmm_distributed_traffic(
         m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
         dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
-        model_devices=model_devices)
+        model_devices=model_devices, compact_x=compact_x,
+        n_touched=n_touched)
     if coll <= 0.0:
         return 0.0                    # "row" / single device: no wire time
     c = int(num_chunks)
@@ -289,22 +323,28 @@ def spmm_distributed_time(m: int, n: int, k: int, num_devices: int,
                           max_row_nnz: int = 0, num_chunks: int = 1,
                           hbm_bw: float = HBM_BW,
                           link_bw: float = ICI_LINK_BW,
-                          model_devices: int = 1) -> float:
+                          model_devices: int = 1,
+                          compact_x: bool = False,
+                          n_touched: Optional[float] = None) -> float:
     """Modelled seconds per distributed multiply: HBM term + the *exposed*
     collective term. ``num_chunks = 1`` keeps the PR-2 no-overlap model
     (both terms on the Y critical path, plus one launch); ``num_chunks > 1``
     prices the pipelined fixup of ``spmm_merge_distributed(num_chunks=)``;
     ``model_devices > 1`` prices the 2-D (data, model) mesh (k-proportional
-    terms divide by ``P_model``)."""
+    terms divide by ``P_model``); ``compact_x=True`` prices the
+    sparsity-aware X gather (the X term becomes nnz-proportional —
+    ``n_touched`` supplies a measured per-shard mean)."""
     hbm, _ = spmm_distributed_traffic(
         m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
         dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
-        model_devices=model_devices)
+        model_devices=model_devices, compact_x=compact_x,
+        n_touched=n_touched)
     return hbm / hbm_bw + spmm_distributed_collective_s(
         m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
         dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
         num_chunks=num_chunks, hbm_bw=hbm_bw, link_bw=link_bw,
-        model_devices=model_devices)
+        model_devices=model_devices, compact_x=compact_x,
+        n_touched=n_touched)
 
 
 def from_compiled(compiled, chips: int, model_flops: float = 0.0,

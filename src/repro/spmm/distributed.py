@@ -40,6 +40,21 @@ chunked pipeline orthogonally: columns are independent, so no extra
 collective appears. This is the distributed-memory cure of Eckstein &
 Mátyásfalvi applied to the vector dimension: shrink what crosses the wire
 instead of pushing it harder.
+
+Sparsity-aware X gather (``compact_x``) — the remaining un-shrunk traffic
+term: a data shard's slice stream touches only the columns its nonzeros
+name, yet the replicated X slab makes every shard read all ``n`` rows.
+Partitioning with ``compact_x=True`` computes each shard's touched-column
+map at convert time (``col_map``/``n_touched``), relabels the shard's
+``cols`` into the compacted index space ``[0, n_touched)``, and the
+multiply gathers the touched X rows once per call into a per-shard
+``[n_touched, kc]`` slab (still column-sharded across ``model``) — the
+replicated-X read becomes nnz-proportional on both mesh axes, the
+hypergraph-partitioning move of Eckstein & Mátyásfalvi applied to the
+vector reads. Compaction composes with ``num_chunks`` pipelining (the
+span re-deal builds its own touched map over the re-dealt rows) and costs
+one int32 map per shard, priced by ``ShardedSellCS.storage_bytes`` and
+``roofline.spmm_distributed_traffic(compact_x=True)``.
 """
 from __future__ import annotations
 
@@ -76,10 +91,14 @@ class ShardedSellCS(NamedTuple):
     nnz: int
     schedule: str            # "row" | "merge"
     chunk_plan: Optional[Tuple] = None
-                             # (num_chunks, spans) precomputed by
+                             # (num_chunks, spans, plan col_map, plan
+                             #   n_touched) precomputed by
                              #   partition_sellcs_nnz(num_chunks=) so the
                              #   pipelined multiply never re-deals the
-                             #   stream host-side per call
+                             #   stream host-side per call; the map entries
+                             #   are None unless compact_x (the span
+                             #   re-deal owns different rows than the base
+                             #   partition, hence its own map)
     row_counts: Optional[jax.Array] = None
                              # int32[Pdev] — REAL width-rows per shard,
                              #   recorded at partition time. The stream can
@@ -87,15 +106,89 @@ class ShardedSellCS(NamedTuple):
                              #   all explicit zeros (SellCS.to_coo
                              #   round-trips them by design), so real vs
                              #   padding is NOT derivable from the values.
+    col_map: Optional[jax.Array] = None
+                             # int32[Pdev, Ntc] — sorted global column ids
+                             #   each shard touches (compact_x=True only):
+                             #   the multiply gathers X rows through this
+                             #   map instead of replicating all n rows.
+                             #   cols above are relabeled into its index
+                             #   space; padding entries point at slot 0.
+    n_touched: Optional[jax.Array] = None
+                             # int32[Pdev] — true distinct-column count per
+                             #   shard (the real prefix of each col_map row)
+
+    def storage_bytes(self) -> int:
+        """Faithful device-side cost of the partitioned stream: every
+        member array, the ``compact_x`` column maps, and any baked chunk
+        plan. Kept equal to the sum of the member arrays' ``nbytes``
+        (asserted in the tests) so the paper's conversion-amortization
+        comparisons ("472 multiplications" §7) never flatter the
+        distributed format — the col_map is storage the compaction buys
+        its gather with, not free metadata."""
+        total = (self.data.nbytes + self.cols.nbytes + self.slice_of.nbytes
+                 + self.slice_offset.nbytes + self.row_perm.nbytes)
+        for opt in (self.row_counts, self.col_map, self.n_touched):
+            if opt is not None:
+                total += opt.nbytes
+        if self.chunk_plan is not None:
+            for sp in self.chunk_plan[1]:
+                total += sp.data.nbytes + sp.cols.nbytes + sp.slice_of.nbytes
+            for opt in self.chunk_plan[2:]:
+                if opt is not None:
+                    total += opt.nbytes
+        return int(total)
 
 
-def partition_sellcs_rows(sc: SellCS, num_devices: int) -> ShardedSellCS:
+def _compact_columns(Cc: np.ndarray, counts: np.ndarray):
+    """Host-side, convert time: per-shard touched-column maps over the
+    device-dealt ``cols`` blocks.
+
+    ``Cc[p, :counts[p]]`` holds shard ``p``'s REAL width-rows (lane padding
+    inside a real width-row carries col 0 with data 0 — the harmless-FMA
+    convention — so col 0 joins the touched set whenever the shard is
+    nonempty: the kernel really does read that X row). Returns
+    ``(relabeled Cc, col_map int32[P, Ntc], n_touched int32[P])`` where
+    ``col_map[p]`` is the sorted touched set (zero-padded to the widest
+    shard) and ``Cc`` is rewritten in-place into its index space.
+    Padding width-rows keep col 0 — in range of every gathered slab.
+    """
+    P = Cc.shape[0]
+    touched = [np.unique(Cc[p, :int(counts[p])]) if int(counts[p])
+               else np.zeros(0, np.int64) for p in range(P)]
+    col_map, n_touched = _pack_maps(touched)
+    for p, t in enumerate(touched):
+        ln = int(counts[p])
+        if ln:
+            Cc[p, :ln] = np.searchsorted(t, Cc[p, :ln])
+    return Cc, col_map, n_touched
+
+
+def _pack_maps(touched):
+    """Stack per-device sorted touched sets into the dense
+    ``(col_map int64[P, Ntc], n_touched int64[P])`` pair (zero-padded to
+    the widest shard; Ntc >= 1 so an all-empty mesh still gathers a
+    1-row slab)."""
+    n_touched = np.array([t.size for t in touched], np.int64)
+    Ntc = max(int(n_touched.max()) if len(touched) else 0, 1)
+    col_map = np.zeros((len(touched), Ntc), np.int64)
+    for p, t in enumerate(touched):
+        col_map[p, :t.size] = t
+    return col_map, n_touched
+
+
+def partition_sellcs_rows(sc: SellCS, num_devices: int, *,
+                          compact_x: bool = False) -> ShardedSellCS:
     """BCOH banding over the slice stream: contiguous slice ranges balanced
     by width-row count (each width-row is C padded nonzeros, so equal width
     is equal work). Host-side, convert time.
 
     Slices own disjoint row slots, so slice bands shard the (σ-permuted)
     rows — Y needs no collective.
+
+    ``compact_x=True`` additionally computes each shard's touched-column
+    map and relabels ``cols`` into its compacted index space: the multiply
+    then gathers only the X rows this shard's nonzeros name instead of
+    reading the full replicated slab (see the module docstring).
     """
     _check_devices(num_devices)
     C = sc.chunk
@@ -122,15 +215,24 @@ def partition_sellcs_rows(sc: SellCS, num_devices: int) -> ShardedSellCS:
             D[p, :ln] = data[a:b]
             Cc[p, :ln] = cols[a:b]
             So[p, :ln] = (slice_of[a:b] - bounds[p]).astype(np.int32)
+    counts = np.diff(w_start)
+    col_map = n_touched = None
+    if compact_x:
+        Cc, cm, nt = _compact_columns(Cc.astype(np.int64), counts)
+        Cc = Cc.astype(np.int32)
+        col_map = jnp.asarray(cm.astype(np.int32))
+        n_touched = jnp.asarray(nt.astype(np.int32))
     return ShardedSellCS(
         jnp.asarray(D), jnp.asarray(Cc), jnp.asarray(So),
         jnp.asarray(bounds[:-1].astype(np.int32)), sc.row_perm,
         sc.shape, C, S, Sp, sc.nnz, "row",
-        row_counts=jnp.asarray(np.diff(w_start).astype(np.int32)))
+        row_counts=jnp.asarray(counts.astype(np.int32)),
+        col_map=col_map, n_touched=n_touched)
 
 
 def partition_sellcs_nnz(sc: SellCS, num_devices: int, *,
-                         num_chunks: int = 1) -> ShardedSellCS:
+                         num_chunks: int = 1,
+                         compact_x: bool = False) -> ShardedSellCS:
     """Merge-style equal spans over the width-row stream (slices — and with
     them dense rows — may straddle devices). ``slice_of`` stays global:
     every device scatters into the full slot space and the carry-out is
@@ -140,6 +242,11 @@ def partition_sellcs_nnz(sc: SellCS, num_devices: int, *,
     plan (``_chunk_substreams``) here, at convert time, so
     ``spmm_merge_distributed(..., num_chunks=num_chunks)`` reuses it
     instead of re-dealing the stream host-side on every multiply.
+
+    ``compact_x=True`` relabels each shard's ``cols`` through its
+    touched-column map (see ``partition_sellcs_rows``); the chunk plan,
+    which re-deals width-rows across devices, carries its *own* map over
+    the re-dealt ownership.
     """
     _check_devices(num_devices)
     if num_chunks < 1:
@@ -164,15 +271,29 @@ def partition_sellcs_nnz(sc: SellCS, num_devices: int, *,
             D[p, :ln] = data[a:b]
             Cc[p, :ln] = cols[a:b]
             So[p, :ln] = slice_of[a:b].astype(np.int32)
+    counts = np.diff(bounds)
     sharded = ShardedSellCS(
         jnp.asarray(D), jnp.asarray(Cc), jnp.asarray(So),
         jnp.zeros((num_devices,), jnp.int32), sc.row_perm,
         sc.shape, C, S, S, sc.nnz, "merge",
-        row_counts=jnp.asarray(np.diff(bounds).astype(np.int32)))
+        row_counts=jnp.asarray(counts.astype(np.int32)))
+    plan = None
     if num_chunks > 1:
+        # baked BEFORE the base relabel: the plan needs global column ids
+        # anyway (its own map covers the re-dealt ownership), so building
+        # it first spares the relabel -> un-relabel round trip the
+        # multiply-time recompute path has to pay
+        plan = _chunk_substreams(sharded, num_chunks, compact=compact_x)
+    if compact_x:
+        Cc2, cm, nt = _compact_columns(Cc.astype(np.int64), counts)
         sharded = sharded._replace(
-            chunk_plan=(int(num_chunks),
-                        _chunk_substreams(sharded, num_chunks)))
+            cols=jnp.asarray(Cc2.astype(np.int32)),
+            col_map=jnp.asarray(cm.astype(np.int32)),
+            n_touched=jnp.asarray(nt.astype(np.int32)))
+    if plan is not None:
+        sharded = sharded._replace(
+            chunk_plan=(int(num_chunks), plan.spans, plan.col_map,
+                        plan.n_touched))
     return sharded
 
 
@@ -195,7 +316,7 @@ def _resolve_model_axis(mesh: Mesh, axis: str,
 
 def _prep(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh, axis: str,
           impl: str, k_tile: Optional[int], expect: str,
-          model_axis: Optional[str]):
+          model_axis: Optional[str], compact_x: Optional[bool] = None):
     if sharded.schedule != expect:
         raise ValueError(
             f"sharded matrix was partitioned for the {sharded.schedule!r} "
@@ -206,6 +327,15 @@ def _prep(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh, axis: str,
         raise ValueError(
             f"matrix is partitioned over {ndev} devices but mesh axis "
             f"{axis!r} has {mesh.shape[axis]}")
+    compact = sharded.col_map is not None
+    if compact_x is not None and compact_x != compact:
+        # cols are relabeled (or not) at partition time — a multiply-time
+        # override cannot re-derive the other index space
+        raise ValueError(
+            f"compact_x={compact_x} but the matrix was partitioned with "
+            f"compact_x={compact}; repartition with partition_sellcs_"
+            f"{'rows' if expect == 'row' else 'nnz'}(..., "
+            f"compact_x={compact_x})")
     maxis, pm = _resolve_model_axis(mesh, axis, model_axis)
     if impl not in ("ref", "pallas", "pallas_interpret"):
         raise ValueError(f"impl must be ref|pallas|pallas_interpret, "
@@ -231,7 +361,23 @@ def _prep(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh, axis: str,
             x_pad = x2
         else:
             x_pad = jnp.zeros((n, kc * pm), x2.dtype).at[:, :k].set(x2)
-    return x2, squeeze, k, kt, x_pad, use_pallas, maxis, pm
+    return x2, squeeze, k, kt, x_pad, use_pallas, maxis, pm, compact
+
+
+def _gather_x(x_pad: jax.Array, col_map: jax.Array,
+              use_pallas: bool) -> jax.Array:
+    """The sparsity-aware X gather: one ``x_pad[col_map]`` per multiply
+    builds the per-shard ``[Ntc, kp]`` compacted slabs, stacked on the
+    device axis — each data shard reads only the X rows its relabeled
+    ``cols`` name. Slab height is padded to the Pallas lane width (padding
+    map entries point at row 0; only data==0 lanes ever index the pad)."""
+    ntc = col_map.shape[1]
+    ntp = (-(-max(ntc, 1) // LANE) * LANE) if use_pallas else max(ntc, 1)
+    if ntp != ntc:
+        col_map = jnp.concatenate(
+            [col_map, jnp.zeros((col_map.shape[0], ntp - ntc),
+                                col_map.dtype)], axis=1)
+    return x_pad[col_map]
 
 
 def _out_dtype(sharded: ShardedSellCS, x2: jax.Array, use_pallas: bool):
@@ -254,8 +400,19 @@ class _ChunkSpan(NamedTuple):
     slice_of: jax.Array      # int32[P, Wc] — GLOBAL slice ids
 
 
-def _chunk_substreams(sharded: ShardedSellCS,
-                      num_chunks: int) -> Tuple[_ChunkSpan, ...]:
+class _ChunkPlan(NamedTuple):
+    """The pipelined span plan plus — for a ``compact_x`` stream — the
+    touched-column map of the RE-DEALT ownership: the span deal gives each
+    device different width-rows than the base partition, so the base
+    ``col_map`` does not cover them; one map per device spans all its rows
+    across every span (one gathered slab per multiply, not one per span)."""
+    spans: Tuple[_ChunkSpan, ...]
+    col_map: Optional[jax.Array]     # int32[P, Ntc'] — None when uncompacted
+    n_touched: Optional[jax.Array]   # int32[P]
+
+
+def _chunk_substreams(sharded: ShardedSellCS, num_chunks: int, *,
+                      compact: Optional[bool] = None) -> _ChunkPlan:
     """Host-side: split the σ-sorted slice stream into ``num_chunks``
     width-balanced slice spans (``balanced_row_bands`` over the cumulative
     width, the same splitter both partitioners use) and re-partition EACH
@@ -270,9 +427,24 @@ def _chunk_substreams(sharded: ShardedSellCS,
 
     ``num_chunks > S`` degenerates to one span per nonempty slice (empty
     bands are dropped); the spans exactly tile ``[0, S)`` in order.
+
+    For a ``compact`` plan (default: follow the shard's own
+    ``compact_x`` state; ``partition_sellcs_nnz`` passes it explicitly to
+    bake plans before the base relabel) the finished spans are relabeled
+    through a fresh per-device map over the re-dealt ownership
+    (``_ChunkPlan.col_map``). A stream whose base is already compacted is
+    first un-relabeled through its ``col_map`` — the global stream must
+    carry global column ids.
     """
     data = np.asarray(sharded.data)                  # [P, Wp, C]
     cols = np.asarray(sharded.cols)
+    if compact is None:
+        compact = sharded.col_map is not None
+    if sharded.col_map is not None:
+        # back to global ids: device p's relabeled cols index its own map
+        cm = np.asarray(sharded.col_map, np.int64)
+        cols = cm[np.arange(cm.shape[0])[:, None, None],
+                  cols.astype(np.int64)]
     so = np.asarray(sharded.slice_of, np.int64)      # [P, Wp] global ids
     Pdev, _, C = data.shape
     S = sharded.num_slices
@@ -300,7 +472,7 @@ def _chunk_substreams(sharded: ShardedSellCS,
     slice_ptr = np.zeros(S + 1, np.int64)
     np.cumsum(widths, out=slice_ptr[1:])
     bounds = balanced_row_bands(slice_ptr, nc).astype(np.int64)
-    spans = []
+    raw = []                 # (s0, ns, D, Cc, So, per-device real lengths)
     for i in range(nc):
         s0, s1 = int(bounds[i]), int(bounds[i + 1])
         if s1 <= s0:
@@ -309,7 +481,7 @@ def _chunk_substreams(sharded: ShardedSellCS,
         Wi = b - a
         Wc = max(-(-Wi // Pdev), 1)
         D = np.zeros((Pdev, Wc, C), data.dtype)
-        Cc = np.zeros((Pdev, Wc, C), np.int32)
+        Cc = np.zeros((Pdev, Wc, C), np.int64)
         So = np.full((Pdev, Wc), s0, np.int32)       # padding rebases to 0
         db = (np.arange(Pdev + 1, dtype=np.int64) * Wi) // Pdev
         for p in range(Pdev):
@@ -318,9 +490,31 @@ def _chunk_substreams(sharded: ShardedSellCS,
                 D[p, :ln] = g_data[a + db[p]:a + db[p + 1]]
                 Cc[p, :ln] = g_cols[a + db[p]:a + db[p + 1]]
                 So[p, :ln] = g_so[a + db[p]:a + db[p + 1]].astype(np.int32)
-        spans.append(_ChunkSpan(s0, s1 - s0, jnp.asarray(D),
-                                jnp.asarray(Cc), jnp.asarray(So)))
-    return tuple(spans)      # nonempty: bounds pin [0, S] and S >= 1
+        raw.append((s0, s1 - s0, D, Cc, So, np.diff(db)))
+    plan_map = plan_nt = None
+    if compact:
+        # touched set of the RE-DEALT ownership: device p's rows across all
+        # spans, then one searchsorted relabel per (span, device) block
+        touched = []
+        for p in range(Pdev):
+            vals = [Cc[p, :int(lens[p])].ravel()
+                    for _, _, _, Cc, _, lens in raw if int(lens[p])]
+            touched.append(np.unique(np.concatenate(vals)) if vals
+                           else np.zeros(0, np.int64))
+        cm, nt = _pack_maps(touched)
+        for _, _, _, Cc, _, lens in raw:
+            for p in range(Pdev):
+                ln = int(lens[p])
+                if ln:
+                    Cc[p, :ln] = np.searchsorted(touched[p], Cc[p, :ln])
+        plan_map = jnp.asarray(cm.astype(np.int32))
+        plan_nt = jnp.asarray(nt.astype(np.int32))
+    spans = tuple(
+        _ChunkSpan(s0, ns, jnp.asarray(D), jnp.asarray(Cc.astype(np.int32)),
+                   jnp.asarray(So))
+        for s0, ns, D, Cc, So, _ in raw)
+    # spans nonempty: bounds pin [0, S] and S >= 1
+    return _ChunkPlan(spans, plan_map, plan_nt)
 
 
 
@@ -349,7 +543,8 @@ def _unpermute(sharded: ShardedSellCS, y_slots: jax.Array, k: int,
 def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
                          axis: str = "data", *, impl: str = "ref",
                          k_tile: Optional[int] = None,
-                         model_axis: Optional[str] = None) -> jax.Array:
+                         model_axis: Optional[str] = None,
+                         compact_x: Optional[bool] = None) -> jax.Array:
     """Y = A @ X with slice banding: X replicated along ``axis``, Y
     shard-local slots, zero collectives inside the mesh region.
 
@@ -357,18 +552,31 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     the X/Y k-slabs are additionally column-sharded across it: each model
     shard reads ``1/P_model`` of the replicated X and writes its own column
     block of Y — the slice stream itself is replicated along ``model``.
+
+    A matrix partitioned with ``compact_x=True`` swaps the replicated X
+    read for the sparsity-aware gather: ``_gather_x`` builds each shard's
+    ``[n_touched, kc]`` slab once per call and the slab rides the ``data``
+    axis next to the slice stream. ``compact_x=`` here only *asserts* the
+    partition-time choice (None follows it) — the relabeled stream cannot
+    consume a replicated X, nor the reverse.
     """
     m, n = sharded.shape
     C, S, Sp = sharded.chunk, sharded.num_slices, sharded.slices_per_shard
     ndev = sharded.data.shape[0]
-    x2, squeeze, k, kt, x_pad, use_pallas, maxis, _pm = _prep(
-        sharded, x, mesh, axis, impl, k_tile, "row", model_axis)
+    x2, squeeze, k, kt, x_pad, use_pallas, maxis, _pm, compact = _prep(
+        sharded, x, mesh, axis, impl, k_tile, "row", model_axis, compact_x)
     if sharded.nnz == 0:
         y = jnp.zeros((m, k), _out_dtype(sharded, x2, use_pallas))
         return y[:, 0] if squeeze else y
+    if compact:
+        x_feed = _gather_x(x_pad, sharded.col_map, use_pallas)
+        x_spec = P(axis, None, maxis)
+    else:
+        x_feed, x_spec = x_pad, P(None, maxis)
 
     def local(data, cols, slice_of, x_loc):
-        return _local_slots(data, cols, slice_of, x_loc, num_slices=Sp,
+        return _local_slots(data, cols, slice_of,
+                            x_loc[0] if compact else x_loc, num_slices=Sp,
                             chunk=C, use_pallas=use_pallas, k_tile=kt,
                             interpret=impl == "pallas_interpret")
 
@@ -376,10 +584,10 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     yb = shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None, None), P(axis, None, None), P(axis, None),
-                  P(None, maxis)),
+                  x_spec),
         out_specs=P(axis, maxis),
         check_vma=False if use_pallas else None)(
-            sharded.data, sharded.cols, sharded.slice_of, x_pad)
+            sharded.data, sharded.cols, sharded.slice_of, x_feed)
     yb = yb.reshape(ndev, Sp * C, -1)
     # shard p owns global slices [slice_offset[p], slice_offset[p+1]);
     # scatter its local slots there, dumping padding slots past S*C.
@@ -400,7 +608,8 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
                            axis: str = "data", *, impl: str = "ref",
                            k_tile: Optional[int] = None,
                            num_chunks: int = 1,
-                           model_axis: Optional[str] = None) -> jax.Array:
+                           model_axis: Optional[str] = None,
+                           compact_x: Optional[bool] = None) -> jax.Array:
     """Y = A @ X with equal-width spans: per-device slot partials + psum
     carry-out fixup (the only collective). Survives the mawi dense-row
     pathology — the dense slice splits mid-stream.
@@ -428,14 +637,24 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     slice cannot single out the global column ``k`` — which is noise in
     the k ≫ 128 regime this axis targets; the roofline model prices the
     ideal ``k / P_model``.
+
+    A matrix partitioned with ``compact_x=True`` feeds each shard a
+    gathered ``[n_touched, kc]`` slab instead of the replicated X (see
+    ``spmm_row_distributed``); with ``num_chunks > 1`` the gather runs
+    through the chunk plan's own map — the span re-deal changes which
+    device owns which width-rows, so the plan carries a touched set over
+    the re-dealt ownership. The psum is untouched: compaction shrinks
+    reads, not the carry-out. ``compact_x=`` only asserts the
+    partition-time choice; ``None`` follows it.
     """
     m, n = sharded.shape
     C, S = sharded.chunk, sharded.num_slices
     nc = int(num_chunks)
     if nc < 1:
         raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
-    x2, squeeze, k, kt, x_pad, use_pallas, maxis, pm = _prep(
-        sharded, x, mesh, axis, impl, k_tile, "merge", model_axis)
+    x2, squeeze, k, kt, x_pad, use_pallas, maxis, pm, compact = _prep(
+        sharded, x, mesh, axis, impl, k_tile, "merge", model_axis,
+        compact_x)
     if sharded.nnz == 0:
         y = jnp.zeros((m, k), _out_dtype(sharded, x2, use_pallas))
         return y[:, 0] if squeeze else y
@@ -448,9 +667,17 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     k_keep = k if pm == 1 else x_pad.shape[1] // pm
 
     if nc == 1:
+        if compact:
+            x_feed = _gather_x(x_pad, sharded.col_map, use_pallas)
+            x_spec = P(axis, None, maxis)
+        else:
+            x_feed, x_spec = x_pad, P(None, maxis)
+
         def local(data, cols, slice_of, x_loc):
-            y_loc = _local_slots(data, cols, slice_of, x_loc, num_slices=S,
-                                 chunk=C, use_pallas=use_pallas, k_tile=kt,
+            y_loc = _local_slots(data, cols, slice_of,
+                                 x_loc[0] if compact else x_loc,
+                                 num_slices=S, chunk=C,
+                                 use_pallas=use_pallas, k_tile=kt,
                                  interpret=interpret)
             # carry-out fixup on the data axis ONLY: model shards own
             # disjoint Y columns and never enter the collective
@@ -459,22 +686,32 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
         y_slots = shard_map(
             local, mesh=mesh,
             in_specs=(P(axis, None, None), P(axis, None, None),
-                      P(axis, None), P(None, maxis)),
+                      P(axis, None), x_spec),
             out_specs=P(None, maxis),
             check_vma=False if use_pallas else None)(
-                sharded.data, sharded.cols, sharded.slice_of, x_pad)
+                sharded.data, sharded.cols, sharded.slice_of, x_feed)
         return _unpermute(sharded, y_slots, k, squeeze)
 
     if sharded.chunk_plan is not None and sharded.chunk_plan[0] == nc:
-        spans = sharded.chunk_plan[1]    # precomputed at partition time
+        # precomputed at partition time (spans + re-deal column map)
+        spans, plan_map = sharded.chunk_plan[1], sharded.chunk_plan[2]
     else:
-        spans = _chunk_substreams(sharded, nc)
+        plan = _chunk_substreams(sharded, nc)
+        spans, plan_map = plan.spans, plan.col_map
     meta = [(sp.slice_start, sp.num_slices) for sp in spans]
+    if compact:
+        # the spans' cols live in the chunk plan's index space, not the
+        # base partition's — gather through the plan map
+        x_feed = _gather_x(x_pad, plan_map, use_pallas)
+        x_spec = P(axis, None, maxis)
+    else:
+        x_feed, x_spec = x_pad, P(None, maxis)
 
     def local(datas, colss, sos, x_loc):
         # one (kernel -> psum) pair per span with no cross-span data
         # dependency: the span-i all-reduce-start can run under the
         # span-(i+1) kernel.
+        x_loc = x_loc[0] if compact else x_loc
         outs = []
         for (s0, ns), data, cols, slice_of in zip(meta, datas, colss, sos):
             if use_pallas:
@@ -494,9 +731,9 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     y_slots = shard_map(
         local, mesh=mesh,
         in_specs=(span_spec, span_spec,
-                  tuple(P(axis, None) for _ in spans), P(None, maxis)),
+                  tuple(P(axis, None) for _ in spans), x_spec),
         out_specs=P(None, maxis),
         check_vma=False if use_pallas else None)(
             tuple(sp.data for sp in spans), tuple(sp.cols for sp in spans),
-            tuple(sp.slice_of for sp in spans), x_pad)
+            tuple(sp.slice_of for sp in spans), x_feed)
     return _unpermute(sharded, y_slots, k, squeeze)

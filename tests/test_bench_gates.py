@@ -151,3 +151,101 @@ def test_basic_rules_still_hold():
     assert any("not finite" in p for p in bad)
     bad = sk.check_records([_row("x/k=1", 1.0, gflops=0)], "f.json")
     assert any("must be finite and" in p for p in bad)
+
+
+# --------------------------------------------------------------------------
+# compact-gather gate (spmm_sweep --compact-x rows)
+# --------------------------------------------------------------------------
+CX1 = "mawi_like/sellcs+merge@4dev/chunks=1"
+
+
+def test_compact_gate_fails_on_regression_where_model_pays():
+    records = [_row(f"{CX1}/cx=off/k=8", 100.0, model_us=10.0,
+                    backend="tpu"),
+               _row(f"{CX1}/cx=on/k=8", 200.0, model_us=5.0,
+                    backend="tpu")]
+    problems = sk.check_compact_regressions(records, "f.json")
+    assert len(problems) == 1 and "cx=on" in problems[0] \
+        and "2.00x" in problems[0]
+    assert any("cx=on" in p for p in sk.check_records(records, "f.json"))
+
+
+def test_compact_gate_passes_within_tolerance():
+    records = [_row(f"{CX1}/cx=off/k=8", 100.0, model_us=10.0,
+                    backend="tpu"),
+               _row(f"{CX1}/cx=on/k=8", 105.0, model_us=5.0,
+                    backend="tpu")]
+    assert sk.check_compact_regressions(records, "f.json") == []
+
+
+def test_compact_gate_disarmed_when_model_predicts_loss():
+    """The dense-columns wash: n_touched ~ n makes the model itself say
+    the gather does not pay — a measured loss is gather overhead the
+    model prices, not a regression."""
+    records = [_row(f"{CX1}/cx=off/k=8", 100.0, model_us=5.0,
+                    backend="tpu"),
+               _row(f"{CX1}/cx=on/k=8", 900.0, model_us=6.0,
+                    backend="tpu")]
+    assert sk.check_compact_regressions(records, "f.json") == []
+
+
+def test_compact_gate_disarmed_on_exact_model_tie():
+    """Saturated columns make the modelled figures EXACTLY equal
+    (n_touched caps at n) while the gather's overhead stays unpriced — a
+    tie must not arm the gate, mirroring the selector's tie-refusal."""
+    records = [_row(f"{CX1}/cx=off/k=8", 100.0, model_us=5.0,
+                    backend="tpu"),
+               _row(f"{CX1}/cx=on/k=8", 900.0, model_us=5.0,
+                    backend="tpu")]
+    assert sk.check_compact_regressions(records, "f.json") == []
+
+
+def test_compact_gate_disarmed_on_host_platform_mesh():
+    """The CI case: a cpu host-platform mesh keeps X as one shared
+    buffer, so the gather's byte saving cannot appear in wall time —
+    recorded, never gated. Rows without a backend field gate nothing."""
+    records = [_row(f"{CX1}/cx=off/k=8", 100.0, model_us=10.0,
+                    backend="cpu"),
+               _row(f"{CX1}/cx=on/k=8", 900.0, model_us=5.0,
+                    backend="cpu")]
+    assert sk.check_compact_regressions(records, "f.json") == []
+    assert sk.check_records(records, "f.json") == []
+    records = [_row(f"{CX1}/cx=off/k=8", 100.0, model_us=10.0),
+               _row(f"{CX1}/cx=on/k=8", 900.0, model_us=5.0)]
+    assert sk.check_compact_regressions(records, "f.json") == []
+
+
+def test_compact_gate_needs_both_rows_and_model():
+    assert sk.check_compact_regressions(
+        [_row(f"{CX1}/cx=on/k=8", 500.0, model_us=1.0, backend="tpu")],
+        "f") == []
+    assert sk.check_compact_regressions(
+        [_row(f"{CX1}/cx=off/k=8", 1.0, model_us=9.0, backend="tpu")],
+        "f") == []
+    assert sk.check_compact_regressions(
+        [_row(f"{CX1}/cx=off/k=8", 100.0, backend="tpu"),
+         _row(f"{CX1}/cx=on/k=8", 500.0, backend="tpu")], "f") == []
+
+
+def test_compact_gate_groups_mesh_and_row_schedule_rows():
+    """cx pairs group per (base, k): 2-D mesh rows and row-schedule rows
+    form their own pairs; a cx row never joins a plain (no-cx) group and
+    the chunk/mesh gates keep cx=on rows apart from cx=off rows."""
+    records = [
+        _row("m/sellcs+row@4x2mesh/cx=off/k=8", 100.0, model_us=10.0,
+             backend="tpu"),
+        _row("m/sellcs+row@4x2mesh/cx=on/k=8", 250.0, model_us=6.0,
+             backend="tpu"),
+        # no-cx legacy row: never joins a compact pair
+        _row("m/sellcs+row@4x2mesh/k=8", 1.0, model_us=1.0,
+             backend="tpu"),
+    ]
+    problems = sk.check_compact_regressions(records, "f.json")
+    assert len(problems) == 1 and "sellcs+row@4x2mesh" in problems[0]
+    # the chunk gate compares cx=on rows only against cx=on rows
+    records = [_row(f"{MERGE}/chunks=1/cx=on/k=8", 100.0, model_us=10.0),
+               _row(f"{MERGE}/chunks=2/cx=on/k=8", 101.0, model_us=6.0),
+               _row(f"{MERGE}/chunks=1/cx=off/k=8", 1.0, model_us=10.0),
+               _row(f"{MERGE}/chunks=2/cx=off/k=8", 500.0, model_us=6.0)]
+    problems = sk.check_chunk_regressions(records, "f.json")
+    assert len(problems) == 1 and "/cx=off" in problems[0]

@@ -289,8 +289,8 @@ def test_select_distributed_records_num_chunks():
     assert isinstance(choice, DistributedChoice)
     assert choice.schedule == "merge" and choice.num_chunks in \
         CHUNK_CANDIDATES and choice.num_chunks > 1
-    algo, sched, nc, mesh = choice            # unpacks like a tuple
-    assert (algo, sched, nc, mesh) == tuple(choice)
+    algo, sched, nc, mesh, cx = choice        # unpacks like a tuple
+    assert (algo, sched, nc, mesh, cx) == tuple(choice)
     assert mesh[0] * mesh[1] == 8
     assert select_distributed(uni, k=8, num_devices=8).num_chunks == 1
 
@@ -350,6 +350,117 @@ def test_sellcs_storage_bytes_counts_every_array():
     assert se.storage_bytes() == actual
 
 
+def test_spmm_distributed_traffic_compact_x():
+    """ISSUE 5 satellite: the compact_x X term is exactly nnz-proportional
+    (min(nnz/P, n) rows via spmm_touched_fraction), never exceeds the
+    replicated figure, honors a measured per-shard n_touched, and leaves
+    the collective bytes alone (compaction shrinks reads, not the psum)."""
+    from repro.roofline import (spmm_distributed_traffic,
+                                spmm_touched_fraction)
+    m = n = 100_000
+    dt = 4
+    P = 8
+    mat_bytes = 1e6          # pinned so only the X term varies with nnz
+    for sched in ("row", "merge"):
+        hbm_rep, coll_rep = spmm_distributed_traffic(
+            m, n, 64, P, sched, matrix_bytes=mat_bytes, nnz=80_000)
+        prev = None
+        for nnz in (0, 8_000, 80_000, 160_000):
+            hbm_c, coll_c = spmm_distributed_traffic(
+                m, n, 64, P, sched, matrix_bytes=mat_bytes, nnz=nnz,
+                compact_x=True)
+            # X term == min(nnz/P, n) * k * dt exactly — nnz-proportional
+            expect = min(nnz / P, n) * 64 * dt
+            base = hbm_c - expect
+            if prev is None:
+                prev = base
+            assert base == pytest.approx(prev), (sched, nnz)
+            assert hbm_c <= hbm_rep + 1e-9, (sched, nnz)
+            assert coll_c == coll_rep, (sched, nnz)
+        # saturated columns: nnz/P >= n caps at the replicated figure
+        hbm_sat, _ = spmm_distributed_traffic(
+            m, n, 64, P, sched, matrix_bytes=mat_bytes,
+            nnz=100 * n * P, compact_x=True)
+        assert hbm_sat == pytest.approx(hbm_rep)
+    # measured n_touched overrides the nnz bound (and still caps at n)
+    hbm_meas, _ = spmm_distributed_traffic(
+        m, n, 64, P, "row", matrix_bytes=mat_bytes, nnz=80_000,
+        compact_x=True, n_touched=500.0)
+    hbm_model, _ = spmm_distributed_traffic(
+        m, n, 64, P, "row", matrix_bytes=mat_bytes, nnz=80_000,
+        compact_x=True)
+    assert hbm_model - hbm_meas == pytest.approx(
+        (80_000 / P - 500.0) * 64 * dt)
+    assert spmm_touched_fraction(n, 80_000, P) == pytest.approx(
+        80_000 / P / n)
+    assert spmm_touched_fraction(n, 10**12, P) == 1.0
+    assert spmm_touched_fraction(0, 10, P) == 0.0
+    # the 2-D mesh composes: the compact X term divides by P_model too
+    hbm1, _ = spmm_distributed_traffic(
+        m, n, 64, P, "merge", matrix_bytes=mat_bytes, nnz=8_000,
+        compact_x=True)
+    hbm2, _ = spmm_distributed_traffic(
+        m, n, 64, P, "merge", matrix_bytes=mat_bytes, nnz=8_000,
+        compact_x=True, model_devices=2)
+    x_and_y = (8_000 / P + m) * 64 * dt        # k-proportional terms
+    assert hbm1 - hbm2 == pytest.approx(x_and_y / 2)
+
+
+def test_select_distributed_compact_x_flip():
+    """ISSUE 5 satellite: the selector flips to compaction on a
+    highly-sparse-columns case (a shard touches far fewer than n columns)
+    and refuses it on a dense-columns case (nnz/P >= n makes the gather a
+    modelled wash — the tie keeps replication)."""
+    from repro.core import select_distributed
+    from repro.core.selector import MatrixStats
+    # sparse columns: 8 shards x 50k nnz each touch <= 50k of 2M columns
+    sparse = MatrixStats(m=2_000_000, n=2_000_000, nnz=400_000,
+                         max_row_nnz=20, row_var=1.0)
+    pick = select_distributed(sparse, k=64, num_devices=8)
+    assert pick.algorithm == "sellcs" and pick.compact_x is True
+    # dense columns: nnz/P >> n — compaction cannot shrink the X term
+    dense = MatrixStats(m=230_000, n=230_000, nnz=270_000_000,
+                        max_row_nnz=2_000, row_var=10.0)
+    assert select_distributed(dense, k=64, num_devices=8).compact_x is False
+    # single device keeps the degenerate default
+    assert select_distributed(dense, k=1, num_devices=1).compact_x is False
+
+
+def test_sharded_sellcs_storage_bytes_counts_col_map():
+    """ISSUE 5 satellite: ShardedSellCS.storage_bytes must equal the
+    summed nbytes of every member array — including the compact_x col_map
+    / n_touched and any baked chunk plan — so the paper's "472
+    multiplications to amortize" convert-cost comparisons stay honest."""
+    from repro.spmm import partition_sellcs_nnz, partition_sellcs_rows
+
+    def expected(sh):
+        total = (sh.data.nbytes + sh.cols.nbytes + sh.slice_of.nbytes
+                 + sh.slice_offset.nbytes + sh.row_perm.nbytes)
+        for opt in (sh.row_counts, sh.col_map, sh.n_touched):
+            if opt is not None:
+                total += opt.nbytes
+        if sh.chunk_plan is not None:
+            for sp in sh.chunk_plan[1]:
+                total += (sp.data.nbytes + sp.cols.nbytes
+                          + sp.slice_of.nbytes)
+            for opt in sh.chunk_plan[2:]:
+                if opt is not None:
+                    total += opt.nbytes
+        return total
+
+    for coo in _matrices().values():
+        sc = M.coo_to_sellcs(coo, c=16, sigma=64)
+        for cf in (False, True):
+            for sh in (partition_sellcs_rows(sc, 4, compact_x=cf),
+                       partition_sellcs_nnz(sc, 4, compact_x=cf),
+                       partition_sellcs_nnz(sc, 4, num_chunks=3,
+                                            compact_x=cf)):
+                assert sh.storage_bytes() == expected(sh), cf
+        # the col_map is real storage: compaction must cost more bytes
+        assert partition_sellcs_rows(sc, 4, compact_x=True).storage_bytes() \
+            > partition_sellcs_rows(sc, 4).storage_bytes()
+
+
 def test_autotune_num_devices_records_schedule():
     from repro.core import CHUNK_CANDIDATES, autotune
     coo = to_coo(*matrices.uniform(150, 150, 1500, seed=4))
@@ -365,6 +476,11 @@ def test_autotune_num_devices_records_schedule():
     assert all(r.num_chunks in CHUNK_CANDIDATES for r in results
                if r.schedule == "merge")
     assert best.num_chunks is not None and best.num_chunks >= 1
+    # ISSUE 5: the tuner records the compact-gather choice; only sellcs
+    # can execute it, so every other format must record False
+    assert all(r.compact_x in (False, True) for r in results)
+    assert all(r.compact_x is False for r in results
+               if r.algorithm != "sellcs")
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,356 @@
+"""Sparsity-aware X gather (per-shard column compaction) for the
+distributed SpMM (repro.spmm.distributed), locked down against the
+``SellCS.to_coo`` oracle on 8 host-platform devices: ISSUE 5 acceptance —
+compacted-vs-replicated equivalence for k in {1, 8, 64}, meshes (8,1) and
+(4,2), both schedules, num_chunks in {1, 4}, uniform + mawi-style skewed
+matrices, under both the jnp reference body and the Pallas kernel body in
+interpret mode; degenerate cases (nnz==0 shard, a shard touching all n
+columns, n_touched < c).
+
+Device-backed tests run in SUBPROCESSES (the device-count flag must be set
+before jax initializes; the rest of the suite keeps seeing 1 device).
+col_map invariants and knob validation are pure host code and run
+in-process.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_compact_matches_replicated_and_to_coo_oracle():
+    """ISSUE 5 acceptance: compacted and replicated partitions answer
+    identically (the gather is a pure re-indexing) and both match the
+    SellCS.to_coo round-trip oracle, across meshes (8,1)/(4,2), both
+    schedules, num_chunks in {1, 4}, k in {1, 8, 64}, uniform + mawi."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.data import matrices
+from repro.launch.mesh import make_spmm_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, spmm_coo,
+                        spmm_merge_distributed, spmm_row_distributed)
+for name, gen in [("uniform", matrices.uniform(500, 430, 4000, 0)),
+                  ("mawi_like", matrices.mawi_like(400, 400, 3000, 0.4, 1))]:
+    coo = to_coo(*gen)
+    sc = coo_to_sellcs(coo, c=16, sigma=64)
+    for pd, pm in [(8, 1), (4, 2)]:
+        mesh = make_spmm_mesh((pd, pm))
+        row_p = partition_sellcs_rows(sc, pd)
+        row_c = partition_sellcs_rows(sc, pd, compact_x=True)
+        mrg_p = partition_sellcs_nnz(sc, pd)
+        mrg_c = partition_sellcs_nnz(sc, pd, compact_x=True)
+        for k in (1, 8, 64):
+            X = jnp.asarray(np.random.default_rng(k).standard_normal(
+                (coo.shape[1], k)).astype(np.float32))
+            # the oracle is the format's own exact round-trip
+            yo = np.asarray(spmm_coo(sc.to_coo(), X))
+            for tag, y in [
+                ("row", spmm_row_distributed(row_c, X, mesh)),
+                ("merge", spmm_merge_distributed(mrg_c, X, mesh)),
+                ("merge/c4", spmm_merge_distributed(mrg_c, X, mesh,
+                                                    num_chunks=4)),
+            ]:
+                np.testing.assert_allclose(
+                    np.asarray(y), yo, rtol=1e-5, atol=1e-4,
+                    err_msg=f"{name} {tag} {pd}x{pm} k={k} vs oracle")
+            # compacted == replicated BITWISE per schedule: the gather
+            # only re-indexes X rows, the fp summation order is identical
+            np.testing.assert_array_equal(
+                np.asarray(spmm_row_distributed(row_c, X, mesh)),
+                np.asarray(spmm_row_distributed(row_p, X, mesh)),
+                err_msg=f"{name} row {pd}x{pm} k={k}")
+            np.testing.assert_array_equal(
+                np.asarray(spmm_merge_distributed(mrg_c, X, mesh)),
+                np.asarray(spmm_merge_distributed(mrg_p, X, mesh)),
+                err_msg=f"{name} merge {pd}x{pm} k={k}")
+            np.testing.assert_array_equal(
+                np.asarray(spmm_merge_distributed(mrg_c, X, mesh,
+                                                  num_chunks=4)),
+                np.asarray(spmm_merge_distributed(mrg_p, X, mesh,
+                                                  num_chunks=4)),
+                err_msg=f"{name} merge/c4 {pd}x{pm} k={k}")
+        # SpMV rides along as k = 1 squeezed
+        x = jnp.asarray(np.random.default_rng(9).standard_normal(
+            coo.shape[1]).astype(np.float32))
+        y = spmm_row_distributed(row_c, x, mesh)
+        assert y.ndim == 1
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(spmm_coo(coo, x)),
+                                   rtol=1e-5, atol=1e-4)
+    print(name, "compact oracle OK")
+"""))
+
+
+def test_compact_pallas_interpret_kernel_body():
+    """The PR-1 k-tiled Pallas kernel consumes the gathered [n_touched, kc]
+    slab unchanged (interpret mode off-TPU): both meshes, both schedules,
+    chunked merge, mawi dense row."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.data import matrices
+from repro.launch.mesh import make_spmm_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, spmm_coo,
+                        spmm_merge_distributed, spmm_row_distributed)
+coo = to_coo(*matrices.mawi_like(300, 280, 2400, 0.4, 3))
+sc = coo_to_sellcs(coo, c=16, sigma=64)
+for pd, pm in [(8, 1), (4, 2)]:
+    mesh = make_spmm_mesh((pd, pm))
+    row = partition_sellcs_rows(sc, pd, compact_x=True)
+    mrg = partition_sellcs_nnz(sc, pd, compact_x=True)
+    for k in (1, 8, 64):
+        X = jnp.asarray(np.random.default_rng(k).standard_normal(
+            (coo.shape[1], k)).astype(np.float32))
+        yo = np.asarray(spmm_coo(sc.to_coo(), X))
+        yr = np.asarray(spmm_row_distributed(
+            row, X, mesh, impl="pallas_interpret", k_tile=4))
+        ym = np.asarray(spmm_merge_distributed(
+            mrg, X, mesh, impl="pallas_interpret", k_tile=4, num_chunks=4))
+        np.testing.assert_allclose(yr, yo, rtol=1e-5, atol=1e-4,
+                                   err_msg=f"row {pd}x{pm} k={k}")
+        np.testing.assert_allclose(ym, yo, rtol=1e-5, atol=1e-4,
+                                   err_msg=f"merge {pd}x{pm} k={k}")
+    print(pd, pm, "compact interpret OK")
+"""))
+
+
+def test_compact_degenerate_cases_on_mesh():
+    """ISSUE 5 acceptance degenerates: an all-zero matrix, shards left
+    empty by the band split (nnz == 0 shard), a shard touching ALL n
+    columns, and n_touched < c (fewer distinct columns than the slice
+    height) — every one answers correctly under compaction."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.data import matrices
+from repro.launch.mesh import make_spmm_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, spmm_coo,
+                        spmm_merge_distributed, spmm_row_distributed)
+mesh = make_spmm_mesh((8, 1))
+z = np.zeros(0, np.int32)
+
+# 1. nnz == 0 matrix: the early return keeps shape/dtype
+empty = to_coo(z, z, np.zeros(0, np.float32), (6, 4))
+se = coo_to_sellcs(empty, c=2, sigma=4)
+X4 = jnp.ones((4, 3), jnp.float32)
+assert np.abs(np.asarray(spmm_row_distributed(
+    partition_sellcs_rows(se, 8, compact_x=True), X4, mesh))).max() == 0
+assert np.abs(np.asarray(spmm_merge_distributed(
+    partition_sellcs_nnz(se, 8, compact_x=True), X4, mesh))).max() == 0
+
+# 2. more devices than slices: empty shards carry n_touched == 0 and an
+# all-padding col_map row, and contribute exactly nothing
+tiny = to_coo(np.array([0, 1, 2], np.int32), np.array([0, 1, 2], np.int32),
+              np.ones(3, np.float32), (3, 3))
+st = coo_to_sellcs(tiny, c=2, sigma=2)
+row = partition_sellcs_rows(st, 8, compact_x=True)
+assert int(np.asarray(row.n_touched).min()) == 0     # empty shards exist
+I3 = jnp.eye(3, dtype=jnp.float32)
+np.testing.assert_allclose(np.asarray(spmm_row_distributed(
+    row, I3, mesh)), np.eye(3), atol=1e-6)
+np.testing.assert_allclose(np.asarray(spmm_merge_distributed(
+    partition_sellcs_nnz(st, 8, compact_x=True), I3, mesh)),
+    np.eye(3), atol=1e-6)
+
+# 3. a shard touching ALL n columns: mawi-style dense rows on a narrow
+# matrix — col_map degenerates to the identity and the gather is a wash,
+# but the answer must not move
+coo = to_coo(*matrices.mawi_like(64, 8, 512, 0.5, 5))
+sc = coo_to_sellcs(coo, c=8, sigma=16)
+mrg = partition_sellcs_nnz(sc, 8, compact_x=True)
+assert int(np.asarray(mrg.n_touched).max()) == 8     # touches all n
+X = jnp.asarray(np.random.default_rng(0).standard_normal(
+    (8, 8)).astype(np.float32))
+np.testing.assert_allclose(
+    np.asarray(spmm_merge_distributed(mrg, X, mesh)),
+    np.asarray(spmm_coo(sc.to_coo(), X)), rtol=1e-5, atol=1e-4)
+np.testing.assert_allclose(
+    np.asarray(spmm_row_distributed(
+        partition_sellcs_rows(sc, 8, compact_x=True), X, mesh)),
+    np.asarray(spmm_coo(sc.to_coo(), X)), rtol=1e-5, atol=1e-4)
+
+# 4. n_touched < c: 4 distinct columns under a c=16 slice height — the
+# gathered slab is shorter than one slice is tall
+coo = to_coo(*matrices.uniform(100, 4, 300, 11))
+sc = coo_to_sellcs(coo, c=16, sigma=32)
+row = partition_sellcs_rows(sc, 8, compact_x=True)
+assert int(np.asarray(row.n_touched).max()) <= 4 < 16
+X = jnp.asarray(np.random.default_rng(1).standard_normal(
+    (4, 8)).astype(np.float32))
+np.testing.assert_allclose(
+    np.asarray(spmm_row_distributed(row, X, mesh)),
+    np.asarray(spmm_coo(sc.to_coo(), X)), rtol=1e-5, atol=1e-4)
+np.testing.assert_allclose(
+    np.asarray(spmm_merge_distributed(
+        partition_sellcs_nnz(sc, 8, num_chunks=4, compact_x=True), X,
+        mesh, num_chunks=4)),
+    np.asarray(spmm_coo(sc.to_coo(), X)), rtol=1e-5, atol=1e-4)
+# the pallas_interpret body handles the short slab (row pad to LANE)
+np.testing.assert_allclose(
+    np.asarray(spmm_row_distributed(row, X, mesh,
+                                    impl="pallas_interpret", k_tile=4)),
+    np.asarray(spmm_coo(sc.to_coo(), X)), rtol=1e-5, atol=1e-4)
+print("compact degenerates OK")
+"""))
+
+
+def test_compact_explicit_zero_width_rows_survive():
+    """Explicit-zero width-rows (all-zero values, real column indices —
+    the PR-4 regression surface) keep their columns in the touched set:
+    compaction must treat them as real reads, and the chunked re-deal must
+    keep answering through its own map."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.launch.mesh import make_spmm_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz, spmm_coo,
+                        spmm_merge_distributed)
+rows = np.array([0, 0, 0] + list(range(1, 16)), np.int32)
+cols = np.array([0, 2, 3] + [r % 4 for r in range(1, 16)], np.int32)
+vals = np.array([1.0, 0.0, 0.0] + [float(r) for r in range(1, 16)],
+                np.float32)
+coo = to_coo(rows, cols, vals, (16, 4))
+mesh = make_spmm_mesh((8, 1))
+sc = coo_to_sellcs(coo, c=4, sigma=16)
+mrg = partition_sellcs_nnz(sc, 8, compact_x=True)
+X = jnp.asarray(np.random.default_rng(0).standard_normal(
+    (4, 8)).astype(np.float32))
+yo = np.asarray(spmm_coo(sc.to_coo(), X))
+for c in (1, 2, 3, 9):
+    yc = np.asarray(spmm_merge_distributed(mrg, X, mesh, num_chunks=c))
+    np.testing.assert_allclose(yc, yo, rtol=1e-5, atol=1e-5,
+                               err_msg=f"chunks={c}")
+print("explicit-zero compact OK")
+"""))
+
+
+# --------------------------------------------------------------------------
+# Host-side: col_map invariants, chunk-plan maps, knob validation
+# --------------------------------------------------------------------------
+def _mawi_sellcs(c=8, sigma=32):
+    from repro.core import to_coo
+    from repro.data import matrices
+    from repro.spmm import coo_to_sellcs
+    coo = to_coo(*matrices.mawi_like(200, 180, 1500, 0.3, 2))
+    return coo_to_sellcs(coo, c=c, sigma=sigma)
+
+
+def test_col_map_relabel_roundtrip_and_n_touched():
+    """Deterministic analog of the hypothesis round-trip (test_property):
+    per shard, col_map is sorted-unique, un-relabeling through it
+    reproduces the uncompacted partition's cols exactly over the real
+    width-rows, and n_touched is the true distinct-column count."""
+    from repro.spmm import partition_sellcs_nnz, partition_sellcs_rows
+    sc = _mawi_sellcs()
+    for part in (partition_sellcs_rows, partition_sellcs_nnz):
+        for P in (1, 3, 8):
+            plain = part(sc, P)
+            comp = part(sc, P, compact_x=True)
+            cm = np.asarray(comp.col_map)
+            nt = np.asarray(comp.n_touched)
+            counts = np.asarray(comp.row_counts)
+            for p in range(P):
+                ln = int(counts[p])
+                t = cm[p, :int(nt[p])]
+                assert np.all(np.diff(t) > 0)        # sorted, unique
+                pc = np.asarray(plain.cols)[p, :ln]
+                cc = np.asarray(comp.cols)[p, :ln]
+                assert int(nt[p]) == np.unique(pc).size if ln else \
+                    int(nt[p]) == 0
+                if ln:
+                    assert cc.max() < int(nt[p])     # compacted index space
+                    np.testing.assert_array_equal(cm[p][cc], pc)
+            # data/slice structure untouched by compaction
+            np.testing.assert_array_equal(np.asarray(plain.data),
+                                          np.asarray(comp.data))
+            np.testing.assert_array_equal(np.asarray(plain.slice_of),
+                                          np.asarray(comp.slice_of))
+
+
+def test_chunk_plan_carries_its_own_col_map():
+    """The span re-deal changes row ownership, so the baked chunk plan
+    must carry its own touched map — un-relabeling each span's cols
+    through it reproduces the uncompacted plan's spans exactly."""
+    from repro.spmm import partition_sellcs_nnz
+    sc = _mawi_sellcs()
+    plain = partition_sellcs_nnz(sc, 8, num_chunks=3)
+    comp = partition_sellcs_nnz(sc, 8, num_chunks=3, compact_x=True)
+    assert plain.chunk_plan[2] is None
+    cm = np.asarray(comp.chunk_plan[2])
+    nt = np.asarray(comp.chunk_plan[3])
+    assert cm.shape[0] == 8 and nt.shape == (8,)
+    for sp_p, sp_c in zip(plain.chunk_plan[1], comp.chunk_plan[1]):
+        assert (sp_p.slice_start, sp_p.num_slices) == \
+            (sp_c.slice_start, sp_c.num_slices)
+        np.testing.assert_array_equal(np.asarray(sp_p.data),
+                                      np.asarray(sp_c.data))
+        pc = np.asarray(sp_p.cols)
+        cc = np.asarray(sp_c.cols)
+        # real rows: un-relabel through the plan map; padding rows carry
+        # data == 0 on both sides and need no column agreement
+        real = np.any(np.asarray(sp_p.data) != 0, axis=-1)
+        for p in range(8):
+            if real[p].any():
+                np.testing.assert_array_equal(cm[p][cc[p][real[p]]],
+                                              pc[p][real[p]])
+
+
+def test_compact_knob_validation():
+    """compact_x= at multiply time only asserts the partition-time choice;
+    a mismatch in either direction is a ValueError naming the fix."""
+    import jax
+    from repro.launch.mesh import make_mesh
+    from repro.spmm import (partition_sellcs_nnz, partition_sellcs_rows,
+                            spmm_merge_distributed, spmm_row_distributed)
+    if len(jax.devices()) != 1:
+        return                       # in-process guard only needs 1 device
+    sc = _mawi_sellcs()
+    mesh = make_mesh((1,), ("data",))
+    X = np.ones((180, 2), np.float32)
+    plain_r = partition_sellcs_rows(sc, 1)
+    comp_r = partition_sellcs_rows(sc, 1, compact_x=True)
+    with pytest.raises(ValueError, match="compact_x"):
+        spmm_row_distributed(plain_r, X, mesh, compact_x=True)
+    with pytest.raises(ValueError, match="compact_x"):
+        spmm_row_distributed(comp_r, X, mesh, compact_x=False)
+    with pytest.raises(ValueError, match="compact_x"):
+        spmm_merge_distributed(partition_sellcs_nnz(sc, 1), X, mesh,
+                               compact_x=True)
+    # None (the default) follows the partition on both kinds
+    y_plain = spmm_row_distributed(plain_r, X, mesh)
+    y_comp = spmm_row_distributed(comp_r, X, mesh, compact_x=True)
+    np.testing.assert_array_equal(np.asarray(y_plain), np.asarray(y_comp))
+
+
+def test_compact_payload_conserved():
+    """Both partitioners conserve the nonzero payload under compaction
+    (the compacted stream is the same stream, re-indexed)."""
+    from repro.spmm import partition_sellcs_nnz, partition_sellcs_rows
+    sc = _mawi_sellcs()
+    total = float(np.abs(np.asarray(sc.data)).sum())
+    for part in (partition_sellcs_rows, partition_sellcs_nnz):
+        for P in (1, 3, 8, 64):
+            sh = part(sc, P, compact_x=True)
+            got = float(np.abs(np.asarray(sh.data)).sum())
+            assert abs(got - total) < 1e-3, (part.__name__, P)
+            assert sh.col_map is not None and sh.n_touched is not None
+            assert sh.col_map.shape[0] == P
