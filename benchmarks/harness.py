@@ -4,22 +4,36 @@ reports the minimum, §5.2 — we use the same protocol with fewer reps on the
 every driver (``benchmarks.run --json``, ``benchmarks.spmm_sweep --json``).
 
 JSON schema: a list of ``{"section": <table title>, "name": <row name>,
-"us_per_call": <float>, "derived": <free-form string>}`` records — the same
-columns the CSV prints."""
+"us_per_call": <float>, "derived": <free-form string>, "backend": <str>,
+"reps": <int>, "warmup": <int>}`` records — the CSV columns plus the
+measurement provenance: which XLA backend produced the number and the
+min-of-N protocol parameters that timed it, so a downstream gate (or a
+human diffing two CI artifacts) can tell a min-of-20 CPU row from a
+first-flush TPU fluke without parsing free-form ``derived`` strings.
+Analytic rows (``seconds <= 0``, e.g. break-even counts) carry the
+backend but no reps/warmup — nothing timed them."""
 from __future__ import annotations
 
 import json
-import time
 from typing import Callable, Dict, List
 
 import jax
 
+from repro.obs import time_min_of_n
+
 # module-level record sink shared by all Csv instances (reset per driver)
 _RECORDS: List[Dict] = []
+
+# protocol parameters of the most recent time_fn/time_host call; Csv.row
+# stamps them into the records of timed rows. Sticky by design: drivers
+# call time_fn immediately before row() and every driver in this repo
+# times a whole table with one protocol.
+_PROTOCOL: Dict[str, int] = {}
 
 
 def reset_records() -> None:
     _RECORDS.clear()
+    _PROTOCOL.clear()
 
 
 def records() -> List[Dict]:
@@ -34,26 +48,16 @@ def dump_json(path: str) -> None:
 
 
 def time_fn(fn: Callable, *args, reps: int = 20, warmup: int = 3) -> float:
-    """Min wall time in seconds of fn(*args) (jax outputs block)."""
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return best
+    """Min wall time in seconds of fn(*args) (jax outputs block) — the
+    paper's §5.2 protocol via ``repro.obs.time_min_of_n``."""
+    _PROTOCOL.update(reps=reps, warmup=warmup)
+    return time_min_of_n(fn, *args, reps=reps, warmup=warmup).best_s
 
 
 def time_host(fn: Callable, *args, reps: int = 5) -> float:
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn(*args)
-        best = min(best, time.perf_counter() - t0)
-    return best
+    _PROTOCOL.update(reps=reps, warmup=0)
+    return time_min_of_n(fn, *args, reps=reps, warmup=0,
+                         block=False).best_s
 
 
 class Csv:
@@ -66,6 +70,10 @@ class Csv:
     def row(self, name: str, seconds: float, derived: str = ""):
         line = f"{name},{seconds * 1e6:.1f},{derived}"
         self.rows.append(line)
-        _RECORDS.append({"section": self.title, "name": name,
-                         "us_per_call": seconds * 1e6, "derived": derived})
+        rec = {"section": self.title, "name": name,
+               "us_per_call": seconds * 1e6, "derived": derived,
+               "backend": jax.default_backend()}
+        if seconds > 0 and _PROTOCOL:
+            rec.update(_PROTOCOL)
+        _RECORDS.append(rec)
         print(line)

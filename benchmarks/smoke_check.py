@@ -57,6 +57,22 @@ tie-refusal; and — like the mesh gate — so are ``backend=cpu`` rows: a
 host-platform mesh keeps X as one shared buffer, so the gather's byte
 saving is physically unobservable there.
 
+Residual rule (the model-honesty gate): every ``residual=<v>`` derived
+field (``benchmarks.spmm_sweep``) and every record in an ``repro.obs/v1``
+document's ``"residuals"`` list (``launch.serve --metrics``) must be
+finite and > 0 — a NaN/zero residual means one side of the
+observed-vs-modeled pairing was garbage. On a backend with per-device
+memory the gate additionally flags residuals outside
+``[1/RESIDUAL_MAX_OFF, RESIDUAL_MAX_OFF]`` (model off by more than 10x
+where it claims to apply); ``backend=cpu`` rows only get the finiteness
+check — the traffic model prices HBM and ICI a host-platform mesh does
+not have, so a huge cpu residual is expected, not a bug.
+
+A ``repro.obs/v1`` document (a dict, not a record list — the schema
+``launch.serve --metrics`` dumps) is validated structurally too: every
+histogram's count/sum finite, quantiles ordered (p50 <= p95 <= p99), and
+counters non-negative.
+
 ``spmvs_to_amortize=inf`` and friends are legitimate (a format that never
 breaks even), so only the keys named above are validated.
 """
@@ -84,6 +100,11 @@ MESH_REGRESSION_TOLERANCE = 1.10
 # a cx=on (sparsity-aware X gather) row may be at most 10% slower than its
 # cx=off twin, where the model says the gather pays
 COMPACT_REGRESSION_TOLERANCE = 1.10
+
+# observed/modeled residuals outside [1/10, 10] flag the model as broken —
+# on backends where the model claims to apply (never on cpu, where the
+# traffic model prices memory systems the host platform does not have)
+RESIDUAL_MAX_OFF = 10.0
 
 _CHUNK_ROW_RE = re.compile(
     r"^(?P<base>.*sellcs\+merge@\d+dev)/chunks=(?P<c>\d+)"
@@ -120,7 +141,84 @@ def _backend(rec: dict) -> Optional[str]:
     for key, val in _derived_fields(str(rec.get("derived", ""))):
         if key == "backend":
             return val
-    return None
+    # harness.Csv stamps the backend as a top-level record key; the
+    # derived field (older spmm_sweep rows) stays authoritative when both
+    # are present since it names the backend the row actually timed
+    b = rec.get("backend")
+    return str(b) if b is not None else None
+
+
+def _check_residual_value(v: float, backend: Optional[str], where: str
+                          ) -> List[str]:
+    """Shared residual validation: finite and > 0 everywhere; the 10x
+    model-off flag only where the model claims to apply (not cpu)."""
+    if not math.isfinite(v) or v <= 0:
+        return [f"{where}: residual={v} must be finite and > 0"]
+    if backend not in (None, "cpu") and \
+            not (1.0 / RESIDUAL_MAX_OFF <= v <= RESIDUAL_MAX_OFF):
+        return [f"{where}: residual={v:.4g} — model off by more than "
+                f"{RESIDUAL_MAX_OFF:g}x on backend={backend} where it "
+                "claims to apply"]
+    return []
+
+
+def check_residuals(records: List[dict], origin: str) -> List[str]:
+    """The model-honesty gate over ``residual=`` derived fields."""
+    problems = []
+    for rec in records:
+        name = f"{origin}:{rec.get('section', '?')}/{rec.get('name', '?')}"
+        for key, val in _derived_fields(str(rec.get("derived", ""))):
+            if key != "residual":
+                continue
+            try:
+                v = float(val)
+            except ValueError:
+                problems.append(f"{name}: residual={val!r} is not a "
+                                "number")
+                continue
+            problems.extend(
+                _check_residual_value(v, _backend(rec), name))
+    return problems
+
+
+def check_obs_document(doc: dict, origin: str) -> List[str]:
+    """Validate one ``repro.obs/v1`` document (``launch.serve --metrics``
+    / ``MetricRegistry.dump``): structural sanity for every series plus
+    the residual gate over the ledger's records."""
+    problems = []
+    base_backend = doc.get("labels", {}).get("backend")
+    for c in doc.get("counters", []):
+        v = c.get("value")
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v < 0:
+            problems.append(f"{origin}:counter/{c.get('name', '?')}: "
+                            f"value={v!r} must be finite and >= 0")
+    for h in doc.get("histograms", []):
+        name = f"{origin}:histogram/{h.get('name', '?')}"
+        count = h.get("count")
+        if not isinstance(count, int) or count < 0:
+            problems.append(f"{name}: count={count!r} must be an int >= 0")
+            continue
+        if count == 0:
+            continue
+        for key in ("sum", "min", "max", "mean", "p50", "p95", "p99"):
+            v = h.get(key)
+            if not isinstance(v, (int, float)) or not math.isfinite(v):
+                problems.append(f"{name}: {key}={v!r} is not finite")
+        qs = [h.get(k) for k in ("p50", "p95", "p99")]
+        if all(isinstance(q, (int, float)) and math.isfinite(q)
+               for q in qs) and not (qs[0] <= qs[1] <= qs[2]):
+            problems.append(f"{name}: quantiles out of order "
+                            f"(p50={qs[0]!r}, p95={qs[1]!r}, "
+                            f"p99={qs[2]!r})")
+    for r in doc.get("residuals", []):
+        name = f"{origin}:residual/{r.get('name', '?')}"
+        backend = r.get("labels", {}).get("backend", base_backend)
+        v = r.get("residual")
+        if not isinstance(v, (int, float)):
+            problems.append(f"{name}: residual={v!r} is not a number")
+            continue
+        problems.extend(_check_residual_value(float(v), backend, name))
+    return problems
 
 
 def check_chunk_regressions(records: List[dict], origin: str) -> List[str]:
@@ -288,6 +386,7 @@ def check_records(records: List[dict], origin: str) -> List[str]:
     problems.extend(check_chunk_regressions(records, origin))
     problems.extend(check_mesh_regressions(records, origin))
     problems.extend(check_compact_regressions(records, origin))
+    problems.extend(check_residuals(records, origin))
     return problems
 
 
@@ -305,6 +404,15 @@ def main(argv=None) -> int:
                 records = json.load(f)
         except (OSError, json.JSONDecodeError) as e:
             problems.append(f"{path}: unreadable ({e})")
+            continue
+        if isinstance(records, dict) and \
+                records.get("schema") == "repro.obs/v1":
+            # a serve --metrics dump, not a harness record list
+            total += (len(records.get("counters", []))
+                      + len(records.get("gauges", []))
+                      + len(records.get("histograms", []))
+                      + len(records.get("residuals", [])))
+            problems.extend(check_obs_document(records, path))
             continue
         total += len(records)
         problems.extend(check_records(records, path))

@@ -158,10 +158,15 @@ def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
                         m, n, k, pd, sched, nnz=nnz, max_row_nnz=max_row,
                         num_chunks=nc or 1, model_devices=pm,
                         compact_x=cf, n_touched=n_touched)
+                    # residual = observed/modeled — the same quantity the
+                    # serve-path ResidualLedger records, stamped per row
+                    # so smoke_check's residual gate reads sweep JSON and
+                    # serve metrics dumps identically
                     derived = (f"gflops={gflops:.4g};"
                                f"hbm_mb={hbm / 1e6:.4g};"
                                f"coll_mb={coll / 1e6:.4g};"
                                f"model_us={model_s * 1e6:.4g};"
+                               f"residual={sec / model_s:.4g};"
                                f"backend={backend}")
                     if cf:
                         derived += f";n_touched={n_touched:.4g}"

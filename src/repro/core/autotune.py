@@ -53,6 +53,11 @@ class TuneResult:
     compact_x: Optional[bool] = None  # sparsity-aware X gather picked by
                                       #   the distributed score (sellcs
                                       #   only; None off the mesh)
+    residual: Optional[float] = None  # observed/modeled correction the
+                                      #   feedback ledger applied to this
+                                      #   result's winning distributed
+                                      #   score (None: no feedback, or no
+                                      #   matching measurement yet)
 
 
 def _measure(fn: Callable, reps: int = 5, warmup: int = 2) -> float:
@@ -70,7 +75,7 @@ def autotune(coo: COO, *, num_spmvs: int = 100,
              algorithms: Tuple[str, ...] = DEFAULT_ALGOS,
              betas: Optional[List[int]] = None,
              reps: int = 5, tpu_model: bool = False, k: int = 1,
-             num_devices: int = 1
+             num_devices: int = 1, feedback=None
              ) -> Tuple[TuneResult, List[TuneResult]]:
     """Return (best, all_results) over the candidate grid.
 
@@ -86,7 +91,17 @@ def autotune(coo: COO, *, num_spmvs: int = 100,
     for "merge") — the tuner cannot run the mesh it is tuning for, but the
     model ratio carries the measured stream rate across. Each result then
     records the winning cross-device ``schedule`` and the modelled
-    distributed per-multiply seconds in ``dist_model_s``."""
+    distributed per-multiply seconds in ``dist_model_s``.
+
+    ``feedback`` closes the loop: pass a ``repro.obs.ResidualLedger``
+    (e.g. loaded from a ``serve --metrics`` run) and every distributed
+    grid candidate's modelled seconds are multiplied by
+    ``feedback.correction(**choice_labels(schedule, num_chunks,
+    mesh_shape, compact_x))`` — the geometric-mean observed/modeled
+    residual of matching measurements — before the grid min is taken, so
+    a config the model flatters gets re-ranked by what the machine
+    actually did. The applied factor is recorded in
+    ``TuneResult.residual`` (None where no measurement matched)."""
     rng = np.random.default_rng(0)
     if k > 1:
         from repro.spmm import choose_k_tile, spmm
@@ -146,21 +161,29 @@ def autotune(coo: COO, *, num_spmvs: int = 100,
     if num_devices > 1:
         from .selector import matrix_stats
         stats = matrix_stats(coo)       # one O(nnz) pass for all results
-        results = [_rescore_distributed(r, stats, k, num_devices, num_spmvs)
+        results = [_rescore_distributed(r, stats, k, num_devices, num_spmvs,
+                                        feedback=feedback)
                    for r in results]
     best = min(results, key=lambda r: r.total_s)
     return best, results
 
 
 def _rescore_distributed(r: TuneResult, stats, k: int, num_devices: int,
-                         num_spmvs: int) -> TuneResult:
+                         num_spmvs: int, feedback=None) -> TuneResult:
     """Scale a measured single-device result across the mesh with the
     roofline traffic model and pick the best (schedule, mesh shape,
     num_chunks, compact_x) for it — "merge" sweeps the psum pipelining
     depths, "row" has no collective to chunk, both sweep every
     (P_data, P_model) factorization of the mesh, and the SELL-C-σ format
     additionally scores the sparsity-aware X gather (compact=False is
-    scored first, so a dense-columns tie refuses compaction)."""
+    scored first, so a dense-columns tie refuses compaction).
+
+    With ``feedback`` (a ``repro.obs.ResidualLedger``), each candidate's
+    modelled seconds are multiplied by the ledger's geometric-mean
+    observed/modeled residual for that candidate's labels before the min
+    — measured reality outvotes the streaming-bytes story wherever a
+    measurement exists. The winning candidate's correction lands in
+    ``TuneResult.residual``."""
     from repro.roofline.analysis import spmm_distributed_time
     from .selector import _matrix_bytes_est, distributed_schedule_grid
     mat_bytes = _matrix_bytes_est(r.algorithm, stats)
@@ -168,16 +191,26 @@ def _rescore_distributed(r: TuneResult, stats, k: int, num_devices: int,
                                    matrix_bytes=mat_bytes)
     grid = distributed_schedule_grid(num_devices)
     compacts = (False, True) if r.algorithm == "sellcs" else (False,)
-    (schedule, num_chunks, mesh_shape, compact), model_s = min(
-        (((s, nc, mesh, cf),
-          spmm_distributed_time(stats.m, stats.n, k, mesh[0],
-                                s, matrix_bytes=mat_bytes,
-                                max_row_nnz=stats.max_row_nnz,
-                                num_chunks=nc, model_devices=mesh[1],
-                                compact_x=cf, nnz=stats.nnz))
-         for s, nc, mesh in grid for cf in compacts), key=lambda t: t[1])
+
+    def corrected(s, nc, mesh, cf):
+        model_s = spmm_distributed_time(
+            stats.m, stats.n, k, mesh[0], s, matrix_bytes=mat_bytes,
+            max_row_nnz=stats.max_row_nnz, num_chunks=nc,
+            model_devices=mesh[1], compact_x=cf, nnz=stats.nnz)
+        corr = 1.0
+        if feedback is not None:
+            from repro.obs import choice_labels
+            corr = feedback.correction(**choice_labels(
+                schedule=s, num_chunks=nc, mesh_shape=mesh, compact_x=cf))
+        return model_s * corr, corr
+
+    (schedule, num_chunks, mesh_shape, compact), (model_s, corr) = min(
+        (((s, nc, mesh, cf), corrected(s, nc, mesh, cf))
+         for s, nc, mesh in grid for cf in compacts),
+        key=lambda t: t[1][0])
     per_multiply = r.spmv_s * (model_s / max(base_s, 1e-30))
     return dataclasses.replace(
         r, total_s=r.convert_s + num_spmvs * per_multiply,
         num_devices=num_devices, schedule=schedule, dist_model_s=model_s,
-        num_chunks=num_chunks, mesh_shape=mesh_shape, compact_x=compact)
+        num_chunks=num_chunks, mesh_shape=mesh_shape, compact_x=compact,
+        residual=corr if feedback is not None and corr != 1.0 else None)

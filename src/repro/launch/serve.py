@@ -25,11 +25,24 @@ devices first:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --mode spmv --matrix mawi_like \
       --requests 64 --max-batch 32 --mesh 4,2 --impl ref --chunks 4
+
+Observability — ``--metrics out.json`` installs a ``repro.obs`` registry
+for the run and dumps it at the end: per-flush phase spans (the
+``batcher/*`` series plus, on a mesh, an eager phase-profile pass through
+``spmm/gather_x`` / ``spmm/mesh`` / ``spmm/kernel`` / ``spmm/psum`` /
+``spmm/fixup``), p50/p95/p99 flush latency (``serve/flush_s``, exact
+order statistics at serve batch counts), and one ``ResidualLedger``
+record per flush pairing the measured wall time with the roofline
+prediction (``spmm_distributed_time``) for the chosen
+``DistributedChoice`` — the observed-vs-modeled residuals that feed
+``core.autotune(feedback=)``. Headline timings follow the paper's §5.2
+min-of-N protocol (``--reps``), never a single ``perf_counter`` pair.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,11 +61,28 @@ def _pick_chunk(m: int, num_devices: int, default: int = 128) -> int:
     return c
 
 
-def _make_distributed_spmm(coo, stats, args, mesh_shape):
-    """Build (matrix, spmm_fn, label, schedule, chunks, mesh_shape) for
-    the --devices / --mesh path. ``mesh_shape`` is a (P_data, P_model)
-    factorization, or None to let the traffic model keep the 1-D mesh
-    (the --devices behavior)."""
+class _DistPlan(NamedTuple):
+    """Everything the --devices / --mesh serve path needs to know about
+    the distributed multiply it chose."""
+    matrix: object               # the SELL-C-σ stream (pre-partition)
+    spmm_fn: Callable            # jitted (matrix, X) -> Y flush closure
+    eager_fn: Callable           # un-jitted X -> Y — the phase-profile
+                                 #   pass --metrics runs (spans time real
+                                 #   eager execution, not tracing)
+    label: str
+    schedule: str
+    chunks: int
+    mesh_shape: Tuple[int, int]
+    compact: bool
+    n_touched: Optional[float]
+    modeled_s: float             # roofline seconds per k=max_batch flush
+                                 #   for exactly these knobs
+
+
+def _make_distributed_spmm(coo, stats, args, mesh_shape) -> "_DistPlan":
+    """Build the :class:`_DistPlan` for the --devices / --mesh path.
+    ``mesh_shape`` is a (P_data, P_model) factorization, or None to let
+    the traffic model keep the 1-D mesh (the --devices behavior)."""
     from repro.core.selector import (_matrix_bytes_est,
                                      distributed_schedule_grid)
     from repro.launch.mesh import make_spmm_mesh
@@ -105,16 +135,17 @@ def _make_distributed_spmm(coo, stats, args, mesh_shape):
     cx_tag = "/cx=on" if compact else ""
     if schedule == "row":
         sharded = partition_sellcs_rows(sc, pd, compact_x=compact)
-        jitted = jax.jit(lambda X: spmm_row_distributed(
-            sharded, X, mesh, impl=impl))
+        eager = lambda X: spmm_row_distributed(sharded, X, mesh, impl=impl)
         label = f"sellcs+row@{mesh_tag}{cx_tag}"
     else:
         # the span plan is baked at partition time; the multiply reuses it
         sharded = partition_sellcs_nnz(sc, pd, num_chunks=chunks,
                                        compact_x=compact)
-        jitted = jax.jit(lambda X: spmm_merge_distributed(
-            sharded, X, mesh, impl=impl, num_chunks=chunks))
+        eager = lambda X: spmm_merge_distributed(sharded, X, mesh,
+                                                 impl=impl,
+                                                 num_chunks=chunks)
         label = f"sellcs+merge@{mesh_tag}/chunks={chunks}{cx_tag}"
+    jitted = jax.jit(eager)
     # the jitted closure keeps repeated flushes of one batch shape from
     # retracing the shard_map body.
     # price the gather with the map the multiply EXECUTES: the chunked
@@ -126,16 +157,95 @@ def _make_distributed_spmm(coo, stats, args, mesh_shape):
         nt_src = (sharded.chunk_plan[3]
                   if sharded.chunk_plan is not None else sharded.n_touched)
         n_touched = float(np.mean(np.asarray(nt_src)))
+    modeled_s = spmm_distributed_time(
+        stats.m, stats.n, args.max_batch, pd, schedule,
+        matrix_bytes=sellcs_bytes, max_row_nnz=stats.max_row_nnz,
+        num_chunks=chunks, model_devices=pm, compact_x=compact,
+        n_touched=n_touched, nnz=stats.nnz)
 
     def spmm_fn(_mat, X):
         return jitted(X)
-    return (sc, spmm_fn, label, schedule, chunks, mesh_shape, compact,
-            n_touched)
+    return _DistPlan(sc, spmm_fn, eager, label, schedule, chunks,
+                     mesh_shape, compact, n_touched, modeled_s)
+
+
+def _metrics_pass(reg, mat, xs, args, spmm_fn, plan, stats, algo):
+    """The --metrics measurement pass: per-flush wall times into the
+    ``serve/flush_s`` histogram and one :class:`~repro.obs.ResidualRecord`
+    per flush pairing the measured latency with the roofline prediction
+    for the served knobs — the observed side of the selector's model."""
+    from repro.obs import choice_labels
+    from repro.roofline import spmm_distributed_time
+    from repro.spmm import RequestBatcher
+    from repro.core.selector import _matrix_bytes_est
+
+    batcher = RequestBatcher(mat, max_batch=args.max_batch, impl=args.impl,
+                             spmm_fn=spmm_fn)
+    for x in xs:
+        batcher.submit(x)
+    flush_h = reg.histogram("serve/flush_s")
+    labels = choice_labels(
+        schedule=plan.schedule if plan else "single",
+        num_chunks=plan.chunks if plan else 1,
+        mesh_shape=plan.mesh_shape if plan else (1, 1),
+        compact_x=plan.compact if plan else None,
+        matrix=args.matrix, algo=algo, backend=jax.default_backend())
+    while batcher.pending:
+        k = min(batcher.pending, args.max_batch)
+        t0 = time.perf_counter()
+        out = batcher.flush()
+        jax.block_until_ready(list(out.values()))
+        dt = time.perf_counter() - t0
+        flush_h.observe(dt)
+        if plan is not None:
+            modeled = plan.modeled_s if k == args.max_batch else \
+                spmm_distributed_time(
+                    stats.m, stats.n, k, plan.mesh_shape[0], plan.schedule,
+                    matrix_bytes=_matrix_bytes_est("sellcs", stats),
+                    max_row_nnz=stats.max_row_nnz, num_chunks=plan.chunks,
+                    model_devices=plan.mesh_shape[1],
+                    compact_x=plan.compact, n_touched=plan.n_touched,
+                    nnz=stats.nnz)
+        else:
+            # single device: the distributed model at P=1 degenerates to
+            # the plain streaming-bytes roofline for this format
+            modeled = spmm_distributed_time(
+                stats.m, stats.n, k, 1, "row",
+                matrix_bytes=_matrix_bytes_est(algo, stats),
+                max_row_nnz=stats.max_row_nnz, nnz=stats.nnz)
+        reg.ledger.record("serve/flush", dt, modeled, k=k, **labels)
+
+
+def _print_metrics_summary(reg):
+    flush = reg.histogram("serve/flush_s")
+    if flush.count:
+        p = flush.percentiles()
+        print(f"[serve-spmv] flush latency over {flush.count} flushes: "
+              f"p50 {p['p50']*1e3:.2f} ms, p95 {p['p95']*1e3:.2f} ms, "
+              f"p99 {p['p99']*1e3:.2f} ms"
+              f"{' (exact)' if flush.exact else ''}")
+    phases = [h for h in reg.histograms()
+              if h.count and (h.name.startswith("spmm/")
+                              or h.name.startswith("batcher/"))]
+    for h in sorted(phases, key=lambda h: h.name):
+        print(f"[serve-spmv]   phase {h.name:<24} n={h.count:<4} "
+              f"mean {h.mean*1e3:8.3f} ms  p95 "
+              f"{h.quantile(0.95)*1e3:8.3f} ms")
+    ledger = reg.ledger
+    if len(ledger):
+        corr = ledger.correction()
+        print(f"[serve-spmv] residual (observed/modeled) over "
+              f"{len(ledger)} flushes: geomean {corr:.3g} — the factor "
+              "autotune(feedback=) will apply to this config's score")
 
 
 def serve_spmv(args):
     """Sparse serving demo: batched (one SpMM per flush) vs sequential,
-    optionally over a --devices mesh."""
+    optionally over a --devices mesh. Headline numbers use the paper's
+    §5.2 min-of-N discipline; ``--metrics`` additionally records phase
+    spans, flush-latency percentiles and observed-vs-modeled residuals,
+    then dumps them as one ``repro.obs/v1`` JSON document."""
+    from repro import obs
     from repro.core import MachineSpec, convert, matrix_stats, select, spmv
     from repro.data import matrices
     from repro.roofline import spmm_arithmetic_intensity
@@ -149,17 +259,17 @@ def serve_spmv(args):
     # num_spmvs counts k-RHS multiplies: batching turns `requests` SpMVs
     # into ceil(requests / max_batch) SpMM calls
     num_spmms = -(-args.requests // args.max_batch)
-    spmm_fn = sched = None
-    chunks = 1
+    spmm_fn = None
+    plan = None
     mesh_shape = None
-    compact, n_touched = False, None
     if args.mesh:
         from repro.launch.mesh import parse_mesh_shape
         mesh_shape = parse_mesh_shape(args.mesh)
         args.devices = mesh_shape[0] * mesh_shape[1]
     if args.devices > 1:
-        (mat, spmm_fn, algo, sched, chunks, mesh_shape, compact,
-         n_touched) = _make_distributed_spmm(coo, stats, args, mesh_shape)
+        plan = _make_distributed_spmm(coo, stats, args, mesh_shape)
+        mat, spmm_fn, algo = plan.matrix, plan.spmm_fn, plan.label
+        mesh_shape = plan.mesh_shape
     else:
         algo = args.algorithm or select(stats, MachineSpec(1),
                                         num_spmvs=num_spmms,
@@ -172,24 +282,29 @@ def serve_spmv(args):
     xs = [jnp.asarray(rng.standard_normal(stats.n).astype(np.float32))
           for _ in range(args.requests)]
 
-    batcher = RequestBatcher(mat, max_batch=args.max_batch, impl=args.impl,
-                             spmm_fn=spmm_fn)
-    for x in xs:
-        batcher.submit(x)
-    jax.block_until_ready(list(batcher.drain().values()))  # warmup/compile
-    batcher2 = RequestBatcher(mat, max_batch=args.max_batch, impl=args.impl,
-                              spmm_fn=spmm_fn)
-    rids = [batcher2.submit(x) for x in xs]
-    t0 = time.perf_counter()
-    out = batcher2.drain()
-    jax.block_until_ready(list(out.values()))
-    t_batched = time.perf_counter() - t0
+    reg = None
+    if args.metrics:
+        reg = obs.install(obs.MetricRegistry(
+            backend=jax.default_backend(), mode="spmv",
+            matrix=args.matrix, algo=algo, devices=args.devices,
+            max_batch=args.max_batch))
 
-    jax.block_until_ready(spmv(mat, xs[0], impl=args.impl))  # warmup
-    t0 = time.perf_counter()
-    seq = [spmv(mat, x, impl=args.impl) for x in xs]
-    jax.block_until_ready(seq)
-    t_seq = time.perf_counter() - t0
+    # headline timing, the paper's §5.2 way: min over --reps runs after a
+    # warmup/compile run — never a single first-flush perf_counter pair
+    def batched_run():
+        b = RequestBatcher(mat, max_batch=args.max_batch, impl=args.impl,
+                           spmm_fn=spmm_fn)
+        rids = [b.submit(x) for x in xs]
+        return b.drain(), rids, b.flushes
+
+    t_b = obs.time_min_of_n(batched_run, reps=args.reps, warmup=1)
+    out, rids, num_flushes = t_b.last_result
+    t_batched = t_b.best_s
+
+    t_s = obs.time_min_of_n(
+        lambda: [spmv(mat, x, impl=args.impl) for x in xs],
+        reps=args.reps, warmup=1)
+    seq, t_seq = t_s.last_result, t_s.best_s
 
     for rid, y in zip(rids, seq):
         np.testing.assert_allclose(np.asarray(out[rid]), np.asarray(y),
@@ -198,14 +313,17 @@ def serve_spmv(args):
     aik = spmm_arithmetic_intensity(stats.nnz, stats.m, stats.n,
                                     args.max_batch)
     print(f"[serve-spmv] batched {t_batched*1e3:.1f} ms "
-          f"({batcher2.flushes} SpMM calls) vs sequential "
+          f"({num_flushes} SpMM calls) vs sequential "
           f"{t_seq*1e3:.1f} ms ({len(xs)} SpMV calls) — "
-          f"speedup {t_seq/max(t_batched, 1e-9):.2f}x")
+          f"speedup {t_seq/max(t_batched, 1e-9):.2f}x "
+          f"(min of {t_b.reps}, warmup {t_b.warmup})")
     print(f"[serve-spmv] modelled intensity {ai1:.3f} -> {aik:.3f} "
           f"flop/byte at k={args.max_batch}")
-    if args.devices > 1:
+    if plan is not None:
         from repro.roofline import (spmm_distributed_collective_s,
                                     spmm_distributed_traffic)
+        sched, chunks = plan.schedule, plan.chunks
+        compact, n_touched = plan.compact, plan.n_touched
         pd, pm = mesh_shape
         hbm, coll = spmm_distributed_traffic(
             stats.m, stats.n, args.max_batch, pd, sched,
@@ -233,6 +351,21 @@ def serve_spmv(args):
             print(f"[serve-spmv] exposed collective_s: {mono * 1e6:.2f} us "
                   f"monolithic -> {over * 1e6:.2f} us with {chunks} "
                   "chunk(s) pipelined under the slice stream")
+
+    if reg is not None:
+        # the measured side: per-flush latencies + residual ledger records
+        # against the roofline prediction for the served knobs
+        _metrics_pass(reg, mat, xs, args, spmm_fn, plan, stats, algo)
+        if plan is not None:
+            # one eager pass so the spmm/* phase spans time real execution
+            # (inside the jitted flush they only see tracing)
+            with obs.span("serve/eager_profile"):
+                jax.block_until_ready(plan.eager_fn(
+                    jnp.stack([x for x in xs[:args.max_batch]], axis=1)))
+        _print_metrics_summary(reg)
+        reg.dump(args.metrics)
+        print(f"[serve-spmv] metrics -> {args.metrics}")
+        obs.uninstall()
     return t_batched, t_seq
 
 
@@ -270,6 +403,13 @@ def main(argv=None):
                          "decide when the gather beats replication)")
     ap.add_argument("--impl", default="auto",
                     choices=("auto", "ref", "pallas", "pallas_interpret"))
+    ap.add_argument("--metrics", default=None, metavar="OUT.json",
+                    help="install a repro.obs registry for the run and dump "
+                         "it here: phase spans, p50/p95/p99 flush latency, "
+                         "and observed-vs-modeled residuals (repro.obs/v1)")
+    ap.add_argument("--reps", type=int, default=5,
+                    help="min-of-N repetitions for the headline batched-vs-"
+                         "sequential timing (the paper's §5.2 protocol)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

@@ -1,0 +1,36 @@
+"""repro.obs — observability for the SpMM serving stack.
+
+Layers (one module each):
+
+  ``metrics``    process-local ``MetricRegistry``: counters, gauges,
+                 reservoir histograms (exact p50/p95/p99 on small N,
+                 bounded memory on large N), JSON ``dump()``
+  ``trace``      ``span("gather_x")`` phase tracing — host wall time into
+                 the registry + ``jax.named_scope`` /
+                 ``jax.profiler.TraceAnnotation`` so device traces carry
+                 the same names
+  ``residuals``  ``ResidualLedger``: observed-vs-modeled pairings that
+                 close the roofline loop (``autotune(feedback=)``)
+  ``timing``     the paper's §5.2 min-of-N protocol, shared by the bench
+                 harness, autotune, and the serve headline
+
+Default state is OFF: until ``install(MetricRegistry(...))`` runs, every
+instrumented call site is a no-op and ``span()`` returns an
+allocation-free singleton — the serve hot path pays nothing for carrying
+its instrumentation (asserted in ``tests/test_obs.py``).
+"""
+from __future__ import annotations
+
+from .metrics import (Counter, Gauge, Histogram, MetricRegistry,
+                      current_registry, enabled, install, uninstall)
+from .residuals import (ResidualLedger, ResidualRecord, choice_labels)
+from .timing import TimingResult, time_min_of_n
+from .trace import maybe_block, span
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricRegistry",
+    "current_registry", "enabled", "install", "uninstall",
+    "ResidualLedger", "ResidualRecord", "choice_labels",
+    "TimingResult", "time_min_of_n",
+    "maybe_block", "span",
+]

@@ -10,14 +10,31 @@ column j of the SpMM *is* request j's SpMV.
 ``RequestBatcher`` is the queueing front-end ``launch.serve`` drives; k is
 padded to the next power of two (capped at ``max_batch``) so a server sees
 O(log max_batch) distinct compiled shapes instead of one per queue depth.
+
+Serve metrics (``repro.obs``): when a registry is installed, every flush
+records its phases — ``batcher/flush`` (whole flush, blocking on Y so the
+latency is real), ``batcher/pad`` (queue pop + dtype promotion + the
+power-of-two pad), ``batcher/multiply`` (the SpMM itself), and
+``batcher/scatter`` (result columns back to tickets) — plus a
+``batcher/queue_wait_s`` histogram (submit-to-flush seconds per request),
+``batcher/flushes`` / ``batcher/served`` counters and a
+``batcher/pending`` depth gauge. The flush percentiles
+``launch.serve --metrics`` prints are the ``batcher/flush`` series. With
+no registry installed none of this runs: the spans are shared no-op
+singletons and the submit path takes one ``enabled()`` branch — the hot
+path stays allocation-free (asserted in ``tests/test_obs.py``).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+
+from repro import obs
+from repro.obs import maybe_block, span
 
 Array = jax.Array
 
@@ -92,6 +109,9 @@ class RequestBatcher:
         # serving telemetry
         self.flushes = 0
         self.served = 0
+        # submit timestamps for the queue-wait histogram; only written
+        # while an obs registry is installed
+        self._submit_t: Dict[int, float] = {}
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -111,33 +131,63 @@ class RequestBatcher:
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(SpmvRequest(rid, x))
+        if obs.enabled():
+            self._submit_t[rid] = time.perf_counter()
+            reg = obs.current_registry()
+            reg.counter("batcher/submitted").inc()
+            reg.gauge("batcher/pending").set(len(self._queue))
         return rid
 
     def flush(self) -> Dict[int, Array]:
         """Serve up to ``max_batch`` queued requests with one SpMM call and
-        scatter the result columns back to their tickets."""
+        scatter the result columns back to their tickets.
+
+        With an obs registry installed the flush is phase-traced (pad /
+        multiply / scatter) and blocks on its outputs so the recorded
+        ``batcher/flush`` latency is execution time, not dispatch time —
+        the one behavioral difference metrics mode buys its numbers with.
+        """
         if not self._queue:
             return {}
-        batch, self._queue = (self._queue[:self.max_batch],
-                              self._queue[self.max_batch:])
-        k = len(batch)
-        n = self.matrix.shape[1]
-        kp = min(_next_pow2(k), self.max_batch) if self.pad_pow2 else k
-        # the batch dtype is the promotion over every queued request, not
-        # whatever the first one happened to be — a mixed-dtype queue must
-        # not silently downcast later columns
-        dtype = jnp.result_type(*(r.x for r in batch))
-        X = jnp.zeros((n, kp), dtype)
-        X = X.at[:, :k].set(jnp.stack([r.x.astype(dtype) for r in batch],
-                                      axis=1))
-        if self.spmm_fn is not None:
-            Y = self.spmm_fn(self.matrix, X)
-        else:
-            from . import spmm
-            Y = spmm(self.matrix, X, impl=self.impl)
-        self.flushes += 1
-        self.served += k
-        return {r.rid: Y[:, j] for j, r in enumerate(batch)}
+        with span("batcher/flush"):
+            batch, self._queue = (self._queue[:self.max_batch],
+                                  self._queue[self.max_batch:])
+            k = len(batch)
+            n = self.matrix.shape[1]
+            kp = min(_next_pow2(k), self.max_batch) if self.pad_pow2 else k
+            with span("batcher/pad"):
+                # the batch dtype is the promotion over every queued
+                # request, not whatever the first one happened to be — a
+                # mixed-dtype queue must not silently downcast later
+                # columns
+                dtype = jnp.result_type(*(r.x for r in batch))
+                X = jnp.zeros((n, kp), dtype)
+                X = maybe_block(X.at[:, :k].set(
+                    jnp.stack([r.x.astype(dtype) for r in batch], axis=1)))
+            with span("batcher/multiply"):
+                if self.spmm_fn is not None:
+                    Y = self.spmm_fn(self.matrix, X)
+                else:
+                    from . import spmm
+                    Y = spmm(self.matrix, X, impl=self.impl)
+                Y = maybe_block(Y)
+            with span("batcher/scatter"):
+                out = {r.rid: Y[:, j] for j, r in enumerate(batch)}
+            self.flushes += 1
+            self.served += k
+            if obs.enabled():
+                reg = obs.current_registry()
+                now = time.perf_counter()
+                waits = reg.histogram("batcher/queue_wait_s")
+                for r in batch:
+                    t0 = self._submit_t.pop(r.rid, None)
+                    if t0 is not None:
+                        waits.observe(now - t0)
+                reg.counter("batcher/flushes").inc()
+                reg.counter("batcher/served").inc(k)
+                reg.gauge("batcher/batch_k").set(k)
+                reg.gauge("batcher/pending").set(len(self._queue))
+            return out
 
     def drain(self) -> Dict[int, Array]:
         """Flush until the queue is empty."""

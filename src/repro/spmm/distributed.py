@@ -55,6 +55,17 @@ vector reads. Compaction composes with ``num_chunks`` pipelining (the
 span re-deal builds its own touched map over the re-dealt rows) and costs
 one int32 map per shard, priced by ``ShardedSellCS.storage_bytes`` and
 ``roofline.spmm_distributed_traffic(compact_x=True)``.
+
+Phase tracing (``repro.obs``): both multiplies carry ``span()`` markers at
+the phase boundaries the structure already has — ``spmm/gather_x`` (the
+compact-X gather ahead of the mesh region), ``spmm/mesh`` (the whole
+shard_map region), ``spmm/kernel`` / ``spmm/psum`` (inside the mesh body
+— host time there is trace time, but the names ride into compiled HLO
+via ``jax.named_scope`` so device profiles show them), and
+``spmm/fixup`` (the σ-unpermute scatter). With no registry installed the
+spans are allocation-free no-ops; with one installed the host-level
+spans additionally block on their outputs so they time execution, not
+async dispatch (``obs.maybe_block``).
 """
 from __future__ import annotations
 
@@ -68,6 +79,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.distributed import _check_devices
 from repro.core.mergepath import balanced_row_bands
+from repro.obs import maybe_block, span
 from .kernels import LANE, choose_k_tile, sellcs_slots, sellcs_slots_chunk
 from .reference import _as_2d, sellcs_slots_chunk_ref, sellcs_slots_ref
 from .sellcs import SellCS
@@ -569,39 +581,45 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
         y = jnp.zeros((m, k), _out_dtype(sharded, x2, use_pallas))
         return y[:, 0] if squeeze else y
     if compact:
-        x_feed = _gather_x(x_pad, sharded.col_map, use_pallas)
+        with span("spmm/gather_x"):
+            x_feed = maybe_block(_gather_x(x_pad, sharded.col_map,
+                                           use_pallas))
         x_spec = P(axis, None, maxis)
     else:
         x_feed, x_spec = x_pad, P(None, maxis)
 
     def local(data, cols, slice_of, x_loc):
-        return _local_slots(data, cols, slice_of,
-                            x_loc[0] if compact else x_loc, num_slices=Sp,
-                            chunk=C, use_pallas=use_pallas, k_tile=kt,
-                            interpret=impl == "pallas_interpret")
+        with span("spmm/kernel"):
+            return _local_slots(data, cols, slice_of,
+                                x_loc[0] if compact else x_loc,
+                                num_slices=Sp, chunk=C,
+                                use_pallas=use_pallas, k_tile=kt,
+                                interpret=impl == "pallas_interpret")
 
     # pallas_call has no replication rule inside shard_map — skip the check
-    yb = shard_map(
-        local, mesh=mesh,
-        in_specs=(P(axis, None, None), P(axis, None, None), P(axis, None),
-                  x_spec),
-        out_specs=P(axis, maxis),
-        check_vma=False if use_pallas else None)(
-            sharded.data, sharded.cols, sharded.slice_of, x_feed)
-    yb = yb.reshape(ndev, Sp * C, -1)
-    # shard p owns global slices [slice_offset[p], slice_offset[p+1]);
-    # scatter its local slots there, dumping padding slots past S*C.
-    offs = sharded.slice_offset
-    valid_slices = jnp.concatenate(
-        [offs[1:], jnp.array([S], jnp.int32)]) - offs           # [Pdev]
-    local_slice = jnp.arange(Sp * C, dtype=jnp.int32) // C
-    gslot = (offs[:, None] + local_slice[None]) * C \
-        + (jnp.arange(Sp * C, dtype=jnp.int32) % C)[None]       # [Pdev, SpC]
-    mask = local_slice[None] < valid_slices[:, None]
-    y_slots = jnp.zeros((S * C + 1, yb.shape[-1]), yb.dtype).at[
-        jnp.where(mask, gslot, S * C)].add(
-            jnp.where(mask[..., None], yb, 0))[:S * C]
-    return _unpermute(sharded, y_slots, k, squeeze)
+    with span("spmm/mesh"):
+        yb = maybe_block(shard_map(
+            local, mesh=mesh,
+            in_specs=(P(axis, None, None), P(axis, None, None),
+                      P(axis, None), x_spec),
+            out_specs=P(axis, maxis),
+            check_vma=False if use_pallas else None)(
+                sharded.data, sharded.cols, sharded.slice_of, x_feed))
+    with span("spmm/fixup"):
+        yb = yb.reshape(ndev, Sp * C, -1)
+        # shard p owns global slices [slice_offset[p], slice_offset[p+1]);
+        # scatter its local slots there, dumping padding slots past S*C.
+        offs = sharded.slice_offset
+        valid_slices = jnp.concatenate(
+            [offs[1:], jnp.array([S], jnp.int32)]) - offs       # [Pdev]
+        local_slice = jnp.arange(Sp * C, dtype=jnp.int32) // C
+        gslot = (offs[:, None] + local_slice[None]) * C \
+            + (jnp.arange(Sp * C, dtype=jnp.int32) % C)[None]   # [Pdev, SpC]
+        mask = local_slice[None] < valid_slices[:, None]
+        y_slots = jnp.zeros((S * C + 1, yb.shape[-1]), yb.dtype).at[
+            jnp.where(mask, gslot, S * C)].add(
+                jnp.where(mask[..., None], yb, 0))[:S * C]
+        return maybe_block(_unpermute(sharded, y_slots, k, squeeze))
 
 
 def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
@@ -668,29 +686,35 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
 
     if nc == 1:
         if compact:
-            x_feed = _gather_x(x_pad, sharded.col_map, use_pallas)
+            with span("spmm/gather_x"):
+                x_feed = maybe_block(_gather_x(x_pad, sharded.col_map,
+                                               use_pallas))
             x_spec = P(axis, None, maxis)
         else:
             x_feed, x_spec = x_pad, P(None, maxis)
 
         def local(data, cols, slice_of, x_loc):
-            y_loc = _local_slots(data, cols, slice_of,
-                                 x_loc[0] if compact else x_loc,
-                                 num_slices=S, chunk=C,
-                                 use_pallas=use_pallas, k_tile=kt,
-                                 interpret=interpret)
+            with span("spmm/kernel"):
+                y_loc = _local_slots(data, cols, slice_of,
+                                     x_loc[0] if compact else x_loc,
+                                     num_slices=S, chunk=C,
+                                     use_pallas=use_pallas, k_tile=kt,
+                                     interpret=interpret)
             # carry-out fixup on the data axis ONLY: model shards own
             # disjoint Y columns and never enter the collective
-            return jax.lax.psum(y_loc[:, :k_keep], axis)
+            with span("spmm/psum"):
+                return jax.lax.psum(y_loc[:, :k_keep], axis)
 
-        y_slots = shard_map(
-            local, mesh=mesh,
-            in_specs=(P(axis, None, None), P(axis, None, None),
-                      P(axis, None), x_spec),
-            out_specs=P(None, maxis),
-            check_vma=False if use_pallas else None)(
-                sharded.data, sharded.cols, sharded.slice_of, x_feed)
-        return _unpermute(sharded, y_slots, k, squeeze)
+        with span("spmm/mesh"):
+            y_slots = maybe_block(shard_map(
+                local, mesh=mesh,
+                in_specs=(P(axis, None, None), P(axis, None, None),
+                          P(axis, None), x_spec),
+                out_specs=P(None, maxis),
+                check_vma=False if use_pallas else None)(
+                    sharded.data, sharded.cols, sharded.slice_of, x_feed))
+        with span("spmm/fixup"):
+            return maybe_block(_unpermute(sharded, y_slots, k, squeeze))
 
     if sharded.chunk_plan is not None and sharded.chunk_plan[0] == nc:
         # precomputed at partition time (spans + re-deal column map)
@@ -702,7 +726,8 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     if compact:
         # the spans' cols live in the chunk plan's index space, not the
         # base partition's — gather through the plan map
-        x_feed = _gather_x(x_pad, plan_map, use_pallas)
+        with span("spmm/gather_x"):
+            x_feed = maybe_block(_gather_x(x_pad, plan_map, use_pallas))
         x_spec = P(axis, None, maxis)
     else:
         x_feed, x_spec = x_pad, P(None, maxis)
@@ -714,26 +739,32 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
         x_loc = x_loc[0] if compact else x_loc
         outs = []
         for (s0, ns), data, cols, slice_of in zip(meta, datas, colss, sos):
-            if use_pallas:
-                y_c = sellcs_slots_chunk(
-                    data[0], cols[0], slice_of[0], x_loc, slice_start=s0,
-                    num_slices=ns, chunk=C, k_tile=kt, interpret=interpret)
-            else:
-                y_c = sellcs_slots_chunk_ref(
-                    data[0], cols[0], slice_of[0], x_loc, slice_start=s0,
-                    num_slices=ns, chunk=C)
-            outs.append(jax.lax.psum(y_c[:, :k_keep], axis))
+            with span("spmm/kernel"):
+                if use_pallas:
+                    y_c = sellcs_slots_chunk(
+                        data[0], cols[0], slice_of[0], x_loc,
+                        slice_start=s0, num_slices=ns, chunk=C, k_tile=kt,
+                        interpret=interpret)
+                else:
+                    y_c = sellcs_slots_chunk_ref(
+                        data[0], cols[0], slice_of[0], x_loc,
+                        slice_start=s0, num_slices=ns, chunk=C)
+            with span("spmm/psum"):
+                outs.append(jax.lax.psum(y_c[:, :k_keep], axis))
         # span i's rows sit at global slots [s0*C, (s0 + ns)*C); the spans
         # tile [0, S) in order, so concatenation IS the slot array
         return jnp.concatenate(outs, axis=0)
 
     span_spec = tuple(P(axis, None, None) for _ in spans)
-    y_slots = shard_map(
-        local, mesh=mesh,
-        in_specs=(span_spec, span_spec,
-                  tuple(P(axis, None) for _ in spans), x_spec),
-        out_specs=P(None, maxis),
-        check_vma=False if use_pallas else None)(
-            tuple(sp.data for sp in spans), tuple(sp.cols for sp in spans),
-            tuple(sp.slice_of for sp in spans), x_feed)
-    return _unpermute(sharded, y_slots, k, squeeze)
+    with span("spmm/mesh"):
+        y_slots = maybe_block(shard_map(
+            local, mesh=mesh,
+            in_specs=(span_spec, span_spec,
+                      tuple(P(axis, None) for _ in spans), x_spec),
+            out_specs=P(None, maxis),
+            check_vma=False if use_pallas else None)(
+                tuple(sp.data for sp in spans),
+                tuple(sp.cols for sp in spans),
+                tuple(sp.slice_of for sp in spans), x_feed))
+    with span("spmm/fixup"):
+        return maybe_block(_unpermute(sharded, y_slots, k, squeeze))
