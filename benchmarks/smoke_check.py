@@ -73,6 +73,22 @@ A ``repro.obs/v1`` document (a dict, not a record list — the schema
 histogram's count/sum finite, quantiles ordered (p50 <= p95 <= p99), and
 counters non-negative.
 
+Migration rule (the online break-even gate): a document whose base labels
+carry ``migrate=auto|force`` (``launch.serve --migrate``) must show the
+controller actually ran — ``serve/multiplies_total`` present and at least
+the stamped ``requests`` label (every served column counted), and the
+``serve/breakeven_estimate`` gauge present. ``force`` mode additionally
+requires the swap to have landed (``serve/plan_swaps`` >= 1, a positive
+``serve/swap_unix_s``, finite positive ``serve/convert_s``) and a finite
+positive break-even estimate (both of its sides were measured by then).
+``auto`` mode gates neither the swap nor finiteness: below-break-even
+traffic honestly never converts and an infinite estimate just means no
+saving was found. The pre/post-migration flush latency comparison
+(post-swap p50 must not regress past the pre-swap p99) is armed only off
+``backend=cpu`` and only when both phase histograms are non-empty — a
+forced swap can land after the last flush, and a host-platform mesh's
+latencies do not reflect the byte model the migration optimizes.
+
 ``spmvs_to_amortize=inf`` and friends are legitimate (a format that never
 breaks even), so only the keys named above are validated.
 """
@@ -218,6 +234,79 @@ def check_obs_document(doc: dict, origin: str) -> List[str]:
             problems.append(f"{name}: residual={v!r} is not a number")
             continue
         problems.extend(_check_residual_value(float(v), backend, name))
+    problems.extend(check_migration(doc, origin))
+    return problems
+
+
+def check_migration(doc: dict, origin: str) -> List[str]:
+    """The online break-even gate over a ``launch.serve --migrate`` run's
+    document. Armed only when the base labels carry ``migrate=auto`` or
+    ``migrate=force`` (any other document passes untouched)."""
+    labels = doc.get("labels", {})
+    mode = labels.get("migrate")
+    if mode not in ("auto", "force"):
+        return []
+    problems = []
+    counters = {c.get("name"): c.get("value")
+                for c in doc.get("counters", [])}
+    gauges = {g.get("name"): g.get("value") for g in doc.get("gauges", [])}
+    hists = {h.get("name"): h for h in doc.get("histograms", [])}
+
+    def num(v):
+        return v if isinstance(v, (int, float)) else math.nan
+
+    mult = num(counters.get("serve/multiplies_total", math.nan))
+    try:
+        requests = float(labels.get("requests", "nan"))
+    except (TypeError, ValueError):
+        requests = math.nan
+    if not math.isfinite(mult):
+        problems.append(f"{origin}: migrate={mode} but "
+                        "serve/multiplies_total is missing — the "
+                        "controller never counted the traffic")
+    elif math.isfinite(requests) and mult < requests:
+        problems.append(f"{origin}: serve/multiplies_total={mult:g} < "
+                        f"requests={requests:g} — served columns went "
+                        "uncounted")
+    be = gauges.get("serve/breakeven_estimate")
+    if be is None:
+        problems.append(f"{origin}: migrate={mode} but "
+                        "serve/breakeven_estimate gauge is missing")
+    swaps = num(counters.get("serve/plan_swaps", 0.0))
+    if mode == "force":
+        # a forced run must have landed the swap and measured both sides
+        # of the break-even; auto mode may honestly never convert
+        if not (swaps >= 1):
+            problems.append(f"{origin}: migrate=force but "
+                            f"serve/plan_swaps={swaps:g} — the forced "
+                            "migration never landed")
+        if not (num(gauges.get("serve/swap_unix_s", math.nan)) > 0):
+            problems.append(f"{origin}: migrate=force but "
+                            "serve/swap_unix_s is missing or not > 0")
+        conv = num(gauges.get("serve/convert_s", math.nan))
+        if not (math.isfinite(conv) and conv > 0):
+            problems.append(f"{origin}: migrate=force but "
+                            f"serve/convert_s={conv!r} is not a finite "
+                            "positive measured build time")
+        if be is not None and not (math.isfinite(num(be)) and num(be) > 0):
+            problems.append(f"{origin}: migrate=force but "
+                            f"serve/breakeven_estimate={be!r} is not "
+                            "finite and > 0 after a measured conversion")
+    # latency sanity across the swap: only where per-device memory makes
+    # the comparison physical, and only when the swap landed mid-traffic
+    # (a force swap can land after the last flush -> empty post hist)
+    pre = hists.get("serve/flush_premigrate_s")
+    post = hists.get("serve/flush_postmigrate_s")
+    if labels.get("backend") not in (None, "cpu") and swaps >= 1 and \
+            pre and post and pre.get("count") and post.get("count"):
+        p99_pre, p50_post = num(pre.get("p99")), num(post.get("p50"))
+        if math.isfinite(p99_pre) and math.isfinite(p50_post) and \
+                p50_post > p99_pre:
+            problems.append(
+                f"{origin}: post-migration p50 flush latency "
+                f"({p50_post:.4g}s) exceeds the pre-migration p99 "
+                f"({p99_pre:.4g}s) — the conversion the controller chose "
+                "made serving slower")
     return problems
 
 

@@ -1,8 +1,11 @@
 """PageRank on an RMAT graph — the paper's motivating SpMV workload (§1).
 
-Power iteration: r <- d * A^T_norm r + (1-d)/n, run with two of the paper's
-storage formats; conversion cost is amortized over the iterations (the §7
-break-even argument in action).
+Power iteration: r <- d * A^T_norm r + (1-d)/n, served through one
+``repro.spmm.SparseOperator`` handle: the loop multiplies against
+``op @ r`` while the handle starts in the zero-conversion merge-path
+format and is swapped to SELL-C-σ mid-stream — the §7 break-even
+argument in action (conversion cost amortized over the iterations), and
+a live demonstration that an atomic plan swap never changes the math.
 
 Run:  PYTHONPATH=src python examples/pagerank.py
 """
@@ -11,8 +14,10 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import convert, coo_to_csr, spmv, to_coo
+from repro.core import PlanSpec, to_coo
+from repro.core.selector import ZERO_CONVERSION_ALGO
 from repro.data import matrices
+from repro.spmm import SparseOperator
 
 # RMAT graph, column-normalized adjacency (column-stochastic)
 rows, cols, vals, shape = matrices.rmat(scale=13, edge_factor=12, seed=0)
@@ -24,30 +29,38 @@ coo = to_coo(rows, cols, norm_vals, shape)
 DAMP, ITERS = 0.85, 50
 
 
-def pagerank(mat, label):
+def pagerank(op, label):
     t0 = time.perf_counter()
     r = jnp.full((n,), 1.0 / n, jnp.float32)
     for _ in range(ITERS):
-        r = DAMP * spmv(mat, r, impl="ref") + (1 - DAMP) / n
+        r = DAMP * (op @ r) + (1 - DAMP) / n
         r = r / jnp.sum(r)
     r.block_until_ready()
     dt = time.perf_counter() - t0
-    print(f"  {label:10s} {ITERS} iterations in {dt * 1e3:.0f} ms "
+    print(f"  {label:16s} {ITERS} iterations in {dt * 1e3:.0f} ms "
           f"({dt / ITERS * 1e3:.2f} ms/iter)")
     return r
 
 
+# zero-conversion start: merge-path CSR costs one row-sort, nothing else
 t0 = time.perf_counter()
-csr = coo_to_csr(coo)
-t_csr = time.perf_counter() - t0
-t0 = time.perf_counter()
-bcohch = convert(coo, "bcohch", beta=256, num_bands=8)
-t_bcohch = time.perf_counter() - t0
-print(f"conversion: csr {t_csr * 1e3:.0f} ms, bcohch {t_bcohch * 1e3:.0f} ms")
+op = SparseOperator.from_coo(
+    coo, PlanSpec(num_devices=1, algorithm=ZERO_CONVERSION_ALGO),
+    impl="ref", k_hint=1, num_spmvs=ITERS)
+t_start = time.perf_counter() - t0
+r1 = pagerank(op, op.plan.label)
 
-r1 = pagerank(csr, "parcrs")
-r2 = pagerank(bcohch, "bcohch")
+# mid-stream format migration: build the SELL-C-σ plan and swap it in
+# atomically — the next multiply uses it, the math never changes
+t0 = time.perf_counter()
+op.swap(PlanSpec(num_devices=1, algorithm="sellcs"))
+t_swap = time.perf_counter() - t0
+print(f"conversion: {ZERO_CONVERSION_ALGO} {t_start * 1e3:.0f} ms at "
+      f"start, sellcs {t_swap * 1e3:.0f} ms swapped in after "
+      f"{op.stats.multiplies} multiplies")
+r2 = pagerank(op, op.plan.label)
 np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-5)
+print(f"operator stats: {op.stats}")
 
 top = np.argsort(-np.asarray(r1))[:5]
 print(f"top-5 nodes: {top.tolist()}")

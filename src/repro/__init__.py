@@ -12,9 +12,13 @@ Module map
                      (``sellcs``), pure-jnp oracles (``reference``), tiled
                      Pallas kernels with a k-tile grid dimension
                      (``kernels``), request batching for the serve path
-                     (``batching``), and the shard_map mesh schedules —
+                     (``batching``), the shard_map mesh schedules —
                      row bands / merge spans over the slice stream
-                     (``distributed``). SpMV is the k = 1 special case.
+                     (``distributed``) — and ``SparseOperator``
+                     (``operator``): the stable partition-once/
+                     multiply-many handle whose atomic plan swap carries
+                     the serve path's online format migration. SpMV is
+                     the k = 1 special case.
 ``repro.kernels``    Pallas TPU kernels for the single-vector compute
                      paths: blocked SpMV (``bsr_spmv``), merge-path SpMV
                      (``merge_spmv``), MoE grouped GEMM, plus the
@@ -27,9 +31,16 @@ Module map
 ``repro.models``     the LM stack (attention/SSM/MoE) whose sparse pieces
                      exercise the kernels at scale.
 ``repro.configs``    model architecture presets.
+``repro.obs``        observability: the process-local ``MetricRegistry``
+                     (phase spans, exact percentile histograms), the
+                     observed-vs-modeled ``ResidualLedger`` that feeds
+                     ``select_distributed``/``autotune(feedback=)``, and
+                     the §5.2 ``time_min_of_n`` protocol.
 ``repro.launch``     meshes, shardings, train/serve/dryrun entry points —
                      ``launch.serve --mode spmv`` drives the SpMM request
-                     batcher.
+                     batcher through one ``SparseOperator`` handle, with
+                     ``--migrate auto|force`` running the online
+                     break-even format migration behind it.
 ``repro.optim``      optimizers.
 ``repro.checkpoint`` checkpointing.
 ``repro.runtime``    elasticity + fault tolerance.
@@ -41,5 +52,5 @@ __version__ = "0.1.0"
 
 __all__ = [
     "core", "spmm", "kernels", "roofline", "data", "models", "configs",
-    "launch", "optim", "checkpoint", "runtime", "compat",
+    "obs", "launch", "optim", "checkpoint", "runtime", "compat",
 ]

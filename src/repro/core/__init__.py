@@ -14,7 +14,7 @@ from .mergepath import (MergePartition, balanced_row_bands,
                         merge_path_partition, merge_path_partition_np,
                         span_block_aligned)
 from .selector import (CHUNK_CANDIDATES, SCHEDULES, DistributedChoice,
-                       MachineSpec, MatrixStats, amortized_cost,
+                       MachineSpec, MatrixStats, PlanSpec, amortized_cost,
                        break_even_spmvs, matrix_stats, mesh_factorizations,
                        select, select_algorithm, select_distributed,
                        spmm_cost_scale)
@@ -31,7 +31,8 @@ __all__ = [
     "hilbert_decode", "hilbert_key", "hilbert_key_np", "morton_decode",
     "morton_key", "MergePartition", "balanced_row_bands",
     "merge_path_partition", "merge_path_partition_np", "span_block_aligned",
-    "MachineSpec", "MatrixStats", "SCHEDULES", "CHUNK_CANDIDATES",
+    "MachineSpec", "MatrixStats", "PlanSpec", "SCHEDULES",
+    "CHUNK_CANDIDATES",
     "DistributedChoice", "amortized_cost", "mesh_factorizations",
     "break_even_spmvs", "matrix_stats", "select", "select_algorithm",
     "select_distributed", "spmm_cost_scale", "autotune",

@@ -18,7 +18,6 @@ import dataclasses
 import time
 from typing import Callable, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -61,21 +60,18 @@ class TuneResult:
 
 
 def _measure(fn: Callable, reps: int = 5, warmup: int = 2) -> float:
-    for _ in range(warmup):
-        jax.block_until_ready(fn())
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best
+    """One timing protocol for the whole repo: ``obs.timing.time_min_of_n``
+    (the paper's §5.2 min-of-N discipline) — autotune measurements stamp
+    the same reps/warmup semantics as the harness and serve headlines."""
+    from repro.obs.timing import time_min_of_n
+    return time_min_of_n(fn, reps=reps, warmup=warmup).best_s
 
 
 def autotune(coo: COO, *, num_spmvs: int = 100,
              algorithms: Tuple[str, ...] = DEFAULT_ALGOS,
              betas: Optional[List[int]] = None,
              reps: int = 5, tpu_model: bool = False, k: int = 1,
-             num_devices: int = 1, feedback=None
+             num_devices: int = 1, feedback=None, spec=None
              ) -> Tuple[TuneResult, List[TuneResult]]:
     """Return (best, all_results) over the candidate grid.
 
@@ -101,7 +97,15 @@ def autotune(coo: COO, *, num_spmvs: int = 100,
     residual of matching measurements — before the grid min is taken, so
     a config the model flatters gets re-ranked by what the machine
     actually did. The applied factor is recorded in
-    ``TuneResult.residual`` (None where no measurement matched)."""
+    ``TuneResult.residual`` (None where no measurement matched).
+
+    ``spec`` (a :class:`repro.core.PlanSpec`) carries the distributed pins
+    in one object: its ``num_devices`` replaces the kwarg and its
+    ``mesh_shape`` / ``num_chunks`` / ``schedule`` / ``compact_x`` fields
+    restrict the rescoring grid — the old kwargs stay as shims."""
+    if spec is not None:
+        spec = spec.canonical()
+        num_devices = spec.num_devices
     rng = np.random.default_rng(0)
     if k > 1:
         from repro.spmm import choose_k_tile, spmm
@@ -121,8 +125,8 @@ def autotune(coo: COO, *, num_spmvs: int = 100,
 
     results: List[TuneResult] = []
     for algo in algorithms:
-        spec = ALGORITHM_SPECS[algo]
-        if not spec.blocked:
+        aspec = ALGORITHM_SPECS[algo]
+        if not aspec.blocked:
             t0 = time.perf_counter()
             mat = convert(coo, algo)
             conv_s = time.perf_counter() - t0
@@ -132,12 +136,12 @@ def autotune(coo: COO, *, num_spmvs: int = 100,
                                       k=k, k_tile=k_tile))
             continue
         base = block_size_for(coo.shape,
-                              in_block_format=spec.in_block_format)
+                              in_block_format=aspec.in_block_format)
         cand = betas or sorted({max(base // 4, 16), max(base // 2, 16),
                                 base, min(base * 2, 1 << 16)})
         for beta in cand:
             kw = dict(beta=beta)
-            if spec.scheduling == "static_rows":
+            if aspec.scheduling == "static_rows":
                 kw["num_bands"] = 8
             t0 = time.perf_counter()
             mat = convert(coo, algo, **kw)
@@ -162,14 +166,15 @@ def autotune(coo: COO, *, num_spmvs: int = 100,
         from .selector import matrix_stats
         stats = matrix_stats(coo)       # one O(nnz) pass for all results
         results = [_rescore_distributed(r, stats, k, num_devices, num_spmvs,
-                                        feedback=feedback)
+                                        feedback=feedback, spec=spec)
                    for r in results]
     best = min(results, key=lambda r: r.total_s)
     return best, results
 
 
 def _rescore_distributed(r: TuneResult, stats, k: int, num_devices: int,
-                         num_spmvs: int, feedback=None) -> TuneResult:
+                         num_spmvs: int, feedback=None,
+                         spec=None) -> TuneResult:
     """Scale a measured single-device result across the mesh with the
     roofline traffic model and pick the best (schedule, mesh shape,
     num_chunks, compact_x) for it — "merge" sweeps the psum pipelining
@@ -189,8 +194,11 @@ def _rescore_distributed(r: TuneResult, stats, k: int, num_devices: int,
     mat_bytes = _matrix_bytes_est(r.algorithm, stats)
     base_s = spmm_distributed_time(stats.m, stats.n, k, 1, "row",
                                    matrix_bytes=mat_bytes)
-    grid = distributed_schedule_grid(num_devices)
+    grid = distributed_schedule_grid(num_devices, spec=spec)
     compacts = (False, True) if r.algorithm == "sellcs" else (False,)
+    if spec is not None and spec.compact_x is not None:
+        compacts = ((spec.compact_x,) if r.algorithm == "sellcs"
+                    else (False,))
 
     def corrected(s, nc, mesh, cf):
         model_s = spmm_distributed_time(

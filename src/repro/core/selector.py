@@ -89,6 +89,11 @@ DEFAULT_THROUGHPUT: Dict[tuple, Dict[str, float]] = {
 # Algorithms able to split a single row across workers (paper Table 6.3).
 ROW_SPLITTING = ("merge", "csb", "csbh")
 
+# The serving path's zero-conversion start: merge-path CSR costs one
+# coo_to_csr row-sort, so a matrix that never reaches break-even never
+# pays for a format it did not need (launch.serve --migrate).
+ZERO_CONVERSION_ALGO = "merge"
+
 DENSITY_THRESHOLD = 1e-6   # the paper's low/high density split
 
 
@@ -159,6 +164,25 @@ def _row_skew(stats: MatrixStats) -> float:
     return stats.row_var / max(mean * mean, 1e-12)
 
 
+def _augment_sellcs(thr: Dict[str, float], conv: Dict[str, float],
+                    stats: MatrixStats) -> Tuple[Dict[str, float],
+                                                 Dict[str, float]]:
+    """Extend a (throughput, conversion) table pair — the paper priors or a
+    caller-measured table — with the SELL-C-σ entries: throughput at the
+    CSB level with a skew bonus (the σ-sort removes the slice-padding
+    imbalance that penalizes the other formats on skewed rows), conversion
+    at the counting-sort cost. Shared by :func:`select`,
+    :func:`select_distributed` and the serve migration controller's
+    cold-start break-even so all three price the format identically.
+    Mutates and returns ``(thr, conv)``."""
+    if "sellcs" not in thr:
+        skewed = stats.has_dense_row or _row_skew(stats) > _VVAR_SKEW_THRESHOLD
+        bonus = SELLCS_SKEW_BONUS if skewed else SELLCS_BASE_BONUS
+        thr["sellcs"] = thr.get("csb", min(thr.values())) * bonus
+    conv.setdefault("sellcs", SELLCS_CONVERSION_COST)
+    return thr, conv
+
+
 def _matrix_bytes_est(algo: str, stats: MatrixStats,
                       dtype_bytes: int = 4) -> float:
     """Streamed matrix footprint of one multiply, per format family."""
@@ -224,11 +248,7 @@ def select(stats: MatrixStats, machine: Optional[MachineSpec] = None,
     low = stats.density < DENSITY_THRESHOLD
     thr = dict(throughput or DEFAULT_THROUGHPUT[(machine.numa_like, low)])
     conv = dict(conversion_cost or DEFAULT_CONVERSION_COST)
-    if "sellcs" not in thr:
-        skewed = stats.has_dense_row or _row_skew(stats) > _VVAR_SKEW_THRESHOLD
-        bonus = SELLCS_SKEW_BONUS if skewed else SELLCS_BASE_BONUS
-        thr["sellcs"] = thr.get("csb", min(thr.values())) * bonus
-    conv.setdefault("sellcs", SELLCS_CONVERSION_COST)
+    _augment_sellcs(thr, conv, stats)
     candidates = list(thr)
     if stats.has_dense_row:
         candidates = [a for a in candidates
@@ -254,6 +274,72 @@ SCHEDULES = ("row", "merge")
 CHUNK_CANDIDATES = (1, 2, 4, 8)
 
 
+@dataclasses.dataclass(frozen=True)
+class PlanSpec:
+    """One carrier for the distributed-plan knobs that
+    :func:`select_distributed`, :func:`core.autotune.autotune`,
+    :func:`distributed_schedule_grid` and ``launch.serve`` used to re-spell
+    as separate ``(num_devices, mesh_shape, num_chunks, compact_x)``
+    kwargs.
+
+    ``None`` means "unpinned — let the traffic model sweep this axis";
+    a set field pins it, exactly like the old per-function kwargs (which
+    remain as thin shims over this). ``num_chunks = 0`` is accepted as a
+    synonym for unpinned (the serve ``--chunks 0`` convention).
+    ``schedule`` / ``algorithm`` pins restrict the grid the same way;
+    they also let a fully resolved spec name one executable plan — the
+    form :meth:`repro.spmm.SparseOperator.swap` consumes.
+    """
+    num_devices: Optional[int] = None
+    mesh_shape: Optional[Tuple[int, int]] = None
+    num_chunks: Optional[int] = None
+    compact_x: Optional[bool] = None
+    schedule: Optional[str] = None
+    algorithm: Optional[str] = None
+
+    def canonical(self) -> "PlanSpec":
+        """Validate and normalize: mesh factors must agree with
+        ``num_devices`` (a set mesh implies it), ``num_chunks = 0`` maps
+        to unpinned, an omitted device count means 1."""
+        nd, mesh = self.num_devices, self.mesh_shape
+        if mesh is not None:
+            pd, pm = int(mesh[0]), int(mesh[1])
+            if pd < 1 or pm < 1:
+                raise ValueError(f"mesh_shape must be positive, got {mesh}")
+            mesh = (pd, pm)
+            if nd is None:
+                nd = pd * pm
+            elif int(nd) != pd * pm:
+                raise ValueError(
+                    f"mesh_shape {mesh} factors {pd * pm} devices but "
+                    f"num_devices={nd}")
+        nd = 1 if nd is None else int(nd)
+        if nd < 1:
+            raise ValueError(f"num_devices must be >= 1, got {nd}")
+        nc = self.num_chunks
+        if nc is not None:
+            nc = int(nc)
+            if nc == 0:
+                nc = None
+            elif nc < 0:
+                raise ValueError(f"num_chunks must be >= 0, got {nc}")
+        if self.schedule is not None and self.schedule not in SCHEDULES:
+            raise ValueError(f"schedule must be one of {SCHEDULES}, got "
+                             f"{self.schedule!r}")
+        return dataclasses.replace(self, num_devices=nd, mesh_shape=mesh,
+                                   num_chunks=nc)
+
+    def labels(self, **extra) -> Dict[str, str]:
+        """The spec's knobs as canonical residual-ledger labels
+        (``obs.residuals.choice_labels``); unpinned (None) axes are
+        omitted, which the ledger treats as wildcards."""
+        from repro.obs.residuals import choice_labels
+        return choice_labels(schedule=self.schedule,
+                             num_chunks=self.num_chunks,
+                             mesh_shape=self.mesh_shape,
+                             compact_x=self.compact_x, **extra)
+
+
 def mesh_factorizations(num_devices: int) -> list:
     """Every (P_data, P_model) factorization of ``num_devices``, pure-data
     first — ties in the scored grid then keep the 1-D mesh, which is the
@@ -268,7 +354,8 @@ def distributed_schedule_grid(num_devices: int = 1,
                               pinned_chunks: Optional[int] = None,
                               chunk_candidates: Tuple[int, ...] =
                               CHUNK_CANDIDATES,
-                              pinned_mesh: Optional[Tuple[int, int]] = None
+                              pinned_mesh: Optional[Tuple[int, int]] = None,
+                              spec: Optional[PlanSpec] = None
                               ) -> list:
     """The (schedule × mesh shape × psum-chunking) axes of the distributed
     grid, shared by :func:`select_distributed`, ``core.autotune`` and
@@ -277,7 +364,22 @@ def distributed_schedule_grid(num_devices: int = 1,
     (P_data, P_model))``: "merge" sweeps the pipelining depths (or a single
     pinned depth), "row" has no collective to chunk and always pairs with
     depth 1; the mesh axis sweeps every (P_data, P_model) factorization of
-    ``num_devices`` unless ``pinned_mesh`` fixes one."""
+    ``num_devices`` unless ``pinned_mesh`` fixes one.
+
+    ``spec`` carries every pin in one :class:`PlanSpec` (a set
+    ``schedule`` restricts that axis too); the positional
+    ``(num_devices, pinned_chunks, pinned_mesh)`` kwargs remain as thin
+    shims over it — spec fields win where both are given."""
+    schedules = SCHEDULES
+    if spec is not None:
+        spec = spec.canonical()
+        num_devices = spec.num_devices
+        if spec.num_chunks is not None:
+            pinned_chunks = spec.num_chunks
+        if spec.mesh_shape is not None:
+            pinned_mesh = spec.mesh_shape
+        if spec.schedule is not None:
+            schedules = (spec.schedule,)
     if pinned_mesh is not None:
         pd, pm = int(pinned_mesh[0]), int(pinned_mesh[1])
         if pd < 1 or pm < 1:
@@ -287,7 +389,7 @@ def distributed_schedule_grid(num_devices: int = 1,
     else:
         meshes = mesh_factorizations(num_devices)
     grid = []
-    for schedule in SCHEDULES:
+    for schedule in schedules:
         if schedule == "merge":
             chunks = ((int(pinned_chunks),) if pinned_chunks
                       else chunk_candidates)
@@ -325,8 +427,9 @@ def select_distributed(stats: MatrixStats, *, k: int = 1,
                        dtype_bytes: int = 4,
                        chunk_candidates: Tuple[int, ...] = CHUNK_CANDIDATES,
                        mesh_shape: Optional[Tuple[int, int]] = None,
-                       throughput: Optional[Dict[str, float]] = None
-                       ) -> DistributedChoice:
+                       throughput: Optional[Dict[str, float]] = None,
+                       spec: Optional[PlanSpec] = None,
+                       feedback=None) -> DistributedChoice:
     """Joint (format, cross-device schedule, mesh shape, psum chunking)
     choice for ``num_devices`` devices multiplying a ``[n, k]`` block
     ``num_spmvs`` times.
@@ -365,31 +468,53 @@ def select_distributed(stats: MatrixStats, *, k: int = 1,
     the single-device model where both schedules tie and "row" wins by
     order. The "row" schedule has no collective and always reports
     ``num_chunks = 1``.
+
+    ``spec`` carries every pin in one :class:`PlanSpec` — the
+    ``(num_devices, mesh_shape)`` kwargs remain as shims over it, and its
+    ``algorithm`` / ``schedule`` / ``num_chunks`` / ``compact_x`` fields
+    additionally restrict those axes. ``feedback`` is the online
+    rescoring entry point: pass a ``repro.obs.ResidualLedger`` (e.g. the
+    live one ``launch.serve --migrate`` feeds between flushes) and each
+    candidate's modelled seconds are multiplied by the ledger's
+    geometric-mean observed/modeled residual for its labels before the
+    argmin — measured reality outvotes the streaming-bytes story wherever
+    a measurement exists, exactly as in ``autotune(feedback=)``.
     """
     from repro.roofline.analysis import spmm_distributed_time
+    if spec is not None:
+        spec = spec.canonical()
+        num_devices = spec.num_devices
+        if spec.mesh_shape is not None:
+            mesh_shape = spec.mesh_shape
     if num_devices < 1:
         raise ValueError(f"num_devices must be >= 1, got {num_devices}")
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
     conv = dict(conversion_cost or DEFAULT_CONVERSION_COST)
-    conv.setdefault("sellcs", SELLCS_CONVERSION_COST)
     thr = None
     if throughput is not None:
         thr = dict(throughput)
-        if "sellcs" not in thr:
-            skewed = stats.has_dense_row or \
-                _row_skew(stats) > _VVAR_SKEW_THRESHOLD
-            bonus = SELLCS_SKEW_BONUS if skewed else SELLCS_BASE_BONUS
-            thr["sellcs"] = thr.get("csb", min(thr.values())) * bonus
+        _augment_sellcs(thr, conv, stats)
+    else:
+        conv.setdefault("sellcs", SELLCS_CONVERSION_COST)
     base_s = spmm_distributed_time(
         stats.m, stats.n, 1, 1, "row",
         matrix_bytes=_matrix_bytes_est("parcrs", stats, dtype_bytes),
         dtype_bytes=dtype_bytes)
     grid = distributed_schedule_grid(num_devices,
                                      chunk_candidates=chunk_candidates,
-                                     pinned_mesh=mesh_shape)
+                                     pinned_mesh=mesh_shape, spec=spec)
+    algos = DISTRIBUTED_ALGOS
+    if spec is not None and spec.algorithm is not None:
+        if spec.algorithm not in DISTRIBUTED_ALGOS:
+            raise ValueError(
+                f"algorithm {spec.algorithm!r} has no executable mesh "
+                f"multiply; pin one of {DISTRIBUTED_ALGOS}")
+        algos = (spec.algorithm,)
+    if feedback is not None:
+        from repro.obs.residuals import choice_labels
     best, best_cost = None, math.inf
-    for algo in DISTRIBUTED_ALGOS:
+    for algo in algos:
         mat_bytes = _matrix_bytes_est(algo, stats, dtype_bytes)
         if thr is not None:
             # measured single-device multiply, carried across the mesh by
@@ -403,6 +528,8 @@ def select_distributed(stats: MatrixStats, *, k: int = 1,
         # stream; recommending it for a format that cannot run it would be
         # worse than a coarser score (same rule as DISTRIBUTED_ALGOS)
         compacts = (False, True) if algo == "sellcs" else (False,)
+        if spec is not None and spec.compact_x is not None:
+            compacts = ((spec.compact_x,) if algo == "sellcs" else (False,))
         for schedule, nc, (pd, pm) in grid:
             for compact in compacts:
                 sec = spmm_distributed_time(
@@ -410,6 +537,10 @@ def select_distributed(stats: MatrixStats, *, k: int = 1,
                     matrix_bytes=mat_bytes, dtype_bytes=dtype_bytes,
                     max_row_nnz=stats.max_row_nnz, num_chunks=nc,
                     model_devices=pm, compact_x=compact, nnz=stats.nnz)
+                if feedback is not None:
+                    sec *= feedback.correction(**choice_labels(
+                        schedule=schedule, num_chunks=nc,
+                        mesh_shape=(pd, pm), compact_x=compact))
                 if thr is None:
                     per_spmv = sec / max(base_s, 1e-30)
                 else:

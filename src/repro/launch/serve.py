@@ -26,6 +26,21 @@ devices first:
       python -m repro.launch.serve --mode spmv --matrix mawi_like \
       --requests 64 --max-batch 32 --mesh 4,2 --impl ref --chunks 4
 
+Online migration — ``--migrate auto`` serves through one
+``repro.spmm.SparseOperator`` handle that starts in the zero-conversion
+merge-path format, counts served multiplies, and converts to the
+SELL-C-σ target plan **in a background thread** once the live break-even
+estimate (measured conversion cost over measured-and-residual-corrected
+per-multiply saving, cold-started from the ``selector.break_even_spmvs``
+priors — the paper's §7 "472 multiplications" economics) clears the
+projected remaining traffic; the new plan is swapped in atomically
+between flushes. ``force`` converts unconditionally (still off the flush
+path), ``off`` (default) pins the start format forever. Decision inputs
+land in the metrics document: ``serve/multiplies_total``,
+``serve/breakeven_estimate``, ``serve/plan_swaps``,
+``serve/swap_at_multiply``, ``serve/convert_s`` and the pre/post-swap
+flush histograms.
+
 Observability — ``--metrics out.json`` installs a ``repro.obs`` registry
 for the run and dumps it at the end: per-flush phase spans (the
 ``batcher/*`` series plus, on a mesh, an eager phase-profile pass through
@@ -41,8 +56,9 @@ min-of-N protocol (``--reps``), never a single ``perf_counter`` pair.
 from __future__ import annotations
 
 import argparse
+import math
+import threading
 import time
-from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,168 +68,241 @@ from repro.configs.base import get_config
 from repro.models.model import decode_step, init_params, prefill
 
 
-def _pick_chunk(m: int, num_devices: int, default: int = 128) -> int:
-    """Largest power-of-two slice height <= default that still gives every
-    device at least one slice to own (small demo matrices on big meshes)."""
-    c = default
-    while c > 8 and -(-m // c) < num_devices:
-        c //= 2
-    return c
+class _MigrationController:
+    """The online break-even loop — the paper's "472 multiplications" §7
+    economics as a live control law over the serving traffic.
+
+    Between flushes it (a) counts served multiplies (SpMV-equivalents —
+    the unit of the paper's break-even), (b) feeds the live
+    ``ResidualLedger`` back into ``select_distributed(feedback=)`` to
+    re-pick the target plan's knobs with ledger-corrected scores, and (c)
+    maintains the break-even estimate ``convert_cost_s / per-multiply
+    saving``: the saving is the *measured* per-multiply latency of the
+    current plan times the modeled (and residual-corrected) improvement
+    ratio to the target, the conversion cost starts as the
+    ``selector.break_even_spmvs`` priors (in measured seconds) and is
+    replaced by the measured build time once the conversion runs. When
+    the projected remaining traffic clears the estimate (``--migrate
+    auto``; ``force`` skips the test, ``off`` disables the loop), the
+    target plan is built in a **background thread** — never on the flush
+    path — and installed through ``SparseOperator.swap`` between flushes.
+    """
+
+    def __init__(self, op, stats, args, target_spec, ledger, reg=None):
+        from repro.core.selector import (DEFAULT_CONVERSION_COST,
+                                         DEFAULT_THROUGHPUT,
+                                         DENSITY_THRESHOLD,
+                                         ZERO_CONVERSION_ALGO,
+                                         _augment_sellcs, break_even_spmvs)
+        self.op = op
+        self.stats = stats
+        self.mode = args.migrate
+        self.max_batch = int(args.max_batch)
+        self.projected_total = int(args.requests)
+        self.target_spec = target_spec
+        self.ledger = ledger
+        self.reg = reg
+        self.multiplies = 0
+        self.swapped = False
+        self.swap_unix_s = None
+        self.swap_at_multiply = None
+        self.convert_s = None
+        self.error = None
+        self._min_per_mul = math.inf
+        self._last_saving = None
+        self._target_choice = None
+        self._worker = None
+        self._pending = None
+        # cold-start break-even from the paper's priors: the target is
+        # SELL-C-σ, the baseline is the zero-conversion start whose
+        # conversion is already paid (hence cost 0). Often inf on these
+        # priors (the tables do not flatter sellcs) — the first flush
+        # replaces it with the measured/ledger-corrected estimate.
+        low = stats.density < DENSITY_THRESHOLD
+        numa = (target_spec.num_devices or 1) > 1
+        self._thr, self._conv = _augment_sellcs(
+            dict(DEFAULT_THROUGHPUT[(numa, low)]),
+            dict(DEFAULT_CONVERSION_COST), stats)
+        self.breakeven = break_even_spmvs(
+            "sellcs", baseline=ZERO_CONVERSION_ALGO, numa_like=numa,
+            low_density=low, throughput=self._thr,
+            conversion_cost={**self._conv, ZERO_CONVERSION_ALGO: 0.0})
+        self._publish()
+
+    def note_flush(self, k, dt, rp):
+        """Called after every flush (k served columns in dt seconds on
+        plan ``rp``): update counters and the break-even estimate, start
+        the background build when the projection clears it, and install a
+        finished build before the next flush."""
+        k = int(k)
+        self.multiplies += k
+        if self.reg is not None:
+            self.reg.counter("serve/multiplies_total").inc(k)
+        if self.mode == "off" or self.error is not None:
+            return
+        if not self.swapped:
+            self._min_per_mul = min(self._min_per_mul, dt / max(k, 1))
+            self._update_estimate(rp)
+            remaining = self.projected_total - self.multiplies
+            if self._worker is None and (self.mode == "force"
+                                         or remaining > self.breakeven):
+                self._start_build()
+        self._install_pending()
+        self._publish()
+
+    def finish(self):
+        """End of the traffic: a build still in flight is joined and
+        installed (a forced migration must land even when the traffic
+        runs out first), and a background failure surfaces here instead
+        of dying silently in the worker thread."""
+        if self._worker is not None:
+            self._worker.join()
+        self._install_pending()
+        self._publish()
+        if self.error is not None:
+            raise self.error
+
+    def _update_estimate(self, rp):
+        """Ledger-corrected live break-even: measured per-multiply on the
+        current plan, modeled (and residual-corrected) per-multiply on
+        the re-selected target, conversion priced by the priors until the
+        build measures it."""
+        if not math.isfinite(self._min_per_mul):
+            return
+        from repro.core.selector import (_matrix_bytes_est,
+                                         select_distributed)
+        from repro.obs import choice_labels
+        from repro.roofline import spmm_distributed_time
+        st, kb = self.stats, self.max_batch
+        ch = select_distributed(st, k=kb,
+                                num_spmvs=max(self.projected_total, 1),
+                                spec=self.target_spec,
+                                feedback=self.ledger)
+        self._target_choice = ch
+        pd, pm = ch.mesh_shape
+        t_model = spmm_distributed_time(
+            st.m, st.n, kb, pd, ch.schedule,
+            matrix_bytes=_matrix_bytes_est(ch.algorithm, st),
+            max_row_nnz=st.max_row_nnz, num_chunks=ch.num_chunks,
+            model_devices=pm, compact_x=ch.compact_x, nnz=st.nnz)
+        t_corr = self.ledger.correction(**choice_labels(
+            schedule=ch.schedule, num_chunks=ch.num_chunks,
+            mesh_shape=ch.mesh_shape, compact_x=ch.compact_x))
+        c_model = rp.model_s(kb) * self.ledger.correction(**rp.labels())
+        per_now = self._min_per_mul
+        per_target = per_now * (t_model * t_corr) / max(c_model, 1e-30)
+        saving = per_now - per_target        # seconds saved per multiply
+        self._last_saving = saving
+        if saving <= 0:
+            self.breakeven = math.inf
+            return
+        convert_s = self.convert_s
+        if convert_s is None:
+            # prior units are ParCRS SpMVs; the current plan runs one
+            # multiply at thr[parcrs]/thr[cur] of a ParCRS one
+            cur = rp.spec.algorithm or "merge"
+            per_parcrs = per_now * (
+                self._thr.get(cur, self._thr["parcrs"])
+                / self._thr["parcrs"])
+            convert_s = self._conv["sellcs"] * per_parcrs
+        self.breakeven = convert_s / saving
+
+    def _start_build(self):
+        from repro.core import PlanSpec
+        ch = self._target_choice
+        if ch is None:
+            spec = self.target_spec
+        else:
+            spec = PlanSpec(num_devices=ch.mesh_shape[0] * ch.mesh_shape[1],
+                            mesh_shape=ch.mesh_shape,
+                            num_chunks=ch.num_chunks,
+                            compact_x=ch.compact_x, schedule=ch.schedule,
+                            algorithm=ch.algorithm)
+
+        def build():
+            try:
+                t0 = time.perf_counter()
+                rp = self.op.realize(spec, feedback=self.ledger)
+                self.convert_s = time.perf_counter() - t0
+                self._pending = rp
+            except BaseException as e:       # surface in finish()
+                self.error = e
+
+        self._worker = threading.Thread(target=build, name="serve-migrate",
+                                        daemon=True)
+        self._worker.start()
+
+    def _install_pending(self):
+        rp = self._pending
+        if rp is None:
+            return
+        self._pending = None
+        self.op.swap(rp)
+        self.swapped = True
+        self.swap_unix_s = self.op.stats.last_swap_unix_s
+        self.swap_at_multiply = self.multiplies
+        if self.convert_s is not None and self._last_saving is not None \
+                and self._last_saving > 0:
+            # both sides measured now: real build seconds over real saving
+            self.breakeven = self.convert_s / self._last_saving
+        if self.reg is not None:
+            self.reg.counter("serve/plan_swaps").inc()
+            self.reg.gauge("serve/swap_unix_s").set(
+                float(self.swap_unix_s))
+            self.reg.gauge("serve/swap_at_multiply").set(
+                float(self.swap_at_multiply))
+            if self.convert_s is not None:
+                self.reg.gauge("serve/convert_s").set(
+                    float(self.convert_s))
+        conv_ms = (self.convert_s or 0.0) * 1e3
+        print(f"[serve-spmv] migrated to {rp.label} after "
+              f"{self.swap_at_multiply} multiplies (convert "
+              f"{conv_ms:.1f} ms in background, break-even "
+              f"~{self.breakeven:.3g} multiplies)")
+
+    def _publish(self):
+        if self.reg is not None:
+            self.reg.gauge("serve/breakeven_estimate").set(
+                float(self.breakeven))
 
 
-class _DistPlan(NamedTuple):
-    """Everything the --devices / --mesh serve path needs to know about
-    the distributed multiply it chose."""
-    matrix: object               # the SELL-C-σ stream (pre-partition)
-    spmm_fn: Callable            # jitted (matrix, X) -> Y flush closure
-    eager_fn: Callable           # un-jitted X -> Y — the phase-profile
-                                 #   pass --metrics runs (spans time real
-                                 #   eager execution, not tracing)
-    label: str
-    schedule: str
-    chunks: int
-    mesh_shape: Tuple[int, int]
-    compact: bool
-    n_touched: Optional[float]
-    modeled_s: float             # roofline seconds per k=max_batch flush
-                                 #   for exactly these knobs
-
-
-def _make_distributed_spmm(coo, stats, args, mesh_shape) -> "_DistPlan":
-    """Build the :class:`_DistPlan` for the --devices / --mesh path.
-    ``mesh_shape`` is a (P_data, P_model) factorization, or None to let
-    the traffic model keep the 1-D mesh (the --devices behavior)."""
-    from repro.core.selector import (_matrix_bytes_est,
-                                     distributed_schedule_grid)
-    from repro.launch.mesh import make_spmm_mesh
-    from repro.roofline import spmm_distributed_time
-    from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
-                            partition_sellcs_rows, spmm_merge_distributed,
-                            spmm_row_distributed)
-
-    total = args.devices
-    ndev = len(jax.devices())
-    if ndev < total:
-        raise SystemExit(
-            f"the mesh needs {total} devices but jax sees only {ndev}; on "
-            "CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
-            f"{total} before launching")
-    if args.algorithm and args.algorithm != "sellcs":
-        raise SystemExit(
-            f"--algorithm {args.algorithm} cannot be served on a mesh: the "
-            "--devices path multiplies the SELL-C-σ slice stream "
-            "(repro.spmm.distributed); drop --algorithm or pass sellcs")
-    # the executable mesh format is the SELL-C-σ slice stream, so score the
-    # (schedule × mesh × chunks) grid with sellcs's own byte footprint
-    # (conversion cost is shared by every candidate, so it drops out);
-    # --chunks pins the merge psum pipelining depth and --mesh the
-    # (P_data, P_model) factorization instead of modelling them
-    sellcs_bytes = _matrix_bytes_est("sellcs", stats)
-    grid = distributed_schedule_grid(
-        total, pinned_chunks=args.chunks if args.chunks > 0 else None,
-        pinned_mesh=mesh_shape or (total, 1))
-    # --compact-x on/off pins the sparsity-aware X gather; auto lets the
-    # traffic model decide (off is scored first, so a modelled tie —
-    # near-dense columns — refuses the gather)
-    compacts = {"auto": (False, True), "on": (True,),
-                "off": (False,)}[args.compact_x]
-    (schedule, chunks, mesh_shape, compact) = min(
-        ((t[0], t[1], t[2], cf) for t in grid for cf in compacts),
-        key=lambda q: spmm_distributed_time(
-            stats.m, stats.n, args.max_batch, q[2][0], q[0],
-            matrix_bytes=sellcs_bytes, max_row_nnz=stats.max_row_nnz,
-            num_chunks=q[1], model_devices=q[2][1], compact_x=q[3],
-            nnz=stats.nnz))
-    pd, pm = mesh_shape
-    mesh = make_spmm_mesh(mesh_shape)
-    sc = coo_to_sellcs(coo, c=_pick_chunk(stats.m, pd))
-    impl = "ref" if args.impl == "auto" and \
-        jax.default_backend() != "tpu" else args.impl
-    if impl == "auto":
-        impl = "pallas"
-    mesh_tag = f"{pd}x{pm}mesh" if pm > 1 else f"{pd}dev"
-    cx_tag = "/cx=on" if compact else ""
-    if schedule == "row":
-        sharded = partition_sellcs_rows(sc, pd, compact_x=compact)
-        eager = lambda X: spmm_row_distributed(sharded, X, mesh, impl=impl)
-        label = f"sellcs+row@{mesh_tag}{cx_tag}"
-    else:
-        # the span plan is baked at partition time; the multiply reuses it
-        sharded = partition_sellcs_nnz(sc, pd, num_chunks=chunks,
-                                       compact_x=compact)
-        eager = lambda X: spmm_merge_distributed(sharded, X, mesh,
-                                                 impl=impl,
-                                                 num_chunks=chunks)
-        label = f"sellcs+merge@{mesh_tag}/chunks={chunks}{cx_tag}"
-    jitted = jax.jit(eager)
-    # the jitted closure keeps repeated flushes of one batch shape from
-    # retracing the shard_map body.
-    # price the gather with the map the multiply EXECUTES: the chunked
-    # merge gathers through the chunk plan's re-dealt map, not the base
-    # partition's (the re-deal hands every device rows of every span, so
-    # the two touched sets differ)
-    n_touched = None
-    if compact:
-        nt_src = (sharded.chunk_plan[3]
-                  if sharded.chunk_plan is not None else sharded.n_touched)
-        n_touched = float(np.mean(np.asarray(nt_src)))
-    modeled_s = spmm_distributed_time(
-        stats.m, stats.n, args.max_batch, pd, schedule,
-        matrix_bytes=sellcs_bytes, max_row_nnz=stats.max_row_nnz,
-        num_chunks=chunks, model_devices=pm, compact_x=compact,
-        n_touched=n_touched, nnz=stats.nnz)
-
-    def spmm_fn(_mat, X):
-        return jitted(X)
-    return _DistPlan(sc, spmm_fn, eager, label, schedule, chunks,
-                     mesh_shape, compact, n_touched, modeled_s)
-
-
-def _metrics_pass(reg, mat, xs, args, spmm_fn, plan, stats, algo):
-    """The --metrics measurement pass: per-flush wall times into the
-    ``serve/flush_s`` histogram and one :class:`~repro.obs.ResidualRecord`
-    per flush pairing the measured latency with the roofline prediction
-    for the served knobs — the observed side of the selector's model."""
-    from repro.obs import choice_labels
-    from repro.roofline import spmm_distributed_time
+def _serving_pass(op, xs, args, reg=None, controller=None):
+    """The flush-by-flush serving loop: per-flush wall times into the
+    ``serve/flush_s`` histogram (split pre/post-migration when a
+    controller runs), one :class:`~repro.obs.ResidualRecord` per flush
+    pairing the measured latency with the roofline prediction of the plan
+    that served it, and the migration controller's between-flush hook —
+    the observed side of the selector's model AND the feedback signal the
+    break-even decision consumes."""
     from repro.spmm import RequestBatcher
-    from repro.core.selector import _matrix_bytes_est
 
-    batcher = RequestBatcher(mat, max_batch=args.max_batch, impl=args.impl,
-                             spmm_fn=spmm_fn)
+    batcher = RequestBatcher(op, max_batch=args.max_batch, impl=args.impl,
+                             spmm_fn=lambda _m, X: op.matmul(X))
     for x in xs:
         batcher.submit(x)
-    flush_h = reg.histogram("serve/flush_s")
-    labels = choice_labels(
-        schedule=plan.schedule if plan else "single",
-        num_chunks=plan.chunks if plan else 1,
-        mesh_shape=plan.mesh_shape if plan else (1, 1),
-        compact_x=plan.compact if plan else None,
-        matrix=args.matrix, algo=algo, backend=jax.default_backend())
+    ledger = reg.ledger if reg is not None else (
+        controller.ledger if controller is not None else None)
     while batcher.pending:
+        rp = op.plan        # one read: the plan this flush executes on
         k = min(batcher.pending, args.max_batch)
         t0 = time.perf_counter()
         out = batcher.flush()
         jax.block_until_ready(list(out.values()))
         dt = time.perf_counter() - t0
-        flush_h.observe(dt)
-        if plan is not None:
-            modeled = plan.modeled_s if k == args.max_batch else \
-                spmm_distributed_time(
-                    stats.m, stats.n, k, plan.mesh_shape[0], plan.schedule,
-                    matrix_bytes=_matrix_bytes_est("sellcs", stats),
-                    max_row_nnz=stats.max_row_nnz, num_chunks=plan.chunks,
-                    model_devices=plan.mesh_shape[1],
-                    compact_x=plan.compact, n_touched=plan.n_touched,
-                    nnz=stats.nnz)
-        else:
-            # single device: the distributed model at P=1 degenerates to
-            # the plain streaming-bytes roofline for this format
-            modeled = spmm_distributed_time(
-                stats.m, stats.n, k, 1, "row",
-                matrix_bytes=_matrix_bytes_est(algo, stats),
-                max_row_nnz=stats.max_row_nnz, nnz=stats.nnz)
-        reg.ledger.record("serve/flush", dt, modeled, k=k, **labels)
+        if reg is not None:
+            reg.histogram("serve/flush_s").observe(dt)
+            if controller is not None:
+                phase = ("serve/flush_postmigrate_s" if controller.swapped
+                         else "serve/flush_premigrate_s")
+                reg.histogram(phase).observe(dt)
+        if ledger is not None:
+            ledger.record("serve/flush", dt, rp.model_s(k), k=k,
+                          **rp.labels(matrix=args.matrix, algo=rp.label,
+                                      backend=jax.default_backend()))
+        if controller is not None:
+            controller.note_flush(k, dt, rp)
+    if controller is not None:
+        controller.finish()
 
 
 def _print_metrics_summary(reg):
@@ -241,15 +330,21 @@ def _print_metrics_summary(reg):
 
 def serve_spmv(args):
     """Sparse serving demo: batched (one SpMM per flush) vs sequential,
-    optionally over a --devices mesh. Headline numbers use the paper's
-    §5.2 min-of-N discipline; ``--metrics`` additionally records phase
-    spans, flush-latency percentiles and observed-vs-modeled residuals,
-    then dumps them as one ``repro.obs/v1`` JSON document."""
+    optionally over a --devices mesh, all through one
+    :class:`repro.spmm.SparseOperator` handle. ``--migrate auto`` starts
+    in the zero-conversion format and converts online once the measured
+    break-even clears the remaining traffic (``force`` converts
+    unconditionally, in the background either way). Headline numbers use
+    the paper's §5.2 min-of-N discipline; ``--metrics`` additionally
+    records phase spans, flush-latency percentiles, migration decision
+    inputs and observed-vs-modeled residuals, then dumps them as one
+    ``repro.obs/v1`` JSON document."""
     from repro import obs
-    from repro.core import MachineSpec, convert, matrix_stats, select, spmv
+    from repro.core import PlanSpec, matrix_stats, spmv
+    from repro.core.selector import ZERO_CONVERSION_ALGO
     from repro.data import matrices
     from repro.roofline import spmm_arithmetic_intensity
-    from repro.spmm import RequestBatcher
+    from repro.spmm import RequestBatcher, SparseOperator
 
     suite = matrices.test_suite(scale=args.scale)
     if args.matrix not in suite:
@@ -259,24 +354,57 @@ def serve_spmv(args):
     # num_spmvs counts k-RHS multiplies: batching turns `requests` SpMVs
     # into ceil(requests / max_batch) SpMM calls
     num_spmms = -(-args.requests // args.max_batch)
-    spmm_fn = None
-    plan = None
     mesh_shape = None
     if args.mesh:
         from repro.launch.mesh import parse_mesh_shape
         mesh_shape = parse_mesh_shape(args.mesh)
         args.devices = mesh_shape[0] * mesh_shape[1]
     if args.devices > 1:
-        plan = _make_distributed_spmm(coo, stats, args, mesh_shape)
-        mat, spmm_fn, algo = plan.matrix, plan.spmm_fn, plan.label
-        mesh_shape = plan.mesh_shape
+        ndev = len(jax.devices())
+        if ndev < args.devices:
+            raise SystemExit(
+                f"the mesh needs {args.devices} devices but jax sees only "
+                f"{ndev}; on CPU set XLA_FLAGS=--xla_force_host_platform_"
+                f"device_count={args.devices} before launching")
+        if args.algorithm and args.algorithm != "sellcs":
+            raise SystemExit(
+                f"--algorithm {args.algorithm} cannot be served on a mesh: "
+                "the --devices path multiplies the SELL-C-σ slice stream "
+                "(repro.spmm.distributed); drop --algorithm or pass sellcs")
+    if args.migrate != "off" and args.algorithm:
+        raise SystemExit(
+            "--algorithm pins the format, --migrate lets the break-even "
+            "economics choose it; drop one of the two")
+
+    # the target the migration converts TO (and what --migrate off serves
+    # directly): SELL-C-σ over the requested mesh, with --mesh / --chunks
+    # / --compact-x pinning knobs the selector would otherwise sweep
+    compact = {"auto": None, "on": True, "off": False}[args.compact_x]
+    if args.devices > 1:
+        target_spec = PlanSpec(
+            num_devices=args.devices,
+            mesh_shape=mesh_shape or (args.devices, 1),
+            num_chunks=args.chunks if args.chunks > 0 else None,
+            compact_x=compact, algorithm="sellcs")
     else:
-        algo = args.algorithm or select(stats, MachineSpec(1),
-                                        num_spmvs=num_spmms,
-                                        k=args.max_batch)
-        mat = convert(coo, algo)
+        target_spec = PlanSpec(num_devices=1, algorithm="sellcs")
+    if args.migrate != "off":
+        # zero-conversion start: merge-path CSR on one device; the
+        # controller decides if/when the target plan pays for itself
+        initial_spec = PlanSpec(num_devices=1,
+                                algorithm=ZERO_CONVERSION_ALGO)
+    elif args.devices > 1:
+        initial_spec = target_spec
+    else:
+        initial_spec = PlanSpec(num_devices=1, algorithm=args.algorithm)
+
+    op = SparseOperator.from_coo(coo, initial_spec, impl=args.impl,
+                                 k_hint=args.max_batch,
+                                 num_spmvs=num_spmms)
+    algo = op.plan.label
     print(f"[serve-spmv] matrix={args.matrix} m={stats.m} n={stats.n} "
-          f"nnz={stats.nnz} algo={algo} max_batch={args.max_batch}")
+          f"nnz={stats.nnz} algo={algo} max_batch={args.max_batch}"
+          + (f" migrate={args.migrate}" if args.migrate != "off" else ""))
 
     rng = np.random.default_rng(args.seed)
     xs = [jnp.asarray(rng.standard_normal(stats.n).astype(np.float32))
@@ -287,13 +415,19 @@ def serve_spmv(args):
         reg = obs.install(obs.MetricRegistry(
             backend=jax.default_backend(), mode="spmv",
             matrix=args.matrix, algo=algo, devices=args.devices,
-            max_batch=args.max_batch))
+            max_batch=args.max_batch, migrate=args.migrate,
+            requests=args.requests))
+    controller = None
+    if args.migrate != "off":
+        ledger = reg.ledger if reg is not None else obs.ResidualLedger()
+        controller = _MigrationController(op, stats, args, target_spec,
+                                          ledger, reg=reg)
 
     # headline timing, the paper's §5.2 way: min over --reps runs after a
     # warmup/compile run — never a single first-flush perf_counter pair
     def batched_run():
-        b = RequestBatcher(mat, max_batch=args.max_batch, impl=args.impl,
-                           spmm_fn=spmm_fn)
+        b = RequestBatcher(op, max_batch=args.max_batch, impl=args.impl,
+                           spmm_fn=lambda _m, X: op.matmul(X))
         rids = [b.submit(x) for x in xs]
         return b.drain(), rids, b.flushes
 
@@ -302,7 +436,8 @@ def serve_spmv(args):
     t_batched = t_b.best_s
 
     t_s = obs.time_min_of_n(
-        lambda: [spmv(mat, x, impl=args.impl) for x in xs],
+        lambda: [spmv(op.plan.local_matrix, x, impl=args.impl)
+                 for x in xs],
         reps=args.reps, warmup=1)
     seq, t_seq = t_s.last_result, t_s.best_s
 
@@ -319,54 +454,65 @@ def serve_spmv(args):
           f"(min of {t_b.reps}, warmup {t_b.warmup})")
     print(f"[serve-spmv] modelled intensity {ai1:.3f} -> {aik:.3f} "
           f"flop/byte at k={args.max_batch}")
-    if plan is not None:
-        from repro.roofline import (spmm_distributed_collective_s,
-                                    spmm_distributed_traffic)
-        sched, chunks = plan.schedule, plan.chunks
-        compact, n_touched = plan.compact, plan.n_touched
-        pd, pm = mesh_shape
-        hbm, coll = spmm_distributed_traffic(
-            stats.m, stats.n, args.max_batch, pd, sched,
-            nnz=stats.nnz, max_row_nnz=stats.max_row_nnz, model_devices=pm,
-            compact_x=compact, n_touched=n_touched)
-        print(f"[serve-spmv] modelled per-device traffic: {hbm / 1e6:.2f} MB "
-              f"HBM + {coll / 1e6:.2f} MB collective per flush "
-              f"(mesh=({pd},{pm}), schedule={sched}, chunks={chunks}, "
-              f"compact_x={'on' if compact else 'off'})")
-        if compact:
-            hbm_rep, _ = spmm_distributed_traffic(
-                stats.m, stats.n, args.max_batch, pd, sched,
-                nnz=stats.nnz, max_row_nnz=stats.max_row_nnz,
-                model_devices=pm)
-            print(f"[serve-spmv] compact gather: mean n_touched "
-                  f"{n_touched:.0f} of n={stats.n} rows per shard — "
-                  f"{(hbm_rep - hbm) / 1e6:.2f} MB HBM saved vs "
-                  "replicated X per flush")
-        if sched == "merge":
-            mono, over = (spmm_distributed_collective_s(
-                stats.m, stats.n, args.max_batch, pd, sched,
-                nnz=stats.nnz, max_row_nnz=stats.max_row_nnz, num_chunks=c,
-                model_devices=pm)
-                for c in (1, chunks))
-            print(f"[serve-spmv] exposed collective_s: {mono * 1e6:.2f} us "
-                  f"monolithic -> {over * 1e6:.2f} us with {chunks} "
-                  "chunk(s) pipelined under the slice stream")
+    _print_traffic_model(op.spec, op.plan.n_touched, stats, args)
 
-    if reg is not None:
+    if reg is not None or controller is not None:
         # the measured side: per-flush latencies + residual ledger records
-        # against the roofline prediction for the served knobs
-        _metrics_pass(reg, mat, xs, args, spmm_fn, plan, stats, algo)
-        if plan is not None:
+        # against the roofline prediction of the plan serving each flush,
+        # and the migration controller's between-flush decision hook
+        _serving_pass(op, xs, args, reg=reg, controller=controller)
+    if reg is not None:
+        if op.plan.eager is not None:
             # one eager pass so the spmm/* phase spans time real execution
-            # (inside the jitted flush they only see tracing)
+            # (inside the jitted flush they only see tracing); op.plan is
+            # the post-migration plan when a swap landed
             with obs.span("serve/eager_profile"):
-                jax.block_until_ready(plan.eager_fn(
+                jax.block_until_ready(op.plan.eager(
                     jnp.stack([x for x in xs[:args.max_batch]], axis=1)))
         _print_metrics_summary(reg)
         reg.dump(args.metrics)
         print(f"[serve-spmv] metrics -> {args.metrics}")
         obs.uninstall()
     return t_batched, t_seq
+
+
+def _print_traffic_model(sp, n_touched, stats, args):
+    """The modelled per-device traffic printout for a distributed plan
+    (no-op on a single device): HBM + collective bytes per flush, the
+    compact-gather saving, and the merge psum pipelining win."""
+    if (sp.num_devices or 1) <= 1:
+        return
+    from repro.roofline import (spmm_distributed_collective_s,
+                                spmm_distributed_traffic)
+    sched, chunks = sp.schedule, sp.num_chunks or 1
+    compact = bool(sp.compact_x)
+    pd, pm = sp.mesh_shape
+    hbm, coll = spmm_distributed_traffic(
+        stats.m, stats.n, args.max_batch, pd, sched,
+        nnz=stats.nnz, max_row_nnz=stats.max_row_nnz, model_devices=pm,
+        compact_x=compact, n_touched=n_touched)
+    print(f"[serve-spmv] modelled per-device traffic: {hbm / 1e6:.2f} MB "
+          f"HBM + {coll / 1e6:.2f} MB collective per flush "
+          f"(mesh=({pd},{pm}), schedule={sched}, chunks={chunks}, "
+          f"compact_x={'on' if compact else 'off'})")
+    if compact:
+        hbm_rep, _ = spmm_distributed_traffic(
+            stats.m, stats.n, args.max_batch, pd, sched,
+            nnz=stats.nnz, max_row_nnz=stats.max_row_nnz,
+            model_devices=pm)
+        print(f"[serve-spmv] compact gather: mean n_touched "
+              f"{n_touched:.0f} of n={stats.n} rows per shard — "
+              f"{(hbm_rep - hbm) / 1e6:.2f} MB HBM saved vs "
+              "replicated X per flush")
+    if sched == "merge":
+        mono, over = (spmm_distributed_collective_s(
+            stats.m, stats.n, args.max_batch, pd, sched,
+            nnz=stats.nnz, max_row_nnz=stats.max_row_nnz, num_chunks=c,
+            model_devices=pm)
+            for c in (1, chunks))
+        print(f"[serve-spmv] exposed collective_s: {mono * 1e6:.2f} us "
+              f"monolithic -> {over * 1e6:.2f} us with {chunks} "
+              "chunk(s) pipelined under the slice stream")
 
 
 def main(argv=None):
@@ -403,6 +549,15 @@ def main(argv=None):
                          "decide when the gather beats replication)")
     ap.add_argument("--impl", default="auto",
                     choices=("auto", "ref", "pallas", "pallas_interpret"))
+    ap.add_argument("--migrate", default="off",
+                    choices=("auto", "off", "force"),
+                    help="online break-even format migration: start in the "
+                         "zero-conversion merge-path format, count served "
+                         "multiplies, and convert to the SELL-C-σ target "
+                         "plan in a background thread once the measured "
+                         "convert-cost / per-multiply-saving ratio clears "
+                         "the projected remaining traffic (auto), "
+                         "unconditionally (force), or never (off)")
     ap.add_argument("--metrics", default=None, metavar="OUT.json",
                     help="install a repro.obs registry for the run and dump "
                          "it here: phase spans, p50/p95/p99 flush latency, "

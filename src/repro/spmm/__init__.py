@@ -7,6 +7,8 @@ Layers (one module each):
   ``kernels``    tiled Pallas kernels with a k-tile grid dimension
   ``batching``   request batching for the serve path (k SpMVs -> 1 SpMM)
   ``distributed``  shard_map schedules over a mesh (row bands / merge spans)
+  ``operator``   SparseOperator: the stable partition-once/multiply-many
+                 handle with an atomic plan swap (online format migration)
 
 SpMV is the k = 1 special case throughout; ``repro.core.spmv`` remains the
 single-vector entry point and routes SELL-C-σ matrices here.
@@ -21,9 +23,10 @@ from repro.core.formats import COO, CSR, BlockedSparse
 from . import reference
 from .batching import RequestBatcher, SpmvRequest, batch_spmv
 from .distributed import (ShardedSellCS, partition_sellcs_nnz,
-                          partition_sellcs_rows, spmm_merge_distributed,
-                          spmm_row_distributed)
+                          partition_sellcs_rows, rechunk_sellcs,
+                          spmm_merge_distributed, spmm_row_distributed)
 from .kernels import choose_k_tile, csr_spmm, sellcs_spmm, tiled_spmm
+from .operator import OperatorStats, RealizedPlan, SparseOperator
 from .reference import (spmm_blocked, spmm_coo, spmm_csr, spmm_ref,
                         spmm_sellcs)
 from .sellcs import SellCS, coo_to_sellcs
@@ -65,6 +68,7 @@ __all__ = [
     "spmm_ref", "spmm_coo", "spmm_csr", "spmm_blocked", "spmm_sellcs",
     "RequestBatcher", "SpmvRequest", "batch_spmv", "reference",
     "ShardedSellCS", "partition_sellcs_rows", "partition_sellcs_nnz",
-    "spmm_row_distributed", "spmm_merge_distributed",
+    "rechunk_sellcs", "spmm_row_distributed", "spmm_merge_distributed",
+    "SparseOperator", "RealizedPlan", "OperatorStats",
     "COO", "CSR", "BlockedSparse",
 ]

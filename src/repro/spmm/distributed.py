@@ -309,6 +309,37 @@ def partition_sellcs_nnz(sc: SellCS, num_devices: int, *,
     return sharded
 
 
+def rechunk_sellcs(sharded: ShardedSellCS,
+                   num_chunks: int) -> ShardedSellCS:
+    """Swap-path partition reuse: re-bake ONLY the pipelined-fixup span
+    plan of an existing "merge" partition. The expensive convert-time
+    artifacts — the device-dealt data/cols blocks, the σ permutation, the
+    ``compact_x`` column maps — are reused untouched, so an online plan
+    swap that changes just the psum pipelining depth
+    (``launch.serve --migrate``, ``SparseOperator.swap``) costs one
+    host-side span re-deal instead of a full repartition.
+
+    ``num_chunks = 1`` drops the plan (the monolithic fixup needs none);
+    a matching baked plan is returned as-is. The re-baked plan is
+    byte-identical to what ``partition_sellcs_nnz(num_chunks=...)`` would
+    have produced at convert time: ``_chunk_substreams`` re-deals the same
+    global width-row stream either way (a compacted base is un-relabeled
+    through its ``col_map`` first)."""
+    if sharded.schedule != "merge":
+        raise ValueError("rechunk_sellcs needs a 'merge' partition, got "
+                         f"{sharded.schedule!r}")
+    nc = int(num_chunks)
+    if nc < 1:
+        raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
+    if nc == 1:
+        return sharded._replace(chunk_plan=None)
+    if sharded.chunk_plan is not None and sharded.chunk_plan[0] == nc:
+        return sharded
+    plan = _chunk_substreams(sharded, nc)
+    return sharded._replace(chunk_plan=(nc, plan.spans, plan.col_map,
+                                        plan.n_touched))
+
+
 def _resolve_model_axis(mesh: Mesh, axis: str,
                         model_axis: Optional[str]) -> Tuple[Optional[str],
                                                             int]:

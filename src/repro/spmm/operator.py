@@ -1,0 +1,359 @@
+"""repro.spmm.operator — the stable partition-once/multiply-many handle.
+
+Every repeated-multiply consumer in this repo (the serve batcher, the
+iterative examples) used to re-spell the same dance: convert COO to a
+format, maybe partition it over a mesh, close a jitted multiply over the
+result, and keep the whole plan in ad-hoc locals — which made "change the
+format mid-stream" (the paper's §7 break-even economics, ~472 multiplies
+to amortize a conversion) impossible without tearing the caller apart.
+
+:class:`SparseOperator` is that seam. It owns the immutable COO source and
+a single *current* :class:`RealizedPlan`; ``op.matmul(X)`` multiplies with
+whatever plan is installed, and ``op.swap(new_plan)`` replaces it
+atomically — the plan is one immutable object read exactly once per
+multiply, so a concurrent flush sees either the old plan or the new one,
+never a torn mix. ``op.realize(spec)`` builds a plan *without* installing
+it, which is what the serve migration controller runs in its background
+thread before swapping between flushes.
+
+Convert-time artifacts are cached per operator (the SELL-C-σ stream and
+each (schedule, P_data, compact_x) base partition), so a swap that only
+changes the psum pipelining depth reuses the existing partition through
+:func:`repro.spmm.distributed.rechunk_sellcs` instead of repartitioning.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.formats import COO
+from repro.core.selector import (MachineSpec, MatrixStats, PlanSpec,
+                                 _matrix_bytes_est, matrix_stats, select,
+                                 select_distributed)
+
+
+def _pick_chunk(m: int, num_devices: int, default: int = 128) -> int:
+    """Largest power-of-two slice height <= default that still gives every
+    device at least one slice to own (small demo matrices on big meshes)."""
+    c = default
+    while c > 8 and -(-m // c) < num_devices:
+        c //= 2
+    return c
+
+
+def _resolve_impl(impl: str) -> str:
+    """The serve convention: "auto" means the Pallas kernels on TPU and
+    the jnp reference everywhere else."""
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+class RealizedPlan(NamedTuple):
+    """One executable multiply plan: the resolved :class:`PlanSpec`, the
+    execution-side matrix (a partitioned ``ShardedSellCS`` on a mesh, the
+    converted single-device format otherwise), the jitted multiply
+    closure, and everything observability needs to price it (the roofline
+    ``model_s(k)`` closure, the compact-gather ``n_touched``, the measured
+    build seconds). Immutable — :meth:`SparseOperator.swap` installs a
+    whole plan in one reference assignment."""
+    spec: PlanSpec               # fully resolved (no None knobs on a mesh)
+    label: str                   # e.g. "sellcs+merge@4x2mesh/chunks=2"
+    matrix: object               # what the multiply executes against
+    local_matrix: object         # single-device form for sequential
+                                 #   baselines (the pre-partition stream
+                                 #   on a mesh; == matrix off one)
+    multiply: Callable           # X -> Y, jitted where distributed
+    eager: Optional[Callable]    # un-jitted X -> Y (mesh only) — the
+                                 #   phase-profile pass --metrics runs
+    impl: str                    # resolved kernel impl ("ref"/"pallas")
+    n_touched: Optional[float]   # mean touched columns per shard
+                                 #   (compact_x plans only)
+    model_s: Callable            # k -> roofline seconds for one k-RHS
+                                 #   flush under exactly these knobs
+    build_s: float               # measured convert+partition seconds —
+                                 #   the numerator of the live break-even
+
+    def labels(self, **extra) -> Dict[str, str]:
+        """Canonical residual-ledger labels for this plan's knobs; the
+        single-device case keeps the historical ``schedule=single``
+        stamping of the serve metrics pass."""
+        from repro.obs.residuals import choice_labels
+        sp = self.spec
+        if (sp.num_devices or 1) > 1:
+            return choice_labels(schedule=sp.schedule,
+                                 num_chunks=sp.num_chunks or 1,
+                                 mesh_shape=sp.mesh_shape,
+                                 compact_x=bool(sp.compact_x), **extra)
+        return choice_labels(schedule="single", num_chunks=1,
+                             mesh_shape=(1, 1), compact_x=None, **extra)
+
+
+class OperatorStats:
+    """Mutable multiply/swap accounting, updated under the operator lock.
+    ``multiplies`` counts SpMV-equivalents (served columns), the unit of
+    the paper's "472 multiplications" break-even."""
+    __slots__ = ("multiplies", "calls", "swaps", "last_swap_unix_s")
+
+    def __init__(self):
+        self.multiplies = 0
+        self.calls = 0
+        self.swaps = 0
+        self.last_swap_unix_s: Optional[float] = None
+
+    def __repr__(self):
+        return (f"OperatorStats(multiplies={self.multiplies}, "
+                f"calls={self.calls}, swaps={self.swaps})")
+
+
+class _PlanCache:
+    """Per-operator convert-time artifact reuse across swaps: the
+    SELL-C-σ stream per slice height, and each base partition per
+    (schedule, P_data, compact_x) — a chunks-only swap then pays one span
+    re-deal (``rechunk_sellcs``), not a repartition."""
+
+    def __init__(self):
+        self.sellcs: Dict[int, object] = {}
+        self.partitions: Dict[Tuple[str, int, bool], object] = {}
+
+
+class SparseOperator:
+    """Partition-once / multiply-many handle over one sparse matrix.
+
+    ::
+
+        op = SparseOperator.from_coo(coo, PlanSpec(num_devices=8))
+        y = op.matmul(x)          # or: op @ x
+        op.swap(PlanSpec(num_devices=8, num_chunks=4))   # atomic
+        op.plan, op.spec, op.stats, op.shape
+
+    ``matmul`` reads the current plan exactly once, so a ``swap`` from
+    another thread (the serve migration controller's background build)
+    can never interleave half-updated state into a flush; pre- and
+    post-swap results agree with the oracle bitwise because every plan
+    multiplies the same COO nonzeros.
+    """
+
+    def __init__(self, coo: COO, plan: Optional[PlanSpec] = None, *,
+                 impl: str = "auto", k_hint: int = 32,
+                 num_spmvs: int = 1000, feedback=None):
+        self._coo = coo
+        self._mstats = matrix_stats(coo)
+        self._impl = impl
+        self._k_hint = max(int(k_hint), 1)
+        self._num_spmvs = num_spmvs
+        self._cache = _PlanCache()
+        self._lock = threading.Lock()
+        self._build_lock = threading.Lock()
+        self.stats = OperatorStats()
+        self._plan = self.realize(plan or PlanSpec(), feedback=feedback)
+
+    @classmethod
+    def from_coo(cls, coo: COO, plan: Optional[PlanSpec] = None, *,
+                 impl: str = "auto", k_hint: int = 32,
+                 num_spmvs: int = 1000, feedback=None) -> "SparseOperator":
+        """Build the handle and realize its initial plan. ``plan`` is a
+        :class:`PlanSpec` (None = single-device, format chosen by
+        ``core.select`` for ``k_hint`` right-hand sides amortized over
+        ``num_spmvs`` multiplies)."""
+        return cls(coo, plan, impl=impl, k_hint=k_hint,
+                   num_spmvs=num_spmvs, feedback=feedback)
+
+    # -- read side ---------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self._coo.shape
+
+    @property
+    def matrix_stats(self) -> MatrixStats:
+        return self._mstats
+
+    @property
+    def plan(self) -> RealizedPlan:
+        return self._plan
+
+    @property
+    def spec(self) -> PlanSpec:
+        return self._plan.spec
+
+    def matmul(self, x: jax.Array) -> jax.Array:
+        """``Y = A @ X`` under the currently installed plan. The plan
+        reference is read once — concurrent swaps are invisible within a
+        single multiply."""
+        rp = self._plan
+        y = rp.multiply(x)
+        k = 1 if getattr(x, "ndim", 1) == 1 else int(x.shape[1])
+        with self._lock:
+            self.stats.calls += 1
+            self.stats.multiplies += k
+        return y
+
+    __matmul__ = matmul
+
+    # -- write side --------------------------------------------------------
+    def realize(self, spec: PlanSpec, feedback=None) -> RealizedPlan:
+        """Build an executable plan for ``spec`` WITHOUT installing it —
+        safe to call from a background thread while ``matmul`` traffic
+        runs on the current plan. ``feedback`` (a ``ResidualLedger``)
+        reaches ``select_distributed`` so unpinned knobs are chosen with
+        ledger-corrected scores."""
+        with self._build_lock:
+            return _realize_plan(self._coo, self._mstats, spec,
+                                 impl=self._impl, k_hint=self._k_hint,
+                                 num_spmvs=self._num_spmvs,
+                                 feedback=feedback, cache=self._cache)
+
+    def swap(self, new_plan, feedback=None) -> RealizedPlan:
+        """Atomically install ``new_plan`` (a :class:`RealizedPlan`, or a
+        :class:`PlanSpec` realized on the spot) as the current plan; the
+        next ``matmul`` call uses it. Returns the installed plan."""
+        if isinstance(new_plan, PlanSpec):
+            new_plan = self.realize(new_plan, feedback=feedback)
+        if not isinstance(new_plan, RealizedPlan):
+            raise TypeError("swap takes a RealizedPlan or PlanSpec, got "
+                            f"{type(new_plan).__name__}")
+        with self._lock:
+            self._plan = new_plan
+            self.stats.swaps += 1
+            self.stats.last_swap_unix_s = time.time()
+        return new_plan
+
+
+def _realize_plan(coo: COO, stats: MatrixStats, spec: PlanSpec, *,
+                  impl: str, k_hint: int, num_spmvs: int, feedback=None,
+                  cache: Optional[_PlanCache] = None) -> RealizedPlan:
+    from repro.roofline import spmm_distributed_time
+    spec = spec.canonical()
+    cache = cache or _PlanCache()
+    t0 = time.perf_counter()
+    if spec.num_devices == 1:
+        return _realize_single(coo, stats, spec, impl=impl, k_hint=k_hint,
+                               num_spmvs=num_spmvs, t0=t0,
+                               time_fn=spmm_distributed_time)
+    return _realize_mesh(coo, stats, spec, impl=impl, k_hint=k_hint,
+                         num_spmvs=num_spmvs, feedback=feedback,
+                         cache=cache, t0=t0,
+                         time_fn=spmm_distributed_time)
+
+
+def _realize_single(coo, stats, spec, *, impl, k_hint, num_spmvs, t0,
+                    time_fn):
+    from repro.core.convert import convert
+    import dataclasses
+    algo = spec.algorithm or select(stats, MachineSpec(1),
+                                    num_spmvs=num_spmvs, k=k_hint)
+    mat = convert(coo, algo)
+    mat_bytes = _matrix_bytes_est(algo, stats)
+
+    def multiply(X):
+        from repro.spmm import spmm
+        return spmm(mat, X, impl=impl)
+
+    def model_s(k):
+        # the distributed model at P=1 degenerates to the plain
+        # streaming-bytes roofline for this format
+        return time_fn(stats.m, stats.n, k, 1, "row",
+                       matrix_bytes=mat_bytes,
+                       max_row_nnz=stats.max_row_nnz, nnz=stats.nnz)
+
+    resolved = dataclasses.replace(spec, algorithm=algo)
+    return RealizedPlan(resolved, algo, mat, mat, multiply, None,
+                        _resolve_impl(impl), None, model_s,
+                        time.perf_counter() - t0)
+
+
+def _realize_mesh(coo, stats, spec, *, impl, k_hint, num_spmvs, feedback,
+                  cache, t0, time_fn):
+    import dataclasses
+    from repro.launch.mesh import make_spmm_mesh
+    from repro.spmm import coo_to_sellcs
+    from repro.spmm.distributed import (partition_sellcs_nnz,
+                                        partition_sellcs_rows,
+                                        rechunk_sellcs,
+                                        spmm_merge_distributed,
+                                        spmm_row_distributed)
+    total = spec.num_devices
+    ndev = len(jax.devices())
+    if ndev < total:
+        raise RuntimeError(
+            f"the mesh needs {total} devices but jax sees only {ndev}; on "
+            "CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{total} before launching")
+    if spec.algorithm not in (None, "sellcs"):
+        raise ValueError(
+            f"algorithm {spec.algorithm!r} cannot run on a mesh: the "
+            "distributed multiply executes the SELL-C-σ slice stream "
+            "(repro.spmm.distributed)")
+    # joint (schedule × chunks × mesh × gather) choice under the spec's
+    # pins; conversion cost is shared by every candidate so it drops out
+    # of the argmin — the old serve grid-min, through one entry point
+    choice = select_distributed(
+        stats, k=k_hint, num_spmvs=num_spmvs,
+        spec=dataclasses.replace(spec, algorithm="sellcs"),
+        feedback=feedback)
+    schedule, chunks = choice.schedule, choice.num_chunks
+    (pd, pm), compact = choice.mesh_shape, choice.compact_x
+    mesh = make_spmm_mesh((pd, pm))
+    c = _pick_chunk(stats.m, pd)
+    sc = cache.sellcs.get(c)
+    if sc is None:
+        sc = cache.sellcs.setdefault(c, coo_to_sellcs(coo, c=c))
+    impl_r = _resolve_impl(impl)
+    if schedule == "row":
+        key = ("row", pd, compact)
+        sharded = cache.partitions.get(key)
+        if sharded is None:
+            sharded = cache.partitions.setdefault(
+                key, partition_sellcs_rows(sc, pd, compact_x=compact))
+        eager = lambda X: spmm_row_distributed(sharded, X, mesh,
+                                               impl=impl_r)
+    else:
+        key = ("merge", pd, compact)
+        base = cache.partitions.get(key)
+        if base is None:
+            base = cache.partitions.setdefault(
+                key, partition_sellcs_nnz(sc, pd, compact_x=compact))
+        # partition reuse across swaps: only the span plan is re-baked
+        sharded = rechunk_sellcs(base, chunks)
+        eager = lambda X: spmm_merge_distributed(sharded, X, mesh,
+                                                 impl=impl_r,
+                                                 num_chunks=chunks)
+    # the jitted closure keeps repeated flushes of one batch shape from
+    # retracing the shard_map body
+    jitted = jax.jit(eager)
+    mesh_tag = f"{pd}x{pm}mesh" if pm > 1 else f"{pd}dev"
+    cx_tag = "/cx=on" if compact else ""
+    if schedule == "row":
+        label = f"sellcs+row@{mesh_tag}{cx_tag}"
+    else:
+        label = f"sellcs+merge@{mesh_tag}/chunks={chunks}{cx_tag}"
+    # price the gather with the map the multiply EXECUTES: the chunked
+    # merge gathers through the chunk plan's re-dealt map, not the base
+    # partition's
+    n_touched = None
+    if compact:
+        nt_src = (sharded.chunk_plan[3]
+                  if sharded.chunk_plan is not None else sharded.n_touched)
+        n_touched = float(np.mean(np.asarray(nt_src)))
+    sellcs_bytes = _matrix_bytes_est("sellcs", stats)
+
+    def model_s(k):
+        return time_fn(stats.m, stats.n, k, pd, schedule,
+                       matrix_bytes=sellcs_bytes,
+                       max_row_nnz=stats.max_row_nnz, num_chunks=chunks,
+                       model_devices=pm, compact_x=compact,
+                       n_touched=n_touched, nnz=stats.nnz)
+
+    resolved = PlanSpec(num_devices=pd * pm, mesh_shape=(pd, pm),
+                        num_chunks=chunks, compact_x=compact,
+                        schedule=schedule, algorithm="sellcs")
+    return RealizedPlan(resolved, label, sharded, sc, jitted, eager,
+                        impl_r, n_touched, model_s,
+                        time.perf_counter() - t0)
+
+
+__all__ = ["SparseOperator", "RealizedPlan", "OperatorStats", "PlanSpec"]

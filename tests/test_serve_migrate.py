@@ -1,0 +1,397 @@
+"""Online format migration (ISSUE 7): the SparseOperator handle, the
+PlanSpec carrier and its kwargs shims, the ledger-fed re-selection, the
+serve --migrate controller, and the smoke_check migration gate.
+
+Device-backed mesh tests run in SUBPROCESSES (the host-platform device
+count must be set before jax initializes); everything else runs in-process
+on the suite's single device.
+"""
+import dataclasses
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from tests.test_spmm_distributed import run_sub
+
+
+def _coo(m=300, n=300, nnz=2400, seed=0):
+    from repro.core import to_coo
+    from repro.data import matrices
+    return to_coo(*matrices.uniform(m, n, nnz, seed))
+
+
+# -------------------------------------------------------------------------
+# PlanSpec: canonicalization and the kwargs shims
+# -------------------------------------------------------------------------
+
+def test_plan_spec_canonical_rules():
+    from repro.core import PlanSpec
+    sp = PlanSpec(mesh_shape=(4, 2)).canonical()
+    assert sp.num_devices == 8 and sp.mesh_shape == (4, 2)
+    assert PlanSpec().canonical().num_devices == 1
+    # --chunks 0 convention: 0 means unpinned
+    assert PlanSpec(num_chunks=0).canonical().num_chunks is None
+    with pytest.raises(ValueError):
+        PlanSpec(num_devices=4, mesh_shape=(4, 2)).canonical()
+    with pytest.raises(ValueError):
+        PlanSpec(schedule="diagonal").canonical()
+    with pytest.raises(ValueError):
+        PlanSpec(num_chunks=-1).canonical()
+    # unpinned axes become label wildcards; pinned axes are stamped
+    lab = PlanSpec(mesh_shape=(4, 2), schedule="merge").labels()
+    assert lab == {"schedule": "merge", "mesh": "4x2"}
+
+
+def test_grid_spec_equals_kwargs_shim():
+    from repro.core import PlanSpec
+    from repro.core.selector import distributed_schedule_grid
+    assert distributed_schedule_grid(8) == \
+        distributed_schedule_grid(spec=PlanSpec(num_devices=8))
+    assert distributed_schedule_grid(8, pinned_chunks=4,
+                                     pinned_mesh=(4, 2)) == \
+        distributed_schedule_grid(spec=PlanSpec(
+            num_devices=8, num_chunks=4, mesh_shape=(4, 2)))
+    # a schedule pin restricts that axis (no kwargs equivalent existed)
+    grid = distributed_schedule_grid(spec=PlanSpec(num_devices=8,
+                                                   schedule="row"))
+    assert grid and all(s == "row" and nc == 1 for s, nc, _ in grid)
+
+
+def test_select_distributed_spec_equals_kwargs_shim():
+    from repro.core import PlanSpec, matrix_stats
+    from repro.core.selector import select_distributed
+    stats = matrix_stats(_coo())
+    for k in (1, 64):
+        old = select_distributed(stats, k=k, num_devices=8,
+                                 mesh_shape=(4, 2))
+        new = select_distributed(stats, k=k,
+                                 spec=PlanSpec(mesh_shape=(4, 2)))
+        assert old == new
+    # spec pins land in the choice verbatim
+    ch = select_distributed(stats, k=8, spec=PlanSpec(
+        num_devices=8, schedule="merge", num_chunks=4, compact_x=True,
+        algorithm="sellcs"))
+    assert (ch.algorithm, ch.schedule, ch.num_chunks, ch.compact_x) == \
+        ("sellcs", "merge", 4, True)
+    with pytest.raises(ValueError):
+        select_distributed(stats, spec=PlanSpec(num_devices=8,
+                                                algorithm="csb"))
+
+
+def test_autotune_spec_equals_kwargs_shim():
+    from repro.core import PlanSpec
+    from repro.core.autotune import autotune
+    coo = _coo(200, 200, 1500)
+    best_old, _ = autotune(coo, algorithms=("parcrs",), reps=1, k=8,
+                           num_devices=8)
+    best_new, _ = autotune(coo, algorithms=("parcrs",), reps=1, k=8,
+                           spec=PlanSpec(num_devices=8))
+    assert (best_old.schedule, best_old.num_chunks, best_old.mesh_shape,
+            best_old.compact_x) == (best_new.schedule, best_new.num_chunks,
+                                    best_new.mesh_shape, best_new.compact_x)
+    # pins restrict the rescoring grid
+    best_pin, _ = autotune(coo, algorithms=("parcrs",), reps=1, k=8,
+                           spec=PlanSpec(num_devices=8, schedule="merge",
+                                         num_chunks=2, mesh_shape=(4, 2)))
+    assert (best_pin.schedule, best_pin.num_chunks, best_pin.mesh_shape) \
+        == ("merge", 2, (4, 2))
+
+
+def test_autotune_measure_delegates_to_time_min_of_n(monkeypatch):
+    """[bugfix] autotune's timing must go through the repo-wide
+    obs.timing.time_min_of_n protocol, not a private perf_counter loop."""
+    import repro.obs.timing as timing
+    from repro.core.autotune import _measure
+    calls = []
+    real = timing.time_min_of_n
+
+    def spy(fn, reps=5, warmup=2, **kw):
+        calls.append((reps, warmup))
+        return real(fn, reps=reps, warmup=warmup, **kw)
+
+    monkeypatch.setattr(timing, "time_min_of_n", spy)
+    out = _measure(lambda: None, reps=3, warmup=1)
+    assert calls == [(3, 1)] and out >= 0.0
+
+
+# -------------------------------------------------------------------------
+# Ledger feedback into the online re-selection
+# -------------------------------------------------------------------------
+
+def test_select_distributed_feedback_flips_choice():
+    from repro import obs
+    from repro.core import PlanSpec, matrix_stats
+    from repro.core.selector import select_distributed
+    stats = matrix_stats(_coo())
+    spec = PlanSpec(num_devices=8)
+    base = select_distributed(stats, k=32, spec=spec)
+    # rig the ledger: the modeled winner measured 1000x worse than modeled
+    ledger = obs.ResidualLedger()
+    ledger.record("rig", 1000.0, 1.0, **obs.choice_labels(
+        schedule=base.schedule, num_chunks=base.num_chunks,
+        mesh_shape=base.mesh_shape, compact_x=base.compact_x))
+    redo = select_distributed(stats, k=32, spec=spec, feedback=ledger)
+    assert redo != base, "a 1000x residual on the winner must flip it"
+    # and the flip respects pins: pin the old winner's knobs, it stays
+    pinned = select_distributed(stats, k=32, feedback=ledger,
+                                spec=dataclasses.replace(
+                                    spec, schedule=base.schedule,
+                                    mesh_shape=base.mesh_shape,
+                                    num_chunks=base.num_chunks,
+                                    compact_x=base.compact_x))
+    assert (pinned.schedule, pinned.mesh_shape) == \
+        (base.schedule, base.mesh_shape)
+
+
+# -------------------------------------------------------------------------
+# SparseOperator: oracle equivalence and the atomic swap
+# -------------------------------------------------------------------------
+
+def test_sparse_operator_matches_oracle_across_swaps():
+    import jax.numpy as jnp
+    from repro.core import PlanSpec
+    from repro.core.selector import ZERO_CONVERSION_ALGO
+    from repro.spmm import SparseOperator, spmm_coo
+    coo = _coo()
+    op = SparseOperator.from_coo(
+        coo, PlanSpec(num_devices=1, algorithm=ZERO_CONVERSION_ALGO),
+        impl="ref")
+    rng = np.random.default_rng(3)
+    X = jnp.asarray(rng.standard_normal((coo.shape[1], 8)).astype(
+        np.float32))
+    x1 = jnp.asarray(rng.standard_normal(coo.shape[1]).astype(np.float32))
+    yo = np.asarray(spmm_coo(coo, X))
+    pre = np.asarray(op.matmul(X))
+    np.testing.assert_allclose(pre, yo, rtol=1e-5, atol=1e-4)
+    assert op.matmul(x1).ndim == 1      # SpMV rides along
+    assert op.plan.spec.algorithm == ZERO_CONVERSION_ALGO
+    op.swap(PlanSpec(num_devices=1, algorithm="sellcs"))
+    assert op.plan.spec.algorithm == "sellcs"
+    post = np.asarray(op @ X)
+    np.testing.assert_allclose(post, yo, rtol=1e-5, atol=1e-4)
+    # multiplies count SpMV-equivalents (served columns), the break-even
+    # unit; swaps and calls are bookkept too
+    assert op.stats.multiplies == 8 + 1 + 8
+    assert op.stats.calls == 3 and op.stats.swaps == 1
+    assert op.stats.last_swap_unix_s is not None
+    with pytest.raises(TypeError):
+        op.swap("sellcs")
+
+
+def test_swap_atomicity_under_concurrent_matmul():
+    """Hammer matmul from worker threads while the main thread swaps
+    between two realized plans: every result must be a correct multiply
+    (either plan computes the same matrix), never a torn mix."""
+    import jax.numpy as jnp
+    from repro.core import PlanSpec
+    from repro.spmm import SparseOperator, spmm_coo
+    coo = _coo(200, 180, 1500, seed=7)
+    op = SparseOperator.from_coo(
+        coo, PlanSpec(num_devices=1, algorithm="merge"), impl="ref")
+    plan_a = op.plan
+    plan_b = op.realize(PlanSpec(num_devices=1, algorithm="sellcs"))
+    X = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (coo.shape[1], 4)).astype(np.float32))
+    yo = np.asarray(spmm_coo(coo, X))
+    errors, results = [], []
+    stop = threading.Event()
+
+    def hammer():
+        try:
+            while not stop.is_set():
+                results.append(np.asarray(op.matmul(X)))
+        except Exception as e:           # pragma: no cover - fail signal
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for i in range(60):
+        op.swap(plan_b if i % 2 == 0 else plan_a)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert len(results) > 0 and op.stats.swaps == 60
+    for y in results:
+        np.testing.assert_allclose(y, yo, rtol=1e-5, atol=1e-4)
+
+
+def test_operator_mesh_swap_reuses_partitions():
+    """On an 8-device mesh: realize/swap across chunk depths stays
+    bitwise-stable against the oracle, and a chunks-only change reuses
+    the cached base partition (rechunk, not repartition)."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import PlanSpec, to_coo
+from repro.data import matrices
+from repro.spmm import SparseOperator, spmm_coo
+coo = to_coo(*matrices.uniform(400, 400, 3000, 0))
+op = SparseOperator.from_coo(coo, PlanSpec(num_devices=8), impl="ref")
+X = jnp.asarray(np.random.default_rng(1).standard_normal(
+    (400, 8)).astype(np.float32))
+yo = np.asarray(spmm_coo(coo, X))
+np.testing.assert_allclose(np.asarray(op @ X), yo, rtol=1e-5, atol=1e-4)
+m2 = op.swap(PlanSpec(num_devices=8, mesh_shape=(8, 1), schedule="merge",
+                      num_chunks=4))
+assert m2.spec.num_chunks == 4, m2.spec
+np.testing.assert_allclose(np.asarray(op @ X), yo, rtol=1e-5, atol=1e-4)
+base_ids = {k: id(v) for k, v in op._cache.partitions.items()}
+m3 = op.swap(PlanSpec(num_devices=8, mesh_shape=(8, 1), schedule="merge",
+                      num_chunks=2))
+assert m3.spec.num_chunks == 2, m3.spec
+assert {k: id(v) for k, v in op._cache.partitions.items()} == base_ids
+np.testing.assert_allclose(np.asarray(op @ X), yo, rtol=1e-5, atol=1e-4)
+assert op.stats.swaps == 2
+print("MESH_SWAP_OK")
+"""))
+
+
+# -------------------------------------------------------------------------
+# serve --migrate end-to-end
+# -------------------------------------------------------------------------
+
+def test_serve_migrate_below_breakeven_never_converts(tmp_path):
+    """[ISSUE acceptance] traffic below the break-even must never trigger
+    a conversion in auto mode — and every served column is counted."""
+    from repro.launch import serve
+    path = str(tmp_path / "m.json")
+    serve.main(["--mode", "spmv", "--matrix", "mawi_like", "--requests",
+                "8", "--max-batch", "4", "--impl", "ref", "--reps", "1",
+                "--migrate", "auto", "--metrics", path])
+    doc = json.loads(open(path).read())
+    counters = {c["name"]: c["value"] for c in doc["counters"]}
+    gauges = {g["name"]: g["value"] for g in doc["gauges"]}
+    assert counters.get("serve/plan_swaps", 0) == 0
+    assert counters["serve/multiplies_total"] == 8
+    assert "serve/breakeven_estimate" in gauges
+    import benchmarks.smoke_check as sk
+    assert sk.check_migration(doc, "m.json") == []
+    assert sk.check_obs_document(doc, "m.json") == []
+
+
+def test_serve_migrate_force_swaps_single_device(tmp_path):
+    from repro.launch import serve
+    path = str(tmp_path / "m.json")
+    serve.main(["--mode", "spmv", "--matrix", "mawi_like", "--requests",
+                "16", "--max-batch", "4", "--impl", "ref", "--reps", "1",
+                "--migrate", "force", "--metrics", path])
+    doc = json.loads(open(path).read())
+    counters = {c["name"]: c["value"] for c in doc["counters"]}
+    gauges = {g["name"]: g["value"] for g in doc["gauges"]}
+    assert counters["serve/plan_swaps"] >= 1
+    assert counters["serve/multiplies_total"] == 16
+    assert gauges["serve/convert_s"] > 0
+    assert math.isfinite(gauges["serve/breakeven_estimate"])
+    assert gauges["serve/breakeven_estimate"] > 0
+    assert doc["labels"]["migrate"] == "force"
+    import benchmarks.smoke_check as sk
+    assert sk.check_migration(doc, "m.json") == []
+    assert sk.check_obs_document(doc, "m.json") == []
+
+
+def test_serve_migrate_rejects_pinned_algorithm():
+    from repro.launch import serve
+    with pytest.raises(SystemExit):
+        serve.main(["--mode", "spmv", "--matrix", "mawi_like",
+                    "--requests", "8", "--migrate", "auto",
+                    "--algorithm", "csb"])
+
+
+def test_serve_migrate_force_mesh_8dev(tmp_path):
+    """[CI acceptance] the bench-smoke scenario: forced migration onto an
+    8-device mesh, decision inputs in the metrics doc, smoke gate green."""
+    path = str(tmp_path / "mesh.json")
+    run_sub(f"""
+from repro.launch import serve
+serve.main(["--mode", "spmv", "--matrix", "mawi_like", "--requests", "32",
+            "--max-batch", "8", "--devices", "8", "--impl", "ref",
+            "--reps", "1", "--migrate", "force", "--metrics", {path!r}])
+""")
+    doc = json.loads(open(path).read())
+    counters = {c["name"]: c["value"] for c in doc["counters"]}
+    assert counters["serve/plan_swaps"] >= 1
+    assert counters["serve/multiplies_total"] >= 32
+    import benchmarks.smoke_check as sk
+    assert sk.check_migration(doc, str(path)) == []
+    assert sk.check_obs_document(doc, str(path)) == []
+    assert sk.main([str(path)]) == 0
+
+
+# -------------------------------------------------------------------------
+# smoke_check.check_migration unit gates
+# -------------------------------------------------------------------------
+
+def _doc(labels=None, counters=(), gauges=(), hists=()):
+    return {"schema": "repro.obs/v1", "labels": labels or {},
+            "counters": [{"name": n, "value": v} for n, v in counters],
+            "gauges": [{"name": n, "value": v} for n, v in gauges],
+            "histograms": list(hists), "residuals": []}
+
+
+def test_check_migration_disarmed_without_label():
+    import benchmarks.smoke_check as sk
+    assert sk.check_migration(_doc(labels={"migrate": "off"}), "x") == []
+    assert sk.check_migration(_doc(), "x") == []
+
+
+def test_check_migration_gates():
+    import benchmarks.smoke_check as sk
+    ok_auto = _doc(labels={"migrate": "auto", "requests": "8"},
+                   counters=[("serve/multiplies_total", 8.0)],
+                   gauges=[("serve/breakeven_estimate", math.inf)])
+    # auto may honestly never convert; an inf estimate is legitimate
+    assert sk.check_migration(ok_auto, "x") == []
+    # undercounted traffic fails
+    short = _doc(labels={"migrate": "auto", "requests": "8"},
+                 counters=[("serve/multiplies_total", 4.0)],
+                 gauges=[("serve/breakeven_estimate", 10.0)])
+    assert any("uncounted" in p for p in sk.check_migration(short, "x"))
+    # a missing counter fails
+    missing = _doc(labels={"migrate": "auto", "requests": "8"},
+                   gauges=[("serve/breakeven_estimate", 10.0)])
+    assert any("never counted" in p
+               for p in sk.check_migration(missing, "x"))
+    # force without a landed swap / measured conversion fails on each gate
+    noswap = _doc(labels={"migrate": "force", "requests": "8"},
+                  counters=[("serve/multiplies_total", 8.0)],
+                  gauges=[("serve/breakeven_estimate", math.inf)])
+    probs = sk.check_migration(noswap, "x")
+    assert any("never landed" in p for p in probs)
+    assert any("convert_s" in p for p in probs)
+    assert any("breakeven_estimate" in p for p in probs)
+    ok_force = _doc(labels={"migrate": "force", "requests": "8"},
+                    counters=[("serve/multiplies_total", 8.0),
+                              ("serve/plan_swaps", 1.0)],
+                    gauges=[("serve/breakeven_estimate", 12.0),
+                            ("serve/swap_unix_s", 1.7e9),
+                            ("serve/convert_s", 0.01)])
+    assert sk.check_migration(ok_force, "x") == []
+
+
+def test_check_migration_latency_gate_cpu_disarmed():
+    import benchmarks.smoke_check as sk
+    hist = [{"name": "serve/flush_premigrate_s", "count": 3, "sum": 0.003,
+             "min": 0.001, "max": 0.001, "mean": 0.001, "p50": 0.001,
+             "p95": 0.001, "p99": 0.001},
+            {"name": "serve/flush_postmigrate_s", "count": 3, "sum": 3.0,
+             "min": 1.0, "max": 1.0, "mean": 1.0, "p50": 1.0, "p95": 1.0,
+             "p99": 1.0}]
+    base = dict(labels={"migrate": "force", "requests": "8"},
+                counters=[("serve/multiplies_total", 8.0),
+                          ("serve/plan_swaps", 1.0)],
+                gauges=[("serve/breakeven_estimate", 12.0),
+                        ("serve/swap_unix_s", 1.7e9),
+                        ("serve/convert_s", 0.01)])
+    cpu = _doc(**base)
+    cpu["labels"]["backend"] = "cpu"
+    cpu["histograms"] = hist
+    assert sk.check_migration(cpu, "x") == []   # cpu: disarmed
+    tpu = _doc(**base)
+    tpu["labels"] = dict(tpu["labels"], backend="tpu", migrate="force")
+    tpu["histograms"] = [dict(h) for h in hist]
+    probs = sk.check_migration(tpu, "x")
+    assert any("made serving slower" in p for p in probs)

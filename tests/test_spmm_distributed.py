@@ -454,3 +454,47 @@ def test_distributed_schedule_mismatch_raises():
     sharded = partition_sellcs_rows(sc, 1)
     with pytest.raises(ValueError, match="schedule"):
         spmm_merge_distributed(sharded, np.ones((4, 2), np.float32), mesh)
+
+
+def test_rechunk_sellcs_equals_partition_time_plan():
+    """rechunk_sellcs (the SparseOperator swap path's partition reuse) must
+    bake exactly the chunk plan partition_sellcs_nnz would have baked at
+    partition time, for every depth — and reject non-merge partitions."""
+    import pytest
+    from repro.core import to_coo
+    from repro.data import matrices
+    from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                            partition_sellcs_rows, rechunk_sellcs)
+    coo = to_coo(*matrices.mawi_like(300, 280, 2500, 0.3, 1))
+    sc = coo_to_sellcs(coo, c=8, sigma=32)
+    for compact in (False, True):
+        base = partition_sellcs_nnz(sc, 4, compact_x=compact)
+        assert base.chunk_plan is None
+        for nc in (2, 4):
+            re = rechunk_sellcs(base, nc)
+            fresh = partition_sellcs_nnz(sc, 4, num_chunks=nc,
+                                         compact_x=compact)
+            assert re.chunk_plan is not None
+            assert re.chunk_plan[0] == fresh.chunk_plan[0] == nc
+            # span count may clamp below nc when slices run out; the two
+            # paths must clamp identically. col_map/n_touched are arrays
+            # when compact, None otherwise
+            assert len(re.chunk_plan[1]) == len(fresh.chunk_plan[1])
+            for got, want in zip(re.chunk_plan[1], fresh.chunk_plan[1]):
+                # _ChunkSpan fields mix ints and arrays — compare each
+                for g, w in zip(got, want):
+                    np.testing.assert_array_equal(np.asarray(g),
+                                                  np.asarray(w))
+            for got, want in zip(re.chunk_plan[2:], fresh.chunk_plan[2:]):
+                assert (got is None) == (want is None)
+                if got is not None:
+                    np.testing.assert_array_equal(np.asarray(got),
+                                                  np.asarray(want))
+        # idempotence: same depth returns the same object, depth 1 strips
+        re4 = rechunk_sellcs(base, 4)
+        assert rechunk_sellcs(re4, 4) is re4
+        assert rechunk_sellcs(re4, 1).chunk_plan is None
+    with pytest.raises(ValueError, match="merge"):
+        rechunk_sellcs(partition_sellcs_rows(sc, 4), 2)
+    with pytest.raises(ValueError):
+        rechunk_sellcs(partition_sellcs_nnz(sc, 4), 0)
