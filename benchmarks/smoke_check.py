@@ -89,6 +89,19 @@ saving was found. The pre/post-migration flush latency comparison
 forced swap can land after the last flush, and a host-platform mesh's
 latencies do not reflect the byte model the migration optimizes.
 
+Fleet rule (the serve-SLO gate): a document whose base labels carry
+``mode=fleet`` (``launch.serve --mode fleet``) must show every tenant
+actually served — a non-empty per-tenant ``fleet/flush_s`` histogram and
+a per-tenant ``batcher/served`` counter of at least the stamped
+``requests`` label (the flush stream never drops a queued request). When
+the ``fail_device`` label is set, the device loss must have been handled
+mid-stream: ``fleet/device_losses`` >= 1, at least one ``fleet/redeal_s``
+re-deal latency observation, and at least one tenant with post-loss
+flushes (``fleet/flush_postloss_s``). The SLO-attainment latency check
+(per-tenant p50 flush within the ``slo_ms`` budget) is armed only off
+``backend=cpu`` — host-platform flush latencies are compile- and
+dispatch-dominated, not the byte economics the SLO budget prices.
+
 ``spmvs_to_amortize=inf`` and friends are legitimate (a format that never
 breaks even), so only the keys named above are validated.
 """
@@ -235,6 +248,88 @@ def check_obs_document(doc: dict, origin: str) -> List[str]:
             continue
         problems.extend(_check_residual_value(float(v), backend, name))
     problems.extend(check_migration(doc, origin))
+    problems.extend(check_slo(doc, origin))
+    return problems
+
+
+def check_slo(doc: dict, origin: str) -> List[str]:
+    """The serve-SLO gate over a ``launch.serve --mode fleet`` run's
+    document. Armed only when the base labels carry ``mode=fleet`` (any
+    other document passes untouched)."""
+    labels = doc.get("labels", {})
+    if labels.get("mode") != "fleet":
+        return []
+    problems = []
+    try:
+        tenants = int(labels.get("tenants", ""))
+    except (TypeError, ValueError):
+        return [f"{origin}: mode=fleet but the tenants label is missing "
+                "or not an int"]
+    try:
+        requests = float(labels.get("requests", "nan"))
+    except (TypeError, ValueError):
+        requests = math.nan
+
+    def by_tenant(coll):
+        # per-series lookup on (name, tenant label); fleet-wide series
+        # carry no tenant key and land under (name, None)
+        return {(s.get("name"), s.get("labels", {}).get("tenant")): s
+                for s in doc.get(coll, [])}
+
+    counters = by_tenant("counters")
+    hists = by_tenant("histograms")
+    try:
+        slo_s = float(labels.get("slo_ms", "nan")) / 1e3
+    except (TypeError, ValueError):
+        slo_s = math.nan
+    gate_latency = labels.get("backend") not in (None, "cpu")
+    for i in range(tenants):
+        t = f"t{i}"
+        h = hists.get(("fleet/flush_s", t))
+        if not (h and h.get("count")):
+            problems.append(f"{origin}: tenant {t}: fleet/flush_s "
+                            "histogram missing or empty — the tenant "
+                            "never served a flush")
+            continue
+        served = counters.get(("batcher/served", t), {}).get("value")
+        if not isinstance(served, (int, float)) or \
+                not math.isfinite(served):
+            problems.append(f"{origin}: tenant {t}: batcher/served "
+                            "counter missing — served requests went "
+                            "uncounted")
+        elif math.isfinite(requests) and served < requests:
+            problems.append(f"{origin}: tenant {t}: served={served:g} < "
+                            f"requests={requests:g} — the flush stream "
+                            "dropped queued requests")
+        p50 = h.get("p50")
+        if gate_latency and math.isfinite(slo_s) and \
+                isinstance(p50, (int, float)) and math.isfinite(p50) and \
+                p50 > slo_s:
+            problems.append(f"{origin}: tenant {t}: p50 flush latency "
+                            f"{p50:.4g}s exceeds the slo_ms budget "
+                            f"({slo_s:.4g}s) on backend="
+                            f"{labels.get('backend')}")
+    fail = labels.get("fail_device", "")
+    if fail not in ("", "none", "None", None):
+        losses = counters.get(("fleet/device_losses", None),
+                              {}).get("value")
+        if not (isinstance(losses, (int, float)) and losses >= 1):
+            problems.append(f"{origin}: fail_device={fail} but "
+                            f"fleet/device_losses={losses!r} — the "
+                            "injected loss was never handled")
+        redeals = sum(int(h.get("count") or 0)
+                      for (name, _), h in hists.items()
+                      if name == "fleet/redeal_s")
+        if redeals < 1:
+            problems.append(f"{origin}: fail_device={fail} but no "
+                            "fleet/redeal_s observation — no plan was "
+                            "re-dealt across the survivors")
+        post = any(h.get("count") for (name, _), h in hists.items()
+                   if name == "fleet/flush_postloss_s")
+        if not post:
+            problems.append(f"{origin}: fail_device={fail} but every "
+                            "fleet/flush_postloss_s histogram is empty — "
+                            "nothing was served after the loss")
     return problems
 
 

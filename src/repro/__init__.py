@@ -17,8 +17,11 @@ Module map
                      (``distributed``) — and ``SparseOperator``
                      (``operator``): the stable partition-once/
                      multiply-many handle whose atomic plan swap carries
-                     the serve path's online format migration. SpMV is
-                     the k = 1 special case.
+                     the serve path's online format migration, and
+                     ``Fleet`` (``fleet``): the multi-tenant operator
+                     registry — fingerprint-keyed plan cache, device-loss
+                     re-deal via ``redeal_sellcs``. SpMV is the k = 1
+                     special case.
 ``repro.kernels``    Pallas TPU kernels for the single-vector compute
                      paths: blocked SpMV (``bsr_spmv``), merge-path SpMV
                      (``merge_spmv``), MoE grouped GEMM, plus the
@@ -40,10 +43,18 @@ Module map
                      ``launch.serve --mode spmv`` drives the SpMM request
                      batcher through one ``SparseOperator`` handle, with
                      ``--migrate auto|force`` running the online
-                     break-even format migration behind it.
+                     break-even format migration behind it;
+                     ``--mode fleet`` serves N tenants through a
+                     ``Fleet`` + ``FleetBatcher`` front end and survives
+                     an injected mid-stream device loss.
 ``repro.optim``      optimizers.
 ``repro.checkpoint`` checkpointing.
-``repro.runtime``    elasticity + fault tolerance.
+``repro.runtime``    elasticity + fault tolerance: ``elastic`` rebuilds
+                     meshes from the live device set
+                     (``largest_feasible_mesh``, the guard-checked
+                     ``reshard``) and ``fault_tolerance`` watches step
+                     times (``StragglerMonitor``) — both wired into the
+                     serve fleet's device-loss path.
 ``repro.compat``     shims over jax/Pallas API renames.
 
 Submodules import lazily (nothing heavy happens at ``import repro``).

@@ -41,6 +41,19 @@ land in the metrics document: ``serve/multiplies_total``,
 ``serve/swap_at_multiply``, ``serve/convert_s`` and the pre/post-swap
 flush histograms.
 
+Fleet mode — ``--mode fleet --tenants N`` serves N matrices from one
+process through a :class:`repro.spmm.Fleet` (fingerprint-keyed plan cache;
+returning tenants skip partitioning) and a
+:class:`repro.spmm.FleetBatcher` (per-tenant queues; flushes scheduled by
+SLO-deadline urgency × batch-efficiency under ``--slo-ms``).
+``--fail-device auto`` kills a data-shard device mid-stream: the fleet
+re-deals the lost shard's width-row spans across the survivors
+(``redeal_sellcs`` — no re-conversion) and keeps serving:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --mode fleet --tenants 3 --slo-ms 50 \
+      --matrix mawi_like --devices 8 --impl ref --fail-device auto \
+      --metrics BENCH_serve_slo.json
+
 Observability — ``--metrics out.json`` installs a ``repro.obs`` registry
 for the run and dumps it at the end: per-flush phase spans (the
 ``batcher/*`` series plus, on a mesh, an eager phase-profile pass through
@@ -515,9 +528,176 @@ def _print_traffic_model(sp, n_touched, stats, args):
               "chunk(s) pipelined under the slice stream")
 
 
+def _fleet_target_spec(args, mesh_shape):
+    """The same distributed-knob plumbing serve_spmv uses, shared by every
+    tenant registration."""
+    from repro.core import PlanSpec
+    compact = {"auto": None, "on": True, "off": False}[args.compact_x]
+    if args.devices > 1:
+        return PlanSpec(num_devices=args.devices,
+                        mesh_shape=mesh_shape or (args.devices, 1),
+                        num_chunks=args.chunks if args.chunks > 0 else None,
+                        compact_x=compact, algorithm="sellcs")
+    return PlanSpec(num_devices=1, algorithm="sellcs")
+
+
+def serve_fleet(args):
+    """Multi-tenant fault-tolerant serving: N tenants over a
+    :class:`repro.spmm.Fleet` (fingerprint-keyed plan cache — tenants
+    cycle over two distinct matrices, so with >= 3 tenants at least one
+    registration is a cache hit) fronted by a
+    :class:`repro.spmm.FleetBatcher` whose scheduler picks each flush by
+    SLO-deadline urgency × batch-efficiency. ``--fail-device`` kills one
+    data-shard device mid-stream: the fleet re-deals every distributed
+    tenant's width-row stream across the survivors
+    (``SparseOperator.shrink_to`` → ``redeal_sellcs``) and keeps serving;
+    every request queued before, during and after the loss is answered
+    and checked against the COO oracle. Per-tenant flush latency lands in
+    ``fleet/flush_s`` (split ``fleet/flush_preloss_s`` /
+    ``fleet/flush_postloss_s`` around the loss) — the
+    ``BENCH_serve_slo.json`` series ``smoke_check.check_slo`` gates."""
+    from repro import obs
+    from repro.data import matrices
+    from repro.spmm import Fleet, FleetBatcher, spmm_coo
+
+    if args.tenants < 1:
+        raise SystemExit("--tenants must be >= 1")
+    suite = matrices.test_suite(scale=args.scale)
+    if args.matrix not in suite:
+        raise SystemExit(f"--matrix must be one of {sorted(suite)}")
+    # two distinct matrices cycled across the tenants: same-matrix tenants
+    # exercise the fingerprint plan cache, the other matrix proves the
+    # fleet really multiplexes independent operators
+    alt = "hhh_like" if args.matrix != "hhh_like" else "road_like"
+    names = [args.matrix, alt]
+    mesh_shape = None
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh_shape
+        mesh_shape = parse_mesh_shape(args.mesh)
+        args.devices = mesh_shape[0] * mesh_shape[1]
+    if args.devices > 1 and len(jax.devices()) < args.devices:
+        raise SystemExit(
+            f"the mesh needs {args.devices} devices but jax sees only "
+            f"{len(jax.devices())}; on CPU set XLA_FLAGS=--xla_force_"
+            f"host_platform_device_count={args.devices} before launching")
+    per_tenant = max(1, args.requests // args.tenants)
+    fail_device = None
+    if args.fail_device is not None:
+        fail_device = (args.devices - 1 if args.fail_device == "auto"
+                       else int(args.fail_device))
+        if args.devices <= 1:
+            raise SystemExit("--fail-device needs a --devices mesh")
+
+    reg = None
+    if args.metrics:
+        reg = obs.install(obs.MetricRegistry(
+            backend=jax.default_backend(), mode="fleet",
+            matrix=args.matrix, devices=args.devices,
+            max_batch=args.max_batch, tenants=args.tenants,
+            slo_ms=args.slo_ms, requests=per_tenant,
+            fail_device="" if fail_device is None else fail_device))
+
+    spec = _fleet_target_spec(args, mesh_shape)
+    fleet = Fleet(impl=args.impl)
+    front = FleetBatcher()
+    coos = {}
+    for i in range(args.tenants):
+        tenant = f"t{i}"
+        coo = matrices.as_coo(suite[names[i % len(names)]].make())
+        coos[tenant] = coo
+        op = fleet.register(tenant, coo, spec, k_hint=args.max_batch,
+                            num_spmvs=-(-per_tenant // args.max_batch))
+        front.add_tenant(tenant, op, max_batch=args.max_batch,
+                         slo_s=args.slo_ms / 1e3,
+                         max_pending=args.max_pending or None,
+                         overflow="block")
+        print(f"[serve-fleet] {tenant}: {names[i % len(names)]} "
+              f"plan={op.plan.label} builds="
+              f"(sellcs={op.stats.sellcs_builds}, "
+              f"partition={op.stats.partition_builds})")
+    print(f"[serve-fleet] plan cache: {fleet.stats.plan_cache_hits} hits, "
+          f"{fleet.stats.plan_cache_misses} misses over "
+          f"{fleet.stats.registered} registrations")
+
+    rng = np.random.default_rng(args.seed)
+    sent = {}                                # (tenant, rid) -> x
+    for j in range(per_tenant):
+        for i in range(args.tenants):
+            tenant = f"t{i}"
+            x = jnp.asarray(rng.standard_normal(
+                coos[tenant].shape[1]).astype(np.float32))
+            rid = front.submit(tenant, x)
+            sent[(tenant, rid)] = x
+
+    total = per_tenant * args.tenants
+    half = total // 2
+    served = 0
+    lost = False
+    results = {}                             # (tenant, rid) -> y
+    while front.total_pending:
+        if fail_device is not None and not lost and served >= half:
+            t0 = time.perf_counter()
+            redone = fleet.handle_device_loss([fail_device])
+            dt = time.perf_counter() - t0
+            lost = True
+            print(f"[serve-fleet] device {fail_device} lost after "
+                  f"{served}/{total} served — re-dealt "
+                  f"{len(redone)} tenant plan(s) across "
+                  f"{args.devices - 1} survivors in {dt*1e3:.1f} ms")
+        t0 = time.perf_counter()
+        tenant, out = front.flush_next()
+        if tenant is None:
+            break
+        jax.block_until_ready(list(out.values()))
+        dt = time.perf_counter() - t0
+        served += len(out)
+        for rid, y in out.items():
+            results[(tenant, rid)] = y
+        fleet.observe_flush(tenant, dt)
+        if reg is not None:
+            lab = {"tenant": tenant}
+            reg.histogram("fleet/flush_s", lab).observe(dt)
+            phase = ("fleet/flush_postloss_s" if lost
+                     else "fleet/flush_preloss_s")
+            reg.histogram(phase, lab).observe(dt)
+
+    # the no-drop + correctness contract: every queued request answered,
+    # every answer equal to the COO oracle of its tenant's matrix —
+    # including everything served after the device loss
+    assert len(results) == total, (len(results), total)
+    for (tenant, rid), x in sent.items():
+        y_ref = spmm_coo(coos[tenant], x[:, None])[:, 0]
+        np.testing.assert_allclose(np.asarray(results[(tenant, rid)]),
+                                   np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+    print(f"[serve-fleet] {total} requests served across "
+          f"{args.tenants} tenants, all oracle-checked"
+          + (" (incl. post-loss traffic)" if lost else ""))
+
+    for i in range(args.tenants):
+        tenant = f"t{i}"
+        lane = front.lane(tenant)
+        line = (f"[serve-fleet] {tenant}: served={lane.served} "
+                f"flushes={lane.flushes} "
+                f"slo_violations={lane.slo_violations}")
+        if reg is not None:
+            h = reg.histogram("fleet/flush_s", {"tenant": tenant})
+            if h.count:
+                p = h.percentiles()
+                line += (f" | flush p50 {p['p50']*1e3:.2f} ms "
+                         f"p95 {p['p95']*1e3:.2f} ms "
+                         f"p99 {p['p99']*1e3:.2f} ms")
+        print(line)
+    if reg is not None:
+        reg.dump(args.metrics)
+        print(f"[serve-fleet] metrics -> {args.metrics}")
+        obs.uninstall()
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("lm", "spmv"), default="lm")
+    ap.add_argument("--mode", choices=("lm", "spmv", "fleet"), default="lm")
     ap.add_argument("--arch")
     # spmv-mode arguments (repro.spmm request batching)
     ap.add_argument("--matrix", default="mawi_like")
@@ -565,6 +745,24 @@ def main(argv=None):
     ap.add_argument("--reps", type=int, default=5,
                     help="min-of-N repetitions for the headline batched-vs-"
                          "sequential timing (the paper's §5.2 protocol)")
+    # fleet-mode arguments (multi-tenant serving with device-loss re-deal)
+    ap.add_argument("--tenants", type=int, default=3,
+                    help="fleet mode: number of tenants; they cycle over "
+                         "two distinct matrices so >= 3 tenants exercise "
+                         "the fingerprint plan cache")
+    ap.add_argument("--slo-ms", type=float, default=50.0, dest="slo_ms",
+                    help="fleet mode: per-request latency budget driving "
+                         "the cross-tenant flush scheduler (urgency = "
+                         "oldest queue wait / budget)")
+    ap.add_argument("--fail-device", default=None, dest="fail_device",
+                    help="fleet mode: kill this device index midway "
+                         "through the stream ('auto' = the last mesh "
+                         "device) and re-deal its spans across survivors")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    dest="max_pending",
+                    help="fleet mode: per-tenant queue bound (0 = "
+                         "unbounded); submits past it block until a flush "
+                         "makes room")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -574,6 +772,8 @@ def main(argv=None):
 
     if args.mode == "spmv":
         return serve_spmv(args)
+    if args.mode == "fleet":
+        return serve_fleet(args)
     if not args.arch:
         ap.error("--arch is required in lm mode")
 

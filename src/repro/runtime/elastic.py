@@ -39,12 +39,21 @@ def largest_feasible_mesh(num_devices: int, model_parallel: int,
 
 def reshard(tree: Any, mesh: Mesh, spec_fn: Callable[[str, Any],
             PartitionSpec]) -> Any:
-    """Re-place every leaf under ``mesh`` with rule-derived specs."""
-    flat = jax.tree_util.tree_flatten_with_path(tree)
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    """Re-place every leaf under ``mesh`` with rule-derived specs. A spec
+    naming an axis the target mesh does not carry (a rule written for the
+    pre-shrink mesh) is rejected up front — ``device_put`` would otherwise
+    fail deep inside XLA with an unhelpful message."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
-    for (path, leaf) in flat[0]:
+    for (path, leaf) in flat:
         key = "/".join(str(p) for p in path)
         spec = spec_fn(key, leaf)
+        for entry in spec:
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for name in names:
+                if name is not None and name not in mesh.axis_names:
+                    raise ValueError(
+                        f"spec for {key!r} names axis {name!r}, but the "
+                        f"target mesh only has {tuple(mesh.axis_names)}")
         out.append(jax.device_put(leaf, NamedSharding(mesh, spec)))
     return jax.tree_util.tree_unflatten(treedef, out)

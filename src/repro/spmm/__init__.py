@@ -9,6 +9,8 @@ Layers (one module each):
   ``distributed``  shard_map schedules over a mesh (row bands / merge spans)
   ``operator``   SparseOperator: the stable partition-once/multiply-many
                  handle with an atomic plan swap (online format migration)
+  ``fleet``      Fleet: multi-tenant operator registry — fingerprint-keyed
+                 plan cache, device-loss re-deal onto the survivors
 
 SpMV is the k = 1 special case throughout; ``repro.core.spmv`` remains the
 single-vector entry point and routes SELL-C-σ matrices here.
@@ -21,12 +23,16 @@ import jax
 
 from repro.core.formats import COO, CSR, BlockedSparse
 from . import reference
-from .batching import RequestBatcher, SpmvRequest, batch_spmv
+from .batching import (FleetBatcher, QueueFull, RequestBatcher,
+                       SpmvRequest, batch_spmv)
 from .distributed import (ShardedSellCS, partition_sellcs_nnz,
                           partition_sellcs_rows, rechunk_sellcs,
-                          spmm_merge_distributed, spmm_row_distributed)
+                          redeal_sellcs, spmm_merge_distributed,
+                          spmm_row_distributed)
 from .kernels import choose_k_tile, csr_spmm, sellcs_spmm, tiled_spmm
-from .operator import OperatorStats, RealizedPlan, SparseOperator
+from .operator import (OperatorStats, RealizedPlan, SparseOperator,
+                       coo_fingerprint)
+from .fleet import Fleet, FleetStats
 from .reference import (spmm_blocked, spmm_coo, spmm_csr, spmm_ref,
                         spmm_sellcs)
 from .sellcs import SellCS, coo_to_sellcs
@@ -66,9 +72,12 @@ __all__ = [
     "SellCS", "coo_to_sellcs", "spmm", "choose_k_tile",
     "tiled_spmm", "csr_spmm", "sellcs_spmm",
     "spmm_ref", "spmm_coo", "spmm_csr", "spmm_blocked", "spmm_sellcs",
-    "RequestBatcher", "SpmvRequest", "batch_spmv", "reference",
+    "RequestBatcher", "FleetBatcher", "QueueFull", "SpmvRequest",
+    "batch_spmv", "reference",
     "ShardedSellCS", "partition_sellcs_rows", "partition_sellcs_nnz",
-    "rechunk_sellcs", "spmm_row_distributed", "spmm_merge_distributed",
-    "SparseOperator", "RealizedPlan", "OperatorStats",
+    "rechunk_sellcs", "redeal_sellcs",
+    "spmm_row_distributed", "spmm_merge_distributed",
+    "SparseOperator", "RealizedPlan", "OperatorStats", "coo_fingerprint",
+    "Fleet", "FleetStats",
     "COO", "CSR", "BlockedSparse",
 ]

@@ -188,6 +188,56 @@ def _pack_maps(touched):
     return col_map, n_touched
 
 
+def _deal_slice_bands(data: np.ndarray, cols: np.ndarray,
+                      slice_of: np.ndarray, slice_ptr: np.ndarray,
+                      num_devices: int, C: int):
+    """The BCOH deal over a global width-row stream: contiguous slice
+    bands balanced by width-row count (``balanced_row_bands`` — slice_ptr
+    IS the cumulative width, so "rows" = slices and "nnz" = width-rows).
+    Slice ids come out LOCAL (rebased per band). Shared by the convert-time
+    partitioner and the device-loss re-deal. Returns
+    ``(D, Cc, So, bounds, Sp, counts)``."""
+    bounds = balanced_row_bands(slice_ptr, num_devices).astype(np.int64)
+    w_start = slice_ptr[bounds]
+    Wp = max(int(np.diff(w_start).max()) if num_devices else 1, 1)
+    Sp = max(int(np.diff(bounds).max()), 1)
+    D = np.zeros((num_devices, Wp, C), data.dtype if data.size else
+                 np.float32)
+    Cc = np.zeros((num_devices, Wp, C), np.int32)
+    So = np.zeros((num_devices, Wp), np.int32)
+    for p in range(num_devices):
+        a, b = int(w_start[p]), int(w_start[p + 1])
+        ln = b - a
+        if ln:
+            D[p, :ln] = data[a:b]
+            Cc[p, :ln] = cols[a:b]
+            So[p, :ln] = (slice_of[a:b] - bounds[p]).astype(np.int32)
+    return D, Cc, So, bounds, Sp, np.diff(w_start)
+
+
+def _deal_width_rows(data: np.ndarray, cols: np.ndarray,
+                     slice_of: np.ndarray, num_devices: int, C: int):
+    """The merge deal over a global width-row stream: equal spans of
+    width-rows regardless of slice boundaries; slice ids stay GLOBAL.
+    Shared by the convert-time partitioner and the device-loss re-deal.
+    Returns ``(D, Cc, So, counts)``."""
+    W = data.shape[0]
+    bounds = (np.arange(num_devices + 1, dtype=np.int64) * W) // num_devices
+    Wp = max(int(np.diff(bounds).max()), 1)
+    D = np.zeros((num_devices, Wp, C), data.dtype if data.size else
+                 np.float32)
+    Cc = np.zeros((num_devices, Wp, C), np.int32)
+    So = np.zeros((num_devices, Wp), np.int32)
+    for p in range(num_devices):
+        a, b = int(bounds[p]), int(bounds[p + 1])
+        ln = b - a
+        if ln:
+            D[p, :ln] = data[a:b]
+            Cc[p, :ln] = cols[a:b]
+            So[p, :ln] = slice_of[a:b].astype(np.int32)
+    return D, Cc, So, np.diff(bounds)
+
+
 def partition_sellcs_rows(sc: SellCS, num_devices: int, *,
                           compact_x: bool = False) -> ShardedSellCS:
     """BCOH banding over the slice stream: contiguous slice ranges balanced
@@ -205,29 +255,10 @@ def partition_sellcs_rows(sc: SellCS, num_devices: int, *,
     _check_devices(num_devices)
     C = sc.chunk
     S = sc.num_slices
-    slice_ptr = np.asarray(sc.slice_ptr, np.int64)
-    data = np.asarray(sc.data)
-    cols = np.asarray(sc.cols)
-    slice_of = np.asarray(sc.slice_of, np.int64)
-    # slice_ptr IS the cumulative width — reuse the paper's band splitter
-    # with "rows" = slices and "nnz" = width-rows.
-    bounds = balanced_row_bands(slice_ptr, num_devices).astype(np.int64)
-    w_start = slice_ptr[bounds]
-    Wp = max(int(np.diff(w_start).max()) if num_devices else 1, 1)
-    Sp = max(int(np.diff(bounds).max()), 1)
-
-    D = np.zeros((num_devices, Wp, C), data.dtype if data.size else
-                 np.float32)
-    Cc = np.zeros((num_devices, Wp, C), np.int32)
-    So = np.zeros((num_devices, Wp), np.int32)
-    for p in range(num_devices):
-        a, b = int(w_start[p]), int(w_start[p + 1])
-        ln = b - a
-        if ln:
-            D[p, :ln] = data[a:b]
-            Cc[p, :ln] = cols[a:b]
-            So[p, :ln] = (slice_of[a:b] - bounds[p]).astype(np.int32)
-    counts = np.diff(w_start)
+    D, Cc, So, bounds, Sp, counts = _deal_slice_bands(
+        np.asarray(sc.data), np.asarray(sc.cols),
+        np.asarray(sc.slice_of, np.int64),
+        np.asarray(sc.slice_ptr, np.int64), num_devices, C)
     col_map = n_touched = None
     if compact_x:
         Cc, cm, nt = _compact_columns(Cc.astype(np.int64), counts)
@@ -265,25 +296,9 @@ def partition_sellcs_nnz(sc: SellCS, num_devices: int, *,
         raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
     C = sc.chunk
     S = sc.num_slices
-    data = np.asarray(sc.data)
-    cols = np.asarray(sc.cols)
-    slice_of = np.asarray(sc.slice_of, np.int64)
-    W = data.shape[0]
-    bounds = (np.arange(num_devices + 1, dtype=np.int64) * W) // num_devices
-    Wp = max(int(np.diff(bounds).max()), 1)
-
-    D = np.zeros((num_devices, Wp, C), data.dtype if data.size else
-                 np.float32)
-    Cc = np.zeros((num_devices, Wp, C), np.int32)
-    So = np.zeros((num_devices, Wp), np.int32)
-    for p in range(num_devices):
-        a, b = int(bounds[p]), int(bounds[p + 1])
-        ln = b - a
-        if ln:
-            D[p, :ln] = data[a:b]
-            Cc[p, :ln] = cols[a:b]
-            So[p, :ln] = slice_of[a:b].astype(np.int32)
-    counts = np.diff(bounds)
+    D, Cc, So, counts = _deal_width_rows(
+        np.asarray(sc.data), np.asarray(sc.cols),
+        np.asarray(sc.slice_of, np.int64), num_devices, C)
     sharded = ShardedSellCS(
         jnp.asarray(D), jnp.asarray(Cc), jnp.asarray(So),
         jnp.zeros((num_devices,), jnp.int32), sc.row_perm,
@@ -338,6 +353,75 @@ def rechunk_sellcs(sharded: ShardedSellCS,
     plan = _chunk_substreams(sharded, nc)
     return sharded._replace(chunk_plan=(nc, plan.spans, plan.col_map,
                                         plan.n_touched))
+
+
+def redeal_sellcs(sharded: ShardedSellCS, num_devices: int, *,
+                  num_chunks: Optional[int] = None) -> ShardedSellCS:
+    """Device-loss re-deal: rebuild an existing partition over a NEW device
+    count without the original ``SellCS``. The global σ-sorted width-row
+    stream is reconstructed from the shards (``_global_stream``: un-relabel
+    a compacted base, globalize "row" slice ids, mask padding via
+    ``row_counts``) and dealt again with the same machinery the convert-time
+    partitioners use — the result is byte-identical to what
+    ``partition_sellcs_rows`` / ``partition_sellcs_nnz`` would have produced
+    from the original stream at ``num_devices``, so a mid-flight shrink
+    (``runtime/elastic``: a device dies, survivors absorb its spans) never
+    pays the σ-sort or the COO→SELL-C-σ conversion again.
+
+    ``compact_x`` state is inherited from the input (the re-dealt ownership
+    gets fresh touched-column maps); ``num_chunks`` defaults to the input's
+    baked chunk depth ("merge" only)."""
+    _check_devices(num_devices)
+    compact = sharded.col_map is not None
+    g_data, g_cols, g_so = _global_stream(sharded)
+    C = sharded.chunk
+    S = sharded.num_slices
+    if sharded.schedule == "row":
+        widths = (np.bincount(g_so, minlength=S) if g_so.size
+                  else np.zeros(S, np.int64))
+        slice_ptr = np.zeros(S + 1, np.int64)
+        np.cumsum(widths, out=slice_ptr[1:])
+        D, Cc, So, bounds, Sp, counts = _deal_slice_bands(
+            g_data, g_cols, g_so, slice_ptr, num_devices, C)
+        col_map = n_touched = None
+        if compact:
+            Cc, cm, nt = _compact_columns(Cc.astype(np.int64), counts)
+            Cc = Cc.astype(np.int32)
+            col_map = jnp.asarray(cm.astype(np.int32))
+            n_touched = jnp.asarray(nt.astype(np.int32))
+        return ShardedSellCS(
+            jnp.asarray(D), jnp.asarray(Cc), jnp.asarray(So),
+            jnp.asarray(bounds[:-1].astype(np.int32)), sharded.row_perm,
+            sharded.shape, C, S, Sp, sharded.nnz, "row",
+            row_counts=jnp.asarray(counts.astype(np.int32)),
+            col_map=col_map, n_touched=n_touched)
+    nc = (int(num_chunks) if num_chunks is not None
+          else (sharded.chunk_plan[0] if sharded.chunk_plan is not None
+                else 1))
+    if nc < 1:
+        raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
+    D, Cc, So, counts = _deal_width_rows(g_data, g_cols, g_so,
+                                         num_devices, C)
+    out = ShardedSellCS(
+        jnp.asarray(D), jnp.asarray(Cc), jnp.asarray(So),
+        jnp.zeros((num_devices,), jnp.int32), sharded.row_perm,
+        sharded.shape, C, S, S, sharded.nnz, "merge",
+        row_counts=jnp.asarray(counts.astype(np.int32)))
+    plan = None
+    if nc > 1:
+        # same ordering as partition_sellcs_nnz: plan baked before the base
+        # relabel, on global column ids
+        plan = _chunk_substreams(out, nc, compact=compact)
+    if compact:
+        Cc2, cm, nt = _compact_columns(Cc.astype(np.int64), counts)
+        out = out._replace(
+            cols=jnp.asarray(Cc2.astype(np.int32)),
+            col_map=jnp.asarray(cm.astype(np.int32)),
+            n_touched=jnp.asarray(nt.astype(np.int32)))
+    if plan is not None:
+        out = out._replace(chunk_plan=(nc, plan.spans, plan.col_map,
+                                       plan.n_touched))
+    return out
 
 
 def _resolve_model_axis(mesh: Mesh, axis: str,
@@ -454,6 +538,41 @@ class _ChunkPlan(NamedTuple):
     n_touched: Optional[jax.Array]   # int32[P]
 
 
+def _global_stream(sharded: ShardedSellCS):
+    """Host-side: flatten a partitioned stream back into the global
+    σ-sorted width-row stream it was dealt from. Device spans are
+    contiguous and ordered, and the partitioner recorded how many REAL
+    width-rows each shard holds. Real vs padding must come from those
+    counts, never from the values — a width-row whose stored entries are
+    all explicit zeros (SellCS.to_coo round-trips them by design) is real
+    work with real column indices, and dropping it silently skews any
+    downstream width accounting.
+
+    A compacted base is un-relabeled through its ``col_map`` (the global
+    stream must carry global column ids); "row" shards carry LOCAL slice
+    ids, which are globalized back through ``slice_offset``. Returns
+    ``(g_data [W', C], g_cols [W', C], g_so [W'])``."""
+    data = np.asarray(sharded.data)                  # [P, Wp, C]
+    cols = np.asarray(sharded.cols)
+    if sharded.col_map is not None:
+        # back to global ids: device p's relabeled cols index its own map
+        cm = np.asarray(sharded.col_map, np.int64)
+        cols = cm[np.arange(cm.shape[0])[:, None, None],
+                  cols.astype(np.int64)]
+    so = np.asarray(sharded.slice_of, np.int64)      # [P, Wp]
+    if sharded.schedule == "row":
+        so = so + np.asarray(sharded.slice_offset, np.int64)[:, None]
+    if sharded.row_counts is None:
+        raise ValueError(
+            "sharded matrix carries no row_counts; rebuild it with "
+            "partition_sellcs_nnz (older ShardedSellCS values cannot be "
+            "chunked — real rows are not derivable from the stored values)")
+    counts = np.asarray(sharded.row_counts, np.int64)          # [P]
+    real = (np.arange(data.shape[1], dtype=np.int64)[None]
+            < counts[:, None])                                 # [P, Wp]
+    return data[real], cols[real], so[real]
+
+
 def _chunk_substreams(sharded: ShardedSellCS, num_chunks: int, *,
                       compact: Optional[bool] = None) -> _ChunkPlan:
     """Host-side: split the σ-sorted slice stream into ``num_chunks``
@@ -479,37 +598,13 @@ def _chunk_substreams(sharded: ShardedSellCS, num_chunks: int, *,
     first un-relabeled through its ``col_map`` — the global stream must
     carry global column ids.
     """
-    data = np.asarray(sharded.data)                  # [P, Wp, C]
-    cols = np.asarray(sharded.cols)
     if compact is None:
         compact = sharded.col_map is not None
-    if sharded.col_map is not None:
-        # back to global ids: device p's relabeled cols index its own map
-        cm = np.asarray(sharded.col_map, np.int64)
-        cols = cm[np.arange(cm.shape[0])[:, None, None],
-                  cols.astype(np.int64)]
-    so = np.asarray(sharded.slice_of, np.int64)      # [P, Wp] global ids
-    Pdev, _, C = data.shape
+    g_data, g_cols, g_so = _global_stream(sharded)
+    Pdev = sharded.data.shape[0]
+    C = sharded.chunk
     S = sharded.num_slices
     nc = int(num_chunks)
-    # Flatten back to the global width-row stream: device spans are
-    # contiguous and ordered, and the partitioner recorded how many REAL
-    # width-rows each shard holds. Real vs padding must come from those
-    # counts, never from the values — a width-row whose stored entries are
-    # all explicit zeros (SellCS.to_coo round-trips them by design) is real
-    # work with real column indices, and dropping it silently skews the
-    # span width accounting below.
-    if sharded.row_counts is None:
-        raise ValueError(
-            "sharded matrix carries no row_counts; rebuild it with "
-            "partition_sellcs_nnz (older ShardedSellCS values cannot be "
-            "chunked — real rows are not derivable from the stored values)")
-    counts = np.asarray(sharded.row_counts, np.int64)          # [P]
-    real = (np.arange(data.shape[1], dtype=np.int64)[None]
-            < counts[:, None])                                 # [P, Wp]
-    g_data = data[real]                              # [W', C] global order
-    g_cols = cols[real]
-    g_so = so[real]
     widths = (np.bincount(g_so, minlength=S) if g_so.size
               else np.zeros(S, np.int64))
     slice_ptr = np.zeros(S + 1, np.int64)
@@ -523,7 +618,7 @@ def _chunk_substreams(sharded: ShardedSellCS, num_chunks: int, *,
         a, b = int(slice_ptr[s0]), int(slice_ptr[s1])
         Wi = b - a
         Wc = max(-(-Wi // Pdev), 1)
-        D = np.zeros((Pdev, Wc, C), data.dtype)
+        D = np.zeros((Pdev, Wc, C), g_data.dtype)
         Cc = np.zeros((Pdev, Wc, C), np.int64)
         So = np.full((Pdev, Wc), s0, np.int32)       # padding rebases to 0
         db = (np.arange(Pdev + 1, dtype=np.int64) * Wi) // Pdev

@@ -1,0 +1,242 @@
+"""repro.spmm.fleet — the operator registry behind ``serve --mode fleet``.
+
+One serve process, many matrices: each tenant registers a COO and gets a
+:class:`repro.spmm.SparseOperator` back. The fleet's value over a dict of
+operators is twofold:
+
+**Plan cache.** Realized plans are keyed on ``(matrix fingerprint, plan
+spec, k-hint, impl)`` where the fingerprint is a stable content hash of
+the canonically-ordered (rows, cols, values) triplet stream
+(:func:`repro.spmm.operator.coo_fingerprint`). A returning tenant — same
+matrix, same knobs — installs the cached :class:`RealizedPlan` directly
+and skips selection, conversion, AND partitioning (asserted via
+``OperatorStats``: zero builds on the hit path). Tenants with the same
+matrix but different knobs still share convert-time artifacts through a
+per-fingerprint :class:`_PlanCache` (the SELL-C-σ stream and each base
+partition), so only the cheap tail of the build is paid. The paper's
+break-even economics (§7: ~472 multiplies to amortize one conversion)
+make this cache the difference between a fleet that converts per tenant
+arrival and one that converts per distinct matrix.
+
+**Device-loss handling.** ``handle_device_loss(failed)`` re-deals every
+distributed operator's width-row stream across the survivors
+(``SparseOperator.shrink_to`` → ``redeal_sellcs``: no σ-sort, no
+conversion — the partitioning is the durable asset) under the
+``largest_feasible_mesh`` policy and atomically swaps the shrunken plans;
+serving continues mid-stream. Re-deal latency lands in the
+``fleet/redeal_s`` histogram per tenant.
+
+A :class:`repro.runtime.fault_tolerance.StragglerMonitor` watches flush
+times via ``observe_flush``; anomalies land in ``fleet/straggler_flags``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro import obs
+from repro.core.formats import COO
+from repro.core.selector import PlanSpec
+from repro.runtime.fault_tolerance import StragglerMonitor
+from repro.spmm.operator import (RealizedPlan, SparseOperator, _PlanCache,
+                                 coo_fingerprint)
+
+
+class FleetStats:
+    """Fleet-level accounting (the per-operator build counters live on
+    each operator's ``OperatorStats``)."""
+    __slots__ = ("registered", "plan_cache_hits", "plan_cache_misses",
+                 "evictions", "device_losses")
+
+    def __init__(self):
+        self.registered = 0
+        self.plan_cache_hits = 0
+        self.plan_cache_misses = 0
+        self.evictions = 0
+        self.device_losses = 0
+
+    def __repr__(self):
+        return (f"FleetStats(registered={self.registered}, "
+                f"hits={self.plan_cache_hits}, "
+                f"misses={self.plan_cache_misses}, "
+                f"evictions={self.evictions}, "
+                f"device_losses={self.device_losses})")
+
+
+def _spec_key(spec: Optional[PlanSpec]) -> Tuple:
+    """Hashable identity of the plan knobs (canonicalized so equivalent
+    spellings share a cache line)."""
+    if spec is None:
+        return ()
+    sp = spec.canonical()
+    return (sp.num_devices, sp.mesh_shape, sp.num_chunks, sp.compact_x,
+            sp.schedule, sp.algorithm)
+
+
+class Fleet:
+    """Registry of :class:`SparseOperator` tenants with plan caching and
+    device-loss re-deal.
+
+    ::
+
+        fleet = Fleet(impl="ref")
+        op = fleet.register("tenant-a", coo, PlanSpec(num_devices=8))
+        y = op.matmul(x)
+        fleet.handle_device_loss([7])      # re-deal onto the survivors
+    """
+
+    def __init__(self, *, impl: str = "auto", feedback=None,
+                 monitor: Optional[StragglerMonitor] = None,
+                 capacity: Optional[int] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError("capacity must be >= 1 (or None)")
+        self._impl = impl
+        self._feedback = feedback
+        self._capacity = capacity
+        self._ops: Dict[str, SparseOperator] = {}      # insertion = LRU age
+        self._fingerprints: Dict[str, str] = {}        # tenant -> fp
+        self._plan_keys: Dict[str, Tuple] = {}         # tenant -> cache key
+        self._plans: Dict[Tuple, RealizedPlan] = {}
+        self._artifacts: Dict[str, _PlanCache] = {}    # fp -> shared cache
+        self._failed: set = set()
+        self._flush_seq = 0
+        self.monitor = monitor if monitor is not None else StragglerMonitor()
+        self.stats = FleetStats()
+
+    # -- registry ----------------------------------------------------------
+    def tenants(self) -> List[str]:
+        return list(self._ops)
+
+    def get(self, tenant: str) -> SparseOperator:
+        return self._ops[tenant]
+
+    def __contains__(self, tenant: str) -> bool:
+        return tenant in self._ops
+
+    def __len__(self) -> int:
+        return len(self._ops)
+
+    def register(self, tenant: str, coo: COO,
+                 spec: Optional[PlanSpec] = None, *, k_hint: int = 32,
+                 num_spmvs: int = 1000) -> SparseOperator:
+        """Build (or cache-hit) an operator for ``tenant``. The plan cache
+        key is ``(fingerprint(coo), spec, k_hint, impl)``; on a hit the
+        cached :class:`RealizedPlan` is installed directly — the new
+        operator's ``OperatorStats`` shows zero sellcs/partition builds."""
+        if tenant in self._ops:
+            raise ValueError(f"tenant {tenant!r} already registered")
+        fp = coo_fingerprint(coo)
+        key = (fp, _spec_key(spec), int(k_hint), self._impl)
+        cached = self._plans.get(key)
+        artifacts = self._artifacts.setdefault(fp, _PlanCache())
+        if cached is not None:
+            op = SparseOperator(coo, cached, impl=self._impl,
+                                k_hint=k_hint, num_spmvs=num_spmvs,
+                                cache=artifacts)
+            self.stats.plan_cache_hits += 1
+            if obs.enabled():
+                obs.current_registry().counter("fleet/plan_cache_hits").inc()
+        else:
+            op = SparseOperator(coo, spec, impl=self._impl, k_hint=k_hint,
+                                num_spmvs=num_spmvs,
+                                feedback=self._feedback, cache=artifacts)
+            self._plans[key] = op.plan
+            self.stats.plan_cache_misses += 1
+            if obs.enabled():
+                obs.current_registry().counter(
+                    "fleet/plan_cache_misses").inc()
+        self._ops[tenant] = op
+        self._fingerprints[tenant] = fp
+        self._plan_keys[tenant] = key
+        self.stats.registered += 1
+        if obs.enabled():
+            obs.current_registry().gauge("fleet/tenants").set(
+                len(self._ops))
+        if self._capacity is not None:
+            while len(self._ops) > self._capacity:
+                self.evict(next(iter(self._ops)))
+        return op
+
+    def evict(self, tenant: str) -> None:
+        """Drop a tenant; per-fingerprint artifacts are freed with their
+        last user (cached plans for that fingerprint go too)."""
+        self._ops.pop(tenant)
+        fp = self._fingerprints.pop(tenant)
+        self._plan_keys.pop(tenant, None)
+        self.stats.evictions += 1
+        if fp not in self._fingerprints.values():
+            self._artifacts.pop(fp, None)
+            for key in [k for k in self._plans if k[0] == fp]:
+                del self._plans[key]
+        if obs.enabled():
+            reg = obs.current_registry()
+            reg.counter("fleet/evictions").inc()
+            reg.gauge("fleet/tenants").set(len(self._ops))
+
+    # -- fault tolerance ---------------------------------------------------
+    @property
+    def failed_devices(self) -> List[int]:
+        return sorted(self._failed)
+
+    def handle_device_loss(self, failed: Sequence[int]) -> List[str]:
+        """Re-deal every distributed tenant across the survivors of
+        ``failed`` (device indices into ``jax.devices()``) and atomically
+        swap the shrunken plans. Single-device tenants are untouched.
+        Returns the tenants whose plans were re-dealt. Cached plans over
+        the old device set are invalidated — a returning tenant must not
+        be handed a mesh containing a dead device."""
+        self._failed.update(int(i) for i in failed)
+        survivors = [d for i, d in enumerate(jax.devices())
+                     if i not in self._failed]
+        if not survivors:
+            raise RuntimeError("no surviving devices")
+        self.stats.device_losses += 1
+        reg = obs.current_registry() if obs.enabled() else None
+        if reg is not None:
+            reg.counter("fleet/device_losses").inc()
+        redone: List[str] = []
+        shrunk: Dict[int, RealizedPlan] = {}   # id(old plan) -> new plan
+        for tenant, op in self._ops.items():
+            if (op.spec.num_devices or 1) <= 1:
+                continue
+            # tenants that shared a cached plan keep sharing after the
+            # loss: the first pays the re-deal, the rest just swap it in
+            old_id = id(op.plan)
+            prior = shrunk.get(old_id)
+            t0 = time.perf_counter()
+            plan = (op.swap(prior) if prior is not None
+                    else op.shrink_to(survivors))
+            dt = time.perf_counter() - t0
+            shrunk[old_id] = plan
+            # refresh under the tenant's REGISTRATION key (the original
+            # knobs), not the shrunken spec's: a returning tenant asking
+            # for the pre-loss configuration must get the survivors'
+            # plan, never a fresh deal over a mesh with the dead device
+            self._plans[self._plan_keys[tenant]] = plan
+            redone.append(tenant)
+            if reg is not None:
+                reg.histogram("fleet/redeal_s",
+                              {"tenant": tenant}).observe(dt)
+        # drop every cached plan not refreshed above: their meshes may
+        # name the dead device (identity check — RealizedPlan holds jax
+        # arrays, so == would be elementwise)
+        live = {id(op.plan) for op in self._ops.values()}
+        for key in [k for k, p in self._plans.items()
+                    if id(p) not in live]:
+            del self._plans[key]
+        return redone
+
+    def observe_flush(self, tenant: str, dt: float) -> bool:
+        """Feed one flush latency to the straggler monitor; a flagged
+        anomaly lands in ``fleet/straggler_flags``."""
+        self._flush_seq += 1
+        slow = self.monitor.observe(self._flush_seq, dt)
+        if slow and obs.enabled():
+            obs.current_registry().counter(
+                "fleet/straggler_flags", {"tenant": tenant}).inc()
+        return slow
+
+
+__all__ = ["Fleet", "FleetStats"]

@@ -23,9 +23,10 @@ changes the psum pipelining depth reuses the existing partition through
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
-from typing import Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -34,6 +35,28 @@ from repro.core.formats import COO
 from repro.core.selector import (MachineSpec, MatrixStats, PlanSpec,
                                  _matrix_bytes_est, matrix_stats, select,
                                  select_distributed)
+
+
+def coo_fingerprint(coo: COO) -> str:
+    """Stable content hash of a COO matrix — the fleet plan-cache key.
+
+    The nonzeros are hashed in the canonical ``(rows, cols, values)``
+    lexicographic order, so any permutation of the same triplet stream
+    (including duplicate (row, col) entries, which SpMM sums — order
+    irrelevant) maps to the same fingerprint, while any value or pattern
+    change maps elsewhere. Shape and value dtype are part of the hash: a
+    float64 copy of a float32 matrix is a different operator."""
+    rows = np.asarray(coo.rows, np.int64)
+    cols = np.asarray(coo.cols, np.int64)
+    vals = np.asarray(coo.data)
+    order = np.lexsort((vals, cols, rows))
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((tuple(int(s) for s in coo.shape),
+                   str(vals.dtype))).encode())
+    h.update(rows[order].tobytes())
+    h.update(cols[order].tobytes())
+    h.update(vals[order].tobytes())
+    return h.hexdigest()
 
 
 def _pick_chunk(m: int, num_devices: int, default: int = 128) -> int:
@@ -96,18 +119,29 @@ class RealizedPlan(NamedTuple):
 class OperatorStats:
     """Mutable multiply/swap accounting, updated under the operator lock.
     ``multiplies`` counts SpMV-equivalents (served columns), the unit of
-    the paper's "472 multiplications" break-even."""
-    __slots__ = ("multiplies", "calls", "swaps", "last_swap_unix_s")
+    the paper's "472 multiplications" break-even. The build counters
+    (``sellcs_builds``/``partition_builds``: conversions and device deals
+    actually paid; ``plan_cache_hits``: artifact-cache reuses) are what
+    the fleet tests assert on — a returning tenant's operator must show
+    zero builds."""
+    __slots__ = ("multiplies", "calls", "swaps", "last_swap_unix_s",
+                 "sellcs_builds", "partition_builds", "plan_cache_hits")
 
     def __init__(self):
         self.multiplies = 0
         self.calls = 0
         self.swaps = 0
         self.last_swap_unix_s: Optional[float] = None
+        self.sellcs_builds = 0
+        self.partition_builds = 0
+        self.plan_cache_hits = 0
 
     def __repr__(self):
         return (f"OperatorStats(multiplies={self.multiplies}, "
-                f"calls={self.calls}, swaps={self.swaps})")
+                f"calls={self.calls}, swaps={self.swaps}, "
+                f"sellcs_builds={self.sellcs_builds}, "
+                f"partition_builds={self.partition_builds}, "
+                f"plan_cache_hits={self.plan_cache_hits})")
 
 
 class _PlanCache:
@@ -138,30 +172,42 @@ class SparseOperator:
     multiplies the same COO nonzeros.
     """
 
-    def __init__(self, coo: COO, plan: Optional[PlanSpec] = None, *,
+    def __init__(self, coo: COO, plan=None, *,
                  impl: str = "auto", k_hint: int = 32,
-                 num_spmvs: int = 1000, feedback=None):
+                 num_spmvs: int = 1000, feedback=None,
+                 cache: Optional[_PlanCache] = None):
         self._coo = coo
         self._mstats = matrix_stats(coo)
         self._impl = impl
         self._k_hint = max(int(k_hint), 1)
         self._num_spmvs = num_spmvs
-        self._cache = _PlanCache()
+        self._cache = cache if cache is not None else _PlanCache()
         self._lock = threading.Lock()
         self._build_lock = threading.Lock()
         self.stats = OperatorStats()
-        self._plan = self.realize(plan or PlanSpec(), feedback=feedback)
+        if isinstance(plan, RealizedPlan):
+            # fleet plan-cache hit: a returning tenant installs the cached
+            # plan directly — no conversion, no partition, no selection
+            self._plan = plan
+        else:
+            self._plan = self.realize(plan or PlanSpec(),
+                                      feedback=feedback)
 
     @classmethod
-    def from_coo(cls, coo: COO, plan: Optional[PlanSpec] = None, *,
+    def from_coo(cls, coo: COO, plan=None, *,
                  impl: str = "auto", k_hint: int = 32,
-                 num_spmvs: int = 1000, feedback=None) -> "SparseOperator":
+                 num_spmvs: int = 1000, feedback=None,
+                 cache: Optional[_PlanCache] = None) -> "SparseOperator":
         """Build the handle and realize its initial plan. ``plan`` is a
         :class:`PlanSpec` (None = single-device, format chosen by
         ``core.select`` for ``k_hint`` right-hand sides amortized over
-        ``num_spmvs`` multiplies)."""
+        ``num_spmvs`` multiplies) or an already-built
+        :class:`RealizedPlan`, which is installed as-is (the fleet's
+        returning-tenant path). ``cache`` shares convert-time artifacts
+        (SELL-C-σ stream, base partitions) across operators of the same
+        matrix."""
         return cls(coo, plan, impl=impl, k_hint=k_hint,
-                   num_spmvs=num_spmvs, feedback=feedback)
+                   num_spmvs=num_spmvs, feedback=feedback, cache=cache)
 
     # -- read side ---------------------------------------------------------
     @property
@@ -205,7 +251,8 @@ class SparseOperator:
             return _realize_plan(self._coo, self._mstats, spec,
                                  impl=self._impl, k_hint=self._k_hint,
                                  num_spmvs=self._num_spmvs,
-                                 feedback=feedback, cache=self._cache)
+                                 feedback=feedback, cache=self._cache,
+                                 op_stats=self.stats)
 
     def swap(self, new_plan, feedback=None) -> RealizedPlan:
         """Atomically install ``new_plan`` (a :class:`RealizedPlan`, or a
@@ -222,10 +269,51 @@ class SparseOperator:
             self.stats.last_swap_unix_s = time.time()
         return new_plan
 
+    def shrink_to(self, devices: Sequence, *,
+                  num_chunks: Optional[int] = None) -> RealizedPlan:
+        """Device-loss path: re-deal the current distributed plan's
+        width-row stream over ``devices`` (the survivors) and atomically
+        install the shrunken plan. The global stream is reconstructed from
+        the existing shards (:func:`repro.spmm.distributed.redeal_sellcs`)
+        — no σ-sort, no COO→SELL-C-σ conversion — and the mesh is rebuilt
+        with the :func:`repro.runtime.elastic.largest_feasible_mesh`
+        policy: the model axis keeps its width, the loss is absorbed on
+        the data axis. Returns the installed plan."""
+        from repro.launch.mesh import make_spmm_mesh
+        from repro.roofline import spmm_distributed_time
+        from repro.runtime.elastic import largest_feasible_mesh
+        from repro.spmm.distributed import redeal_sellcs
+        rp = self._plan
+        sp = rp.spec
+        if (sp.num_devices or 1) <= 1:
+            raise ValueError(
+                "shrink_to needs a distributed plan; the current plan is "
+                f"single-device ({rp.label!r})")
+        _, pm = sp.mesh_shape
+        pd, pm = largest_feasible_mesh(len(devices), pm)
+        nc = int(num_chunks) if num_chunks is not None else (sp.num_chunks
+                                                            or 1)
+        t0 = time.perf_counter()
+        with self._build_lock:
+            sharded = redeal_sellcs(rp.matrix, pd, num_chunks=nc)
+            mesh = make_spmm_mesh((pd, pm), devices=list(devices)[:pd * pm])
+            compact = bool(sp.compact_x)
+            # survivors' partition replaces the stale artifact so a later
+            # chunks-only swap re-deals from the live device count
+            self._cache.partitions[(sp.schedule, pd, compact)] = sharded
+            with self._lock:
+                self.stats.partition_builds += 1
+            plan = _mesh_plan(sharded, rp.local_matrix, self._mstats, mesh,
+                              schedule=sp.schedule, chunks=nc, pd=pd, pm=pm,
+                              compact=compact, impl_r=rp.impl,
+                              time_fn=spmm_distributed_time, t0=t0)
+        return self.swap(plan)
+
 
 def _realize_plan(coo: COO, stats: MatrixStats, spec: PlanSpec, *,
                   impl: str, k_hint: int, num_spmvs: int, feedback=None,
-                  cache: Optional[_PlanCache] = None) -> RealizedPlan:
+                  cache: Optional[_PlanCache] = None,
+                  op_stats: Optional[OperatorStats] = None) -> RealizedPlan:
     from repro.roofline import spmm_distributed_time
     spec = spec.canonical()
     cache = cache or _PlanCache()
@@ -237,7 +325,8 @@ def _realize_plan(coo: COO, stats: MatrixStats, spec: PlanSpec, *,
     return _realize_mesh(coo, stats, spec, impl=impl, k_hint=k_hint,
                          num_spmvs=num_spmvs, feedback=feedback,
                          cache=cache, t0=t0,
-                         time_fn=spmm_distributed_time)
+                         time_fn=spmm_distributed_time,
+                         op_stats=op_stats)
 
 
 def _realize_single(coo, stats, spec, *, impl, k_hint, num_spmvs, t0,
@@ -267,15 +356,13 @@ def _realize_single(coo, stats, spec, *, impl, k_hint, num_spmvs, t0,
 
 
 def _realize_mesh(coo, stats, spec, *, impl, k_hint, num_spmvs, feedback,
-                  cache, t0, time_fn):
+                  cache, t0, time_fn, op_stats=None):
     import dataclasses
     from repro.launch.mesh import make_spmm_mesh
     from repro.spmm import coo_to_sellcs
     from repro.spmm.distributed import (partition_sellcs_nnz,
                                         partition_sellcs_rows,
-                                        rechunk_sellcs,
-                                        spmm_merge_distributed,
-                                        spmm_row_distributed)
+                                        rechunk_sellcs)
     total = spec.num_devices
     ndev = len(jax.devices())
     if ndev < total:
@@ -302,23 +389,43 @@ def _realize_mesh(coo, stats, spec, *, impl, k_hint, num_spmvs, feedback,
     sc = cache.sellcs.get(c)
     if sc is None:
         sc = cache.sellcs.setdefault(c, coo_to_sellcs(coo, c=c))
+        if op_stats is not None:
+            op_stats.sellcs_builds += 1
+    elif op_stats is not None:
+        op_stats.plan_cache_hits += 1
     impl_r = _resolve_impl(impl)
+    key = (schedule, pd, compact)
+    base = cache.partitions.get(key)
+    if base is None:
+        part = (partition_sellcs_rows if schedule == "row"
+                else partition_sellcs_nnz)
+        base = cache.partitions.setdefault(
+            key, part(sc, pd, compact_x=compact))
+        if op_stats is not None:
+            op_stats.partition_builds += 1
+    elif op_stats is not None:
+        op_stats.plan_cache_hits += 1
     if schedule == "row":
-        key = ("row", pd, compact)
-        sharded = cache.partitions.get(key)
-        if sharded is None:
-            sharded = cache.partitions.setdefault(
-                key, partition_sellcs_rows(sc, pd, compact_x=compact))
+        sharded = base
+    else:
+        # partition reuse across swaps: only the span plan is re-baked
+        sharded = rechunk_sellcs(base, chunks)
+    return _mesh_plan(sharded, sc, stats, mesh, schedule=schedule,
+                      chunks=chunks, pd=pd, pm=pm, compact=compact,
+                      impl_r=impl_r, time_fn=time_fn, t0=t0)
+
+
+def _mesh_plan(sharded, sc, stats, mesh, *, schedule, chunks, pd, pm,
+               compact, impl_r, time_fn, t0):
+    """Close a :class:`RealizedPlan` over an already-partitioned stream —
+    the shared tail of the convert-time realize and the device-loss
+    ``shrink_to`` re-deal (which brings its own survivors' mesh)."""
+    from repro.spmm.distributed import (spmm_merge_distributed,
+                                        spmm_row_distributed)
+    if schedule == "row":
         eager = lambda X: spmm_row_distributed(sharded, X, mesh,
                                                impl=impl_r)
     else:
-        key = ("merge", pd, compact)
-        base = cache.partitions.get(key)
-        if base is None:
-            base = cache.partitions.setdefault(
-                key, partition_sellcs_nnz(sc, pd, compact_x=compact))
-        # partition reuse across swaps: only the span plan is re-baked
-        sharded = rechunk_sellcs(base, chunks)
         eager = lambda X: spmm_merge_distributed(sharded, X, mesh,
                                                  impl=impl_r,
                                                  num_chunks=chunks)
@@ -356,4 +463,5 @@ def _realize_mesh(coo, stats, spec, *, impl, k_hint, num_spmvs, feedback,
                         time.perf_counter() - t0)
 
 
-__all__ = ["SparseOperator", "RealizedPlan", "OperatorStats", "PlanSpec"]
+__all__ = ["SparseOperator", "RealizedPlan", "OperatorStats", "PlanSpec",
+           "coo_fingerprint"]

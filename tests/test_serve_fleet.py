@@ -1,0 +1,594 @@
+"""Multi-tenant serve fleet (ISSUE 8): the COO fingerprint, the Fleet
+plan cache, per-lane backpressure, the FleetBatcher flush scheduler,
+device-loss re-deal (redeal_sellcs + Fleet.handle_device_loss), the
+elastic reshard guard, serve --mode fleet end-to-end, and the
+smoke_check SLO gate.
+
+Device-backed mesh tests run in SUBPROCESSES (the host-platform device
+count must be set before jax initializes); everything else runs
+in-process on the suite's single device.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from tests.test_spmm_distributed import run_sub
+
+
+def _coo(m=300, n=300, nnz=2400, seed=0):
+    from repro.core import to_coo
+    from repro.data import matrices
+    return to_coo(*matrices.uniform(m, n, nnz, seed))
+
+
+# -------------------------------------------------------------------------
+# coo_fingerprint: the plan-cache key
+# -------------------------------------------------------------------------
+
+def test_fingerprint_deterministic_and_content_sensitive():
+    from repro.core.formats import COO
+    from repro.spmm import coo_fingerprint
+    coo = _coo()
+    fp = coo_fingerprint(coo)
+    assert fp == coo_fingerprint(_coo())            # rebuilt: same bytes
+    assert len(fp) == 32                            # blake2b-128 hex
+    # one perturbed value is a different matrix
+    vals = np.asarray(coo.data).copy()
+    vals[7] += 1.0
+    assert coo_fingerprint(COO(coo.rows, coo.cols, vals,
+                               coo.shape)) != fp
+    # one moved nonzero is a different matrix
+    cols = np.asarray(coo.cols).copy()
+    cols[3] = (cols[3] + 1) % coo.shape[1]
+    assert coo_fingerprint(COO(coo.rows, cols, coo.data,
+                               coo.shape)) != fp
+    # a different shape over the same triplets is a different matrix
+    bigger = (coo.shape[0] + 1, coo.shape[1])
+    assert coo_fingerprint(COO(coo.rows, coo.cols, coo.data,
+                               bigger)) != fp
+
+
+def test_fingerprint_permutation_stable():
+    """The triplet stream's storage order is presentation, not content —
+    any permutation of (rows, cols, vals) hashes identically."""
+    from repro.core.formats import COO
+    from repro.spmm import coo_fingerprint
+    coo = _coo(nnz=500)
+    fp = coo_fingerprint(coo)
+    rng = np.random.default_rng(11)
+    for _ in range(3):
+        p = rng.permutation(len(np.asarray(coo.rows)))
+        shuffled = COO(np.asarray(coo.rows)[p], np.asarray(coo.cols)[p],
+                       np.asarray(coo.data)[p], coo.shape)
+        assert coo_fingerprint(shuffled) == fp
+
+
+def test_fingerprint_permutation_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    from repro.core.formats import COO
+    from repro.spmm import coo_fingerprint
+    coo = _coo(m=40, n=40, nnz=60, seed=5)
+    rows = np.asarray(coo.rows)
+    cols = np.asarray(coo.cols)
+    vals = np.asarray(coo.data)
+    fp = coo_fingerprint(coo)
+
+    @hypothesis.given(st.permutations(list(range(len(rows)))))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def prop(perm):
+        p = np.asarray(perm)
+        assert coo_fingerprint(
+            COO(rows[p], cols[p], vals[p], coo.shape)) == fp
+
+    prop()
+
+
+# -------------------------------------------------------------------------
+# Bounded-queue backpressure on RequestBatcher
+# -------------------------------------------------------------------------
+
+def test_backpressure_raise_policy():
+    from repro import obs
+    from repro.spmm import QueueFull, RequestBatcher, spmm_coo
+    coo = _coo(m=50, n=50, nnz=200)
+    x = np.ones(50, np.float32)
+    reg = obs.install(obs.MetricRegistry())
+    try:
+        b = RequestBatcher(coo, max_batch=8, max_pending=3, name="a")
+        for _ in range(3):
+            b.submit(x)
+        assert reg.gauge("batcher/pending", {"tenant": "a"}).value == 3
+        with pytest.raises(QueueFull) as exc:
+            b.submit(x)
+        assert (exc.value.tenant, exc.value.pending,
+                exc.value.max_pending) == ("a", 3, 3)
+        assert b.rejected == 1
+        assert reg.counter("batcher/rejected",
+                           {"tenant": "a"}).value == 1
+        # a flush makes room and nothing queued was lost
+        out = b.flush()
+        assert len(out) == 3 and b.pending == 0
+        b.submit(x)
+        yo = np.asarray(spmm_coo(coo, x[:, None]))[:, 0]
+        for y in out.values():
+            np.testing.assert_allclose(np.asarray(y), yo, rtol=1e-5,
+                                       atol=1e-5)
+    finally:
+        obs.uninstall()
+    with pytest.raises(ValueError):
+        RequestBatcher(coo, max_pending=0)
+    with pytest.raises(ValueError):
+        RequestBatcher(coo, overflow="drop")
+
+
+def test_backpressure_block_policy():
+    """An over-bound submit under overflow='block' parks the submitter
+    until a flush opens a slot — the request is delayed, never dropped."""
+    from repro.spmm import RequestBatcher
+    coo = _coo(m=50, n=50, nnz=200)
+    x = np.ones(50, np.float32)
+    b = RequestBatcher(coo, max_batch=2, max_pending=2, overflow="block")
+    b.submit(x)
+    b.submit(x)
+    unblocked = threading.Event()
+
+    def blocked_submit():
+        b.submit(x)
+        unblocked.set()
+
+    t = threading.Thread(target=blocked_submit)
+    t.start()
+    assert not unblocked.wait(0.2), "submit must block while full"
+    served = b.flush()
+    assert unblocked.wait(5.0), "flush must wake the blocked submitter"
+    t.join()
+    assert len(served) == 2 and b.pending == 1
+    assert len(b.flush()) == 1
+    assert b.rejected == 0
+
+
+# -------------------------------------------------------------------------
+# FleetBatcher: the urgency x efficiency flush scheduler
+# -------------------------------------------------------------------------
+
+class _Op:
+    """Minimal matmul-only stand-in so scheduler tests stay pure host."""
+
+    def __init__(self, coo):
+        self.coo = coo
+        self.shape = coo.shape
+
+    def matmul(self, X):
+        from repro.spmm import spmm_coo
+        return spmm_coo(self.coo, X)
+
+
+def test_fleet_batcher_scheduler_order():
+    from repro.spmm import FleetBatcher
+    coo = _coo(m=20, n=20, nnz=60)
+    t = [0.0]
+    fb = FleetBatcher(clock=lambda: t[0])
+    fb.add_tenant("a", _Op(coo), max_batch=4, slo_s=1.0)
+    fb.add_tenant("b", _Op(coo), max_batch=4, slo_s=1.0)
+    x = np.ones(20, np.float32)
+    assert fb.next_tenant() is None
+    t[0] = 0.0
+    fb.submit("a", x)                       # 1 old request
+    t[0] = 0.5
+    for _ in range(4):                      # a full fresh batch
+        fb.submit("b", x)
+    # at t=0.6 age still dominates: a = 0.6*(1/4), b = 0.1*(4/4)
+    assert fb.next_tenant(now=0.6) == "a"
+    # at t=0.9 the full batch wins: a = 0.9*0.25 < b = 0.4*1.0
+    assert fb.next_tenant(now=0.9) == "b"
+    t[0] = 0.9
+    tenant, res = fb.flush_next()
+    assert tenant == "b" and len(res) == 4
+    # only a remains; starvation-proof: it wins at any later now
+    assert fb.next_tenant(now=100.0) == "a"
+    t[0] = 2.0                              # flushed 2s after a 1s SLO
+    assert len(fb.flush("a")) == 1
+    assert fb.lane("a").slo_violations == 1
+    assert fb.lane("b").slo_violations == 0
+
+
+def test_fleet_batcher_tiebreak_and_validation():
+    from repro.spmm import FleetBatcher
+    coo = _coo(m=20, n=20, nnz=60)
+    t = [0.0]
+    fb = FleetBatcher(clock=lambda: t[0])
+    fb.add_tenant("young", _Op(coo), max_batch=2, slo_s=1.0)
+    fb.add_tenant("old", _Op(coo), max_batch=2, slo_s=1.0)
+    x = np.ones(20, np.float32)
+    t[0] = 0.0
+    fb.submit("old", x)
+    t[0] = 0.5
+    fb.submit("young", x)
+    # equal scores are impossible here (ages differ) but scale the young
+    # lane's age to force a score tie: same slo, same efficiency, the
+    # older oldest-arrival must win
+    assert fb.next_tenant(now=1.0) == "old"
+    with pytest.raises(ValueError):
+        fb.add_tenant("old", _Op(coo))
+    with pytest.raises(ValueError):
+        fb.add_tenant("zero", _Op(coo), slo_s=0.0)
+
+
+def test_fleet_batcher_drain_never_drops():
+    """ISSUE acceptance: every queued ticket is served exactly once, with
+    the right answer, whatever order the scheduler picks."""
+    from repro.spmm import FleetBatcher, spmm_coo
+    rng = np.random.default_rng(3)
+    coos = {name: _coo(m=40, n=40, nnz=200, seed=i)
+            for i, name in enumerate(["a", "b", "c"])}
+    t = [0.0]
+    fb = FleetBatcher(clock=lambda: t[0])
+    for i, (name, coo) in enumerate(coos.items()):
+        fb.add_tenant(name, _Op(coo), max_batch=2 + i, slo_s=0.05 * (i + 1))
+    sent = {}
+    for j in range(30):
+        name = ["a", "b", "c"][j % 3]
+        x = rng.standard_normal(40).astype(np.float32)
+        t[0] = 0.01 * j
+        rid = fb.submit(name, x)
+        sent[(name, rid)] = x
+    assert fb.total_pending == 30
+    results = fb.drain()
+    assert fb.total_pending == 0
+    got = {(name, rid) for name in results for rid in results[name]}
+    assert got == set(sent), "drain dropped or duplicated tickets"
+    for (name, rid), x in sent.items():
+        yo = np.asarray(spmm_coo(coos[name], x[:, None]))[:, 0]
+        np.testing.assert_allclose(np.asarray(results[name][rid]), yo,
+                                   rtol=1e-4, atol=1e-4)
+    assert sum(lane.served for lane in
+               (fb.lane(n) for n in fb.tenants())) == 30
+
+
+# -------------------------------------------------------------------------
+# Fleet: the fingerprint-keyed plan cache
+# -------------------------------------------------------------------------
+
+def test_fleet_plan_cache_hit_and_miss():
+    from repro.core.formats import COO
+    from repro.spmm import Fleet, spmm_coo
+    coo = _coo()
+    fleet = Fleet(impl="ref")
+    op1 = fleet.register("t0", coo)
+    op2 = fleet.register("t1", _coo())      # same content, fresh arrays
+    assert op2.plan is op1.plan, "identical COO must hit the plan cache"
+    assert (fleet.stats.plan_cache_hits,
+            fleet.stats.plan_cache_misses) == (1, 1)
+    # a returning tenant's operator still answers correctly
+    x = np.ones(coo.shape[1], np.float32)
+    yo = np.asarray(spmm_coo(coo, x[:, None]))[:, 0]
+    np.testing.assert_allclose(np.asarray(op2.matmul(x)), yo,
+                               rtol=1e-4, atol=1e-4)
+    # a perturbed matrix is a different fingerprint: full build
+    vals = np.asarray(coo.data).copy()
+    vals[0] += 0.5
+    op3 = fleet.register("t2", COO(coo.rows, coo.cols, vals, coo.shape))
+    assert op3.plan is not op1.plan
+    assert fleet.stats.plan_cache_misses == 2
+    # a different k-hint is a different cache line
+    op4 = fleet.register("t3", _coo(), k_hint=8)
+    assert op4.plan is not op1.plan
+    assert fleet.stats.plan_cache_misses == 3
+    with pytest.raises(ValueError):
+        fleet.register("t0", coo)
+    assert set(fleet.tenants()) == {"t0", "t1", "t2", "t3"}
+    assert "t0" in fleet and len(fleet) == 4
+
+
+def test_fleet_eviction_and_capacity():
+    from repro.spmm import Fleet
+    coo_a, coo_b = _coo(seed=1), _coo(seed=2)
+    fleet = Fleet(impl="ref")
+    fleet.register("a1", coo_a)
+    fleet.register("a2", _coo(seed=1))
+    fleet.register("b", coo_b)
+    # evicting one sharer keeps the fingerprint's artifacts for the other
+    fleet.evict("a1")
+    assert len(fleet._artifacts) == 2
+    fleet.evict("a2")
+    assert len(fleet._artifacts) == 1       # last user gone -> freed
+    assert fleet.stats.evictions == 2
+    # capacity: LRU (insertion order) eviction on overflow
+    small = Fleet(impl="ref", capacity=2)
+    small.register("x", coo_a)
+    small.register("y", coo_b)
+    small.register("z", _coo(seed=3))
+    assert set(small.tenants()) == {"y", "z"}
+    assert small.stats.evictions == 1
+    with pytest.raises(ValueError):
+        Fleet(capacity=0)
+
+
+# -------------------------------------------------------------------------
+# runtime.elastic: reshard flattens once and rejects stale specs
+# -------------------------------------------------------------------------
+
+def test_reshard_single_flatten_and_axis_guard():
+    from jax.sharding import PartitionSpec
+    from repro.runtime.elastic import build_mesh, reshard
+    mesh = build_mesh([1], ["data"])
+    tree = {"w": np.ones((4, 2), np.float32),
+            "b": {"inner": np.zeros(3, np.float32)}}
+    seen = []
+
+    def spec_fn(key, leaf):
+        seen.append(key)
+        return PartitionSpec()
+
+    out = reshard(tree, mesh, spec_fn)
+    # one spec_fn call per leaf (the old implementation flattened twice)
+    assert len(seen) == 2 and len(set(seen)) == 2
+    assert out["w"].shape == (4, 2) and out["b"]["inner"].shape == (3,)
+    np.testing.assert_array_equal(np.asarray(out["w"]), tree["w"])
+
+    # a rule written for the pre-shrink mesh names a dead axis: rejected
+    # up front with the leaf path and the surviving axis names
+    def stale_fn(key, leaf):
+        return PartitionSpec("model")
+
+    with pytest.raises(ValueError, match="model"):
+        reshard(tree, mesh, stale_fn)
+
+    # tuple-of-names entries are checked too
+    def tuple_fn(key, leaf):
+        return PartitionSpec(("data", "gone"))
+
+    with pytest.raises(ValueError, match="gone"):
+        reshard({"w": np.ones(4)}, mesh, tuple_fn)
+
+
+def test_largest_feasible_mesh_policy():
+    from repro.runtime.elastic import largest_feasible_mesh
+    assert largest_feasible_mesh(8, 2) == (4, 2)
+    assert largest_feasible_mesh(7, 2) == (3, 2)    # absorb on data axis
+    assert largest_feasible_mesh(7, 1) == (7, 1)
+    with pytest.raises(ValueError):
+        largest_feasible_mesh(1, 2)
+
+
+# -------------------------------------------------------------------------
+# redeal_sellcs: device loss re-deal == fresh partition, byte for byte
+# -------------------------------------------------------------------------
+
+def test_redeal_matches_fresh_partition_8_to_7():
+    print(run_sub("""
+import numpy as np
+from repro.core import to_coo
+from repro.data import matrices
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, rechunk_sellcs,
+                        redeal_sellcs)
+coo = to_coo(*matrices.uniform(600, 600, 6000, 0))
+sc = coo_to_sellcs(coo, c=8, sigma=64)
+
+def eq(a, b, where):
+    if a is None or b is None:
+        assert a is None and b is None, where
+        return
+    if isinstance(a, (tuple, list)):
+        assert len(a) == len(b), where
+        for i, (x, y) in enumerate(zip(a, b)):
+            eq(x, y, f"{where}[{i}]")
+        return
+    if isinstance(a, (int, float, str)):
+        assert a == b, (where, a, b)
+        return
+    an, bn = np.asarray(a), np.asarray(b)
+    assert an.shape == bn.shape and an.tobytes() == bn.tobytes(), where
+
+for part, kw in ((partition_sellcs_rows, {}),
+                 (partition_sellcs_nnz, {}),
+                 (partition_sellcs_nnz, {"compact_x": True})):
+    base8 = part(sc, 8, **kw)
+    for nc in (1, 3):
+        if part is partition_sellcs_rows and nc != 1:
+            continue
+        src = base8 if nc == 1 else rechunk_sellcs(base8, nc)
+        redone = redeal_sellcs(src, 7, num_chunks=nc)
+        fresh = part(sc, 7, **kw)
+        if nc != 1:
+            fresh = rechunk_sellcs(fresh, nc)
+        for name in fresh._fields:
+            eq(getattr(redone, name), getattr(fresh, name),
+               f"{part.__name__}/{kw}/nc={nc}/{name}")
+print("REDEAL_BYTE_IDENTICAL")
+"""))
+
+
+def test_redeal_rejects_legacy_shards():
+    """A ShardedSellCS without row_counts cannot be re-dealt (padding is
+    indistinguishable from real width-rows) — the error must say so."""
+    from repro.spmm import coo_to_sellcs, partition_sellcs_nnz
+    from repro.spmm.distributed import redeal_sellcs
+    sc = coo_to_sellcs(_coo(), c=4, sigma=32)
+    sharded = partition_sellcs_nnz(sc, 2)
+    legacy = sharded._replace(row_counts=None)
+    with pytest.raises(ValueError, match="row_counts"):
+        redeal_sellcs(legacy, 1)
+    with pytest.raises(ValueError):
+        redeal_sellcs(sharded, 0)
+
+
+# -------------------------------------------------------------------------
+# Fleet.handle_device_loss on a real 8-device host mesh
+# -------------------------------------------------------------------------
+
+def test_fleet_device_loss_redeal_8dev():
+    """ISSUE acceptance: kill one data-shard device mid-stream; every
+    distributed plan re-deals across the survivors and keeps matching the
+    to_coo oracle. The cache-hit tenant pays zero builds on arrival."""
+    print(run_sub("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import PlanSpec, to_coo
+from repro.data import matrices
+from repro.spmm import Fleet, spmm_coo
+coo = to_coo(*matrices.uniform(600, 600, 6000, 0))
+coo2 = to_coo(*matrices.uniform(500, 500, 5000, 1))
+fleet = Fleet(impl="ref")
+spec = PlanSpec(num_devices=8)
+op = fleet.register("t0", coo, spec)
+hit = fleet.register("t1", to_coo(*matrices.uniform(600, 600, 6000, 0)),
+                     spec)
+other = fleet.register("t2", coo2, spec)
+assert hit.plan is op.plan
+assert (hit.stats.sellcs_builds, hit.stats.partition_builds) == (0, 0), \\
+    repr(hit.stats)
+assert op.stats.sellcs_builds >= 1 and op.stats.partition_builds >= 1
+assert fleet.stats.plan_cache_hits == 1
+rng = np.random.default_rng(2)
+X = jnp.asarray(rng.standard_normal((600, 4)).astype(np.float32))
+X2 = jnp.asarray(rng.standard_normal((500, 4)).astype(np.float32))
+yo, yo2 = np.asarray(spmm_coo(coo, X)), np.asarray(spmm_coo(coo2, X2))
+np.testing.assert_allclose(np.asarray(op @ X), yo, rtol=1e-4, atol=1e-4)
+pre_devices = op.plan.spec.num_devices
+redone = fleet.handle_device_loss([7])
+assert sorted(redone) == ["t0", "t1", "t2"], redone
+assert fleet.failed_devices == [7]
+assert fleet.stats.device_losses == 1
+for o in (op, hit, other):
+    nd = o.plan.spec.num_devices
+    assert nd < pre_devices, (nd, pre_devices, o.plan.label)
+np.testing.assert_allclose(np.asarray(op @ X), yo, rtol=1e-4, atol=1e-4)
+np.testing.assert_allclose(np.asarray(hit @ X), yo, rtol=1e-4, atol=1e-4)
+np.testing.assert_allclose(np.asarray(other @ X2), yo2, rtol=1e-4,
+                           atol=1e-4)
+# every surviving cached plan names only live meshes: a returning tenant
+# gets the re-dealt plan, not a dead-mesh one
+back = fleet.register("t3", to_coo(*matrices.uniform(600, 600, 6000, 0)),
+                      spec)
+assert back.plan is op.plan
+np.testing.assert_allclose(np.asarray(back @ X), yo, rtol=1e-4, atol=1e-4)
+print("DEVICE_LOSS_OK")
+"""))
+
+
+# -------------------------------------------------------------------------
+# serve --mode fleet end-to-end + the smoke_check SLO gate
+# -------------------------------------------------------------------------
+
+def test_serve_fleet_device_loss_e2e(tmp_path):
+    """[CI acceptance] the bench-smoke scenario: 3 tenants, device 7 dies
+    mid-stream, every request is served and oracle-checked, and the
+    emitted document passes check_slo."""
+    path = str(tmp_path / "fleet.json")
+    run_sub(f"""
+from repro.launch import serve
+serve.main(["--mode", "fleet", "--tenants", "3", "--slo-ms", "50",
+            "--matrix", "mawi_like", "--requests", "12", "--max-batch",
+            "4", "--devices", "8", "--impl", "ref", "--fail-device",
+            "auto", "--metrics", {path!r}])
+""")
+    doc = json.loads(open(path).read())
+    assert doc["labels"]["mode"] == "fleet"
+    assert doc["labels"]["fail_device"] == "7"
+    counters = {(c["name"], c["labels"].get("tenant")): c["value"]
+                for c in doc["counters"]}
+    assert counters[("fleet/device_losses", None)] >= 1
+    for t in ("t0", "t1", "t2"):
+        assert counters[("batcher/served", t)] >= 4
+    assert counters[("fleet/plan_cache_misses", None)] == 2
+    assert counters[("fleet/plan_cache_hits", None)] == 1
+    hists = {(h["name"], h["labels"].get("tenant")) for h in
+             doc["histograms"]}
+    assert any(n == "fleet/redeal_s" for n, _ in hists)
+    assert any(n == "fleet/flush_postloss_s" for n, _ in hists)
+    import benchmarks.smoke_check as sk
+    assert sk.check_slo(doc, "fleet.json") == []
+    assert sk.check_obs_document(doc, "fleet.json") == []
+    assert sk.main([path]) == 0
+
+
+def test_serve_fleet_rejects_bad_args():
+    from repro.launch import serve
+    with pytest.raises(SystemExit):
+        serve.main(["--mode", "fleet", "--tenants", "0",
+                    "--matrix", "mawi_like"])
+    with pytest.raises(SystemExit):
+        # --fail-device needs a mesh to kill a device from
+        serve.main(["--mode", "fleet", "--tenants", "2",
+                    "--matrix", "mawi_like", "--fail-device", "auto"])
+
+
+# -------------------------------------------------------------------------
+# smoke_check.check_slo unit gates
+# -------------------------------------------------------------------------
+
+def _fleet_doc(**over):
+    labels = {"mode": "fleet", "tenants": "2", "requests": "4",
+              "slo_ms": "50.0", "backend": "cpu", "fail_device": "7"}
+    labels.update(over.pop("labels", {}))
+    hist = [{"name": "fleet/flush_s", "labels": {"tenant": t},
+             "count": 2, "p50": 0.001} for t in ("t0", "t1")]
+    hist += [{"name": "fleet/redeal_s", "labels": {"tenant": "t0"},
+              "count": 1},
+             {"name": "fleet/flush_postloss_s", "labels": {"tenant": "t0"},
+              "count": 1}]
+    doc = {"schema": "repro.obs/v1", "labels": labels,
+           "counters": [{"name": "batcher/served",
+                         "labels": {"tenant": t}, "value": 4.0}
+                        for t in ("t0", "t1")] +
+                       [{"name": "fleet/device_losses", "labels": {},
+                         "value": 1.0}],
+           "gauges": [], "histograms": hist, "residuals": []}
+    doc.update(over)
+    return doc
+
+
+def test_check_slo_green_and_disarmed():
+    import benchmarks.smoke_check as sk
+    assert sk.check_slo(_fleet_doc(), "x") == []
+    # any non-fleet document passes untouched
+    assert sk.check_slo(_fleet_doc(labels={"mode": "spmv"}), "x") == []
+    assert sk.check_slo({"labels": {}}, "x") == []
+    # no injected loss: the loss gates disarm
+    ok = _fleet_doc(labels={"fail_device": ""})
+    ok["histograms"] = [h for h in ok["histograms"]
+                        if h["name"] == "fleet/flush_s"]
+    ok["counters"] = [c for c in ok["counters"]
+                      if c["name"] != "fleet/device_losses"]
+    assert sk.check_slo(ok, "x") == []
+
+
+def test_check_slo_gates_fire():
+    import benchmarks.smoke_check as sk
+    # a dropped request
+    doc = _fleet_doc()
+    doc["counters"][1]["value"] = 3.0
+    assert any("dropped" in p for p in sk.check_slo(doc, "x"))
+    # a tenant that never served
+    doc = _fleet_doc()
+    doc["histograms"] = [h for h in doc["histograms"]
+                         if h["labels"].get("tenant") != "t1"
+                         or h["name"] != "fleet/flush_s"]
+    assert any("never served" in p for p in sk.check_slo(doc, "x"))
+    # an unhandled loss / a missing re-deal / no post-loss flushes
+    doc = _fleet_doc()
+    doc["counters"] = doc["counters"][:2]
+    probs = sk.check_slo(doc, "x")
+    assert any("never handled" in p for p in probs)
+    doc = _fleet_doc()
+    doc["histograms"] = [h for h in doc["histograms"]
+                         if h["name"] != "fleet/redeal_s"]
+    assert any("re-dealt" in p for p in sk.check_slo(doc, "x"))
+    doc = _fleet_doc()
+    doc["histograms"] = [h for h in doc["histograms"]
+                         if h["name"] != "fleet/flush_postloss_s"]
+    assert any("after the loss" in p for p in sk.check_slo(doc, "x"))
+    # the p50-vs-budget comparison arms only off cpu
+    doc = _fleet_doc()
+    for h in doc["histograms"]:
+        if h["name"] == "fleet/flush_s":
+            h["p50"] = 9.0
+    assert sk.check_slo(doc, "x") == []
+    doc["labels"]["backend"] = "tpu"
+    assert any("exceeds" in p for p in sk.check_slo(doc, "x"))
+    # a fleet doc without a tenants label is itself a problem
+    assert sk.check_slo({"labels": {"mode": "fleet"}}, "x")
