@@ -57,6 +57,16 @@ tie-refusal; and — like the mesh gate — so are ``backend=cpu`` rows: a
 host-platform mesh keeps X as one shared buffer, so the gather's byte
 saving is physically unobservable there.
 
+Fourth cross-row rule (the transpose gate): for every
+``.../op=N|T/k=<k>`` pair emitted by ``benchmarks.spmm_sweep --op N,T``,
+the measured ``op=T`` row must stay within
+``TRANSPOSE_REGRESSION_TOLERANCE`` of the op-aware traffic model's
+predicted N-to-T slowdown applied to its ``op=N`` twin — the
+scatter-accumulate transpose may cost what the extra priced traffic
+costs, never more. ``backend=cpu`` rows are recorded but not gated (the
+host-platform mesh shares one buffer, so the priced deltas cannot show
+up in wall time).
+
 Residual rule (the model-honesty gate): every ``residual=<v>`` derived
 field (``benchmarks.spmm_sweep``) and every record in an ``repro.obs/v1``
 document's ``"residuals"`` list (``launch.serve --metrics``) must be
@@ -135,17 +145,28 @@ COMPACT_REGRESSION_TOLERANCE = 1.10
 # traffic model prices memory systems the host platform does not have)
 RESIDUAL_MAX_OFF = 10.0
 
+# an op=T row may be at most this factor slower than the op-aware model's
+# predicted N-to-T slowdown applied to its op=N twin (scatter fixups are
+# noisier than the streaming forward rows, so the slack is wider than the
+# 10% same-shape gates)
+TRANSPOSE_REGRESSION_TOLERANCE = 1.25
+
 _CHUNK_ROW_RE = re.compile(
     r"^(?P<base>.*sellcs\+merge@\d+dev)/chunks=(?P<c>\d+)"
-    r"(?P<cx>/cx=(?:on|off))?/k=(?P<k>\d+)$")
+    r"(?P<cx>/cx=(?:on|off))?(?P<op>/op=[NT])?/k=(?P<k>\d+)$")
 
 _MESH_ROW_RE = re.compile(
     r"^(?P<base>.*sellcs\+(?:row|merge))@(?P<pd>\d+)x(?P<pm>\d+)mesh"
-    r"(?P<chunks>/chunks=\d+)?(?P<cx>/cx=(?:on|off))?/k=(?P<k>\d+)$")
+    r"(?P<chunks>/chunks=\d+)?(?P<cx>/cx=(?:on|off))?"
+    r"(?P<op>/op=[NT])?/k=(?P<k>\d+)$")
 
 _COMPACT_ROW_RE = re.compile(
     r"^(?P<base>.*sellcs\+(?:row|merge)@(?:\d+dev|\d+x\d+mesh)"
-    r"(?:/chunks=\d+)?)/cx=(?P<cx>on|off)/k=(?P<k>\d+)$")
+    r"(?:/chunks=\d+)?)/cx=(?P<cx>on|off)(?P<op>/op=[NT])?/k=(?P<k>\d+)$")
+
+_TRANSPOSE_ROW_RE = re.compile(
+    r"^(?P<base>.*sellcs\+(?:row|merge)@(?:\d+dev|\d+x\d+mesh)"
+    r"(?:/chunks=\d+)?(?:/cx=(?:on|off))?)/op=(?P<op>[NT])/k=(?P<k>\d+)$")
 
 
 def _derived_fields(derived: str) -> Iterator[Tuple[str, str]]:
@@ -419,11 +440,13 @@ def check_chunk_regressions(records: List[dict], origin: str) -> List[str]:
                 math.isfinite(us) or us <= 0:
             continue
         # a cx=on row only compares against chunked cx=on rows (and off
-        # against off) — compaction changes the X bytes under the stream
-        groups.setdefault((m["base"], m["cx"] or "", m["k"]),
+        # against off, op=T against op=T) — compaction changes the X bytes
+        # under the stream and the transpose changes the fixup direction
+        groups.setdefault((m["base"], m["cx"] or "", m["op"] or "",
+                           m["k"]),
                           {})[int(m["c"])] = (float(us), _model_us(rec))
     problems = []
-    for (base, cx, k), rows in sorted(groups.items()):
+    for (base, cx, opseg, k), rows in sorted(groups.items()):
         mono = rows.get(1)
         chunked = {c: r for c, r in rows.items() if c > 1}
         if mono is None or not chunked:
@@ -437,7 +460,7 @@ def check_chunk_regressions(records: List[dict], origin: str) -> List[str]:
         best_c, (best_us, _) = min(chunked.items(), key=lambda t: t[1][0])
         if best_us > CHUNK_REGRESSION_TOLERANCE * mono[0]:
             problems.append(
-                f"{origin}:{base}{cx}/k={k}: best chunked merge row "
+                f"{origin}:{base}{cx}{opseg}/k={k}: best chunked merge row "
                 f"(chunks={best_c}, {best_us:.4g} us) regresses "
                 f"{best_us / mono[0]:.2f}x over the monolithic chunks=1 "
                 f"row ({mono[0]:.4g} us) although the model predicts "
@@ -466,10 +489,10 @@ def check_mesh_regressions(records: List[dict], origin: str) -> List[str]:
             continue            # no per-device memory -> nothing to gate
         pd, pm = int(m["pd"]), int(m["pm"])
         key = (m["base"], pd * pm, m["chunks"] or "", m["cx"] or "",
-               m["k"])
+               m["op"] or "", m["k"])
         groups.setdefault(key, {})[(pd, pm)] = (float(us), _model_us(rec))
     problems = []
-    for (base, total, chunks, cx, k), rows in sorted(groups.items()):
+    for (base, total, chunks, cx, opseg, k), rows in sorted(groups.items()):
         pure = next((r for (pd, pm), r in rows.items() if pm == 1), None)
         sharded = {s: r for s, r in rows.items() if s[1] > 1}
         if pure is None or not sharded:
@@ -484,7 +507,7 @@ def check_mesh_regressions(records: List[dict], origin: str) -> List[str]:
                                        key=lambda t: t[1][0])
         if best_us > MESH_REGRESSION_TOLERANCE * pure[0]:
             problems.append(
-                f"{origin}:{base}@{total}dev{chunks}{cx}/k={k}: best "
+                f"{origin}:{base}@{total}dev{chunks}{cx}{opseg}/k={k}: best "
                 f"model-sharded mesh row ({bpd}x{bpm}, {best_us:.4g} us) "
                 f"regresses {best_us / pure[0]:.2f}x over the pure-data "
                 f"row ({pure[0]:.4g} us) although the model predicts the "
@@ -516,10 +539,10 @@ def check_compact_regressions(records: List[dict], origin: str
             continue
         if _backend(rec) in (None, "cpu"):
             continue            # shared X buffer -> nothing to gate
-        groups.setdefault((m["base"], m["k"]), {})[m["cx"]] = \
-            (float(us), _model_us(rec))
+        groups.setdefault((m["base"], m["op"] or "", m["k"]),
+                          {})[m["cx"]] = (float(us), _model_us(rec))
     problems = []
-    for (base, k), rows in sorted(groups.items()):
+    for (base, opseg, k), rows in sorted(groups.items()):
         off, on = rows.get("off"), rows.get("on")
         if off is None or on is None:
             continue                    # nothing to compare against
@@ -533,11 +556,53 @@ def check_compact_regressions(records: List[dict], origin: str
             continue
         if on[0] > COMPACT_REGRESSION_TOLERANCE * off[0]:
             problems.append(
-                f"{origin}:{base}/k={k}: compacted-gather row (cx=on, "
+                f"{origin}:{base}{opseg}/k={k}: compacted-gather row (cx=on, "
                 f"{on[0]:.4g} us) regresses {on[0] / off[0]:.2f}x over "
                 f"the replicated-X row ({off[0]:.4g} us) although the "
                 f"model predicts the gather pays here; tolerance is "
                 f"{COMPACT_REGRESSION_TOLERANCE:.2f}x")
+    return problems
+
+
+def check_transpose_regressions(records: List[dict], origin: str
+                                ) -> List[str]:
+    """The op-aware gate: per distributed row pair differing only in
+    ``op=N|T`` (``benchmarks.spmm_sweep --op N,T``), the measured op=T
+    row must stay within TRANSPOSE_REGRESSION_TOLERANCE of the op-aware
+    model's predicted N-to-T slowdown applied to the measured op=N row —
+    the scatter-accumulate transpose may cost what the extra traffic
+    (dense slot-space X read, full-column partial, scatter psum) prices,
+    but not more. ``backend=cpu`` rows are never gated: a host-platform
+    mesh shares one buffer for everything, so the priced traffic deltas
+    are physically unobservable there."""
+    groups: Dict[Tuple[str, str],
+                 Dict[str, Tuple[float, Optional[float]]]] = {}
+    for rec in records:
+        m = _TRANSPOSE_ROW_RE.match(str(rec.get("name", "")))
+        us = rec.get("us_per_call")
+        if not m or not isinstance(us, (int, float)) or not \
+                math.isfinite(us) or us <= 0:
+            continue
+        if _backend(rec) in (None, "cpu"):
+            continue            # no per-device memory -> nothing to gate
+        groups.setdefault((m["base"], m["k"]), {})[m["op"]] = \
+            (float(us), _model_us(rec))
+    problems = []
+    for (base, k), rows in sorted(groups.items()):
+        fw, tr = rows.get("N"), rows.get("T")
+        if fw is None or tr is None:
+            continue                    # nothing to compare against
+        if fw[1] is None or tr[1] is None or fw[1] <= 0:
+            continue                    # no model prediction to arm on
+        predicted = tr[1] / fw[1]       # the model's N-to-T slowdown
+        allowed = TRANSPOSE_REGRESSION_TOLERANCE * predicted * fw[0]
+        if tr[0] > allowed:
+            problems.append(
+                f"{origin}:{base}/k={k}: transpose row (op=T, "
+                f"{tr[0]:.4g} us) runs {tr[0] / fw[0]:.2f}x the op=N row "
+                f"({fw[0]:.4g} us) where the model predicts only "
+                f"{predicted:.2f}x; tolerance is "
+                f"{TRANSPOSE_REGRESSION_TOLERANCE:.2f}x the prediction")
     return problems
 
 
@@ -570,6 +635,7 @@ def check_records(records: List[dict], origin: str) -> List[str]:
     problems.extend(check_chunk_regressions(records, origin))
     problems.extend(check_mesh_regressions(records, origin))
     problems.extend(check_compact_regressions(records, origin))
+    problems.extend(check_transpose_regressions(records, origin))
     problems.extend(check_residuals(records, origin))
     return problems
 

@@ -31,6 +31,14 @@ partitioner's *measured* mean ``n_touched``, so
 wherever the model says the gather pays (disarmed on ``backend=cpu``
 like the mesh gate — a host-platform mesh shares one X buffer).
 
+``--op N,T`` adds the transpose multiply (``A^T X``, X read at [m, k])
+next to each forward row of every distributed group: one ``op=T`` row per
+``op=N`` row, each priced by the op-aware traffic model (dense slot-space
+X read, full-column partial, scatter psum), so
+``smoke_check.check_transpose_regressions`` can gate the transpose rows
+against the model-predicted N-to-T slowdown (disarmed on ``backend=cpu``
+like the other mesh gates).
+
 Emits the same CSV columns and JSON schema as ``benchmarks.run``.
 """
 from __future__ import annotations
@@ -76,7 +84,8 @@ def sweep_matrix(name: str, coo, ks, impl: str, reps: int, csv) -> None:
 
 
 def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
-                  chunk_counts, tag_of, compact_flags=(False,)) -> None:
+                  chunk_counts, tag_of, compact_flags=(False,),
+                  ops=("N",)) -> None:
     """Shared measurement core of ``sweep_distributed`` / ``sweep_mesh2d``:
     both schedules per (P_data, P_model) shape (ref impl bodies — the
     host-platform mesh has no TPU cores to feed the Pallas path), the
@@ -84,7 +93,11 @@ def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
     (2-D) traffic model. ``tag_of(pd, pm)`` renders the mesh part of the
     row name; sweeping ``compact_flags`` beyond the plain ``(False,)``
     appends a ``/cx=on|off`` segment and prices the compact rows with the
-    partitioner's measured mean ``n_touched``.
+    partitioner's measured mean ``n_touched``; sweeping ``ops`` beyond
+    ``("N",)`` appends an ``/op=N|T`` segment — the transpose rows read X
+    at [m, k] and are priced by the op-aware traffic model, giving
+    ``smoke_check.check_transpose_regressions`` its same-config op=N
+    baseline.
     """
     import jax
     import jax.numpy as jnp
@@ -108,6 +121,7 @@ def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
     # (smoke_check.check_mesh_regressions / check_compact_regressions)
     backend = jax.default_backend()
     tag_cx = tuple(compact_flags) != (False,)
+    tag_op = tuple(ops) != ("N",)
     for pd, pm in mesh_shapes:
         mesh = make_spmm_mesh((pd, pm))
         for cf in compact_flags:
@@ -127,37 +141,42 @@ def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
             # instead — its re-dealt col_map is what the multiply gathers
             # through, and the model must price THAT map's n_touched
             mrg_sharded = partition_sellcs_nnz(sc, pd, compact_x=cf)
-            variants = [("row", None, mean_nt(row_sharded),
-                         jax.jit(lambda X, rs=row_sharded, me=mesh:
-                                 spmm_row_distributed(rs, X, me)))]
-            for c in chunk_counts:
-                ms = mrg_sharded
-                if cf and int(c) > 1:
-                    ms = partition_sellcs_nnz(sc, pd, num_chunks=int(c),
-                                              compact_x=True)
+            variants = []
+            for opv in ops:
                 variants.append(
-                    ("merge", int(c), mean_nt(ms),
-                     jax.jit(lambda X, ms=ms, me=mesh, c=int(c):
-                             spmm_merge_distributed(ms, X, me,
-                                                    num_chunks=c))))
+                    ("row", None, mean_nt(row_sharded), opv,
+                     jax.jit(lambda X, rs=row_sharded, me=mesh, o=opv:
+                             spmm_row_distributed(rs, X, me, op=o))))
+                for c in chunk_counts:
+                    ms = mrg_sharded
+                    if cf and int(c) > 1:
+                        ms = partition_sellcs_nnz(sc, pd, num_chunks=int(c),
+                                                  compact_x=True)
+                    variants.append(
+                        ("merge", int(c), mean_nt(ms), opv,
+                         jax.jit(lambda X, ms=ms, me=mesh, c=int(c), o=opv:
+                                 spmm_merge_distributed(ms, X, me,
+                                                        num_chunks=c,
+                                                        op=o))))
             cx = f"/cx={'on' if cf else 'off'}" if tag_cx else ""
-            for sched, nc, n_touched, jitted in variants:
+            for sched, nc, n_touched, opv, jitted in variants:
                 tag = f"{name}/sellcs+{sched}{tag_of(pd, pm)}" + \
-                    (f"/chunks={nc}" if nc is not None else "") + cx
+                    (f"/chunks={nc}" if nc is not None else "") + cx + \
+                    (f"/op={opv}" if tag_op else "")
                 for k in ks:
                     X = jnp.asarray(rng.standard_normal(
-                        (n, k)).astype(np.float32))
+                        (m if opv == "T" else n, k)).astype(np.float32))
                     sec = harness.time_fn(lambda: jitted(X), reps=reps,
                                           warmup=1)
                     gflops = 2.0 * nnz * k / sec / 1e9
                     hbm, coll = spmm_distributed_traffic(
                         m, n, k, pd, sched, nnz=nnz, max_row_nnz=max_row,
                         model_devices=pm, compact_x=cf,
-                        n_touched=n_touched)
+                        n_touched=n_touched, op=opv)
                     model_s = spmm_distributed_time(
                         m, n, k, pd, sched, nnz=nnz, max_row_nnz=max_row,
                         num_chunks=nc or 1, model_devices=pm,
-                        compact_x=cf, n_touched=n_touched)
+                        compact_x=cf, n_touched=n_touched, op=opv)
                     # residual = observed/modeled — the same quantity the
                     # serve-path ResidualLedger records, stamped per row
                     # so smoke_check's residual gate reads sweep JSON and
@@ -174,27 +193,30 @@ def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
 
 
 def sweep_distributed(name: str, coo, ks, devices: int, reps: int,
-                      csv, chunk_counts=(1,), compact_flags=(False,)
-                      ) -> None:
+                      csv, chunk_counts=(1,), compact_flags=(False,),
+                      ops=("N",)) -> None:
     """Distributed schedules on a 1-D `devices`-wide data mesh: the
     ``@{P}dev`` row family ``smoke_check``'s chunk gate consumes."""
     _sweep_shapes(name, coo, ks, ((devices, 1),), reps, csv, chunk_counts,
-                  lambda pd, pm: f"@{pd}dev", compact_flags=compact_flags)
+                  lambda pd, pm: f"@{pd}dev", compact_flags=compact_flags,
+                  ops=ops)
 
 
 def sweep_mesh2d(name: str, coo, ks, mesh_shapes, reps: int, csv,
-                 chunk_counts=(1,), compact_flags=(False,)) -> None:
+                 chunk_counts=(1,), compact_flags=(False,),
+                 ops=("N",)) -> None:
     """Both schedules over 2-D (data, model) mesh factorizations: the
     ``@{Pd}x{Pm}mesh`` row family — include a ``Pm = 1`` shape to give
     ``smoke_check``'s model-axis gate its pure-data baseline."""
     _sweep_shapes(name, coo, ks, mesh_shapes, reps, csv, chunk_counts,
                   lambda pd, pm: f"@{pd}x{pm}mesh",
-                  compact_flags=compact_flags)
+                  compact_flags=compact_flags, ops=ops)
 
 
 def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
         reps: int = 3, matrices_only=None, devices: int = 1,
-        chunk_counts=(1,), mesh_shapes=(), compact_flags=(False,)) -> None:
+        chunk_counts=(1,), mesh_shapes=(), compact_flags=(False,),
+        ops=("N",)) -> None:
     from repro.data import matrices
     from . import harness
 
@@ -213,6 +235,8 @@ def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
     if tuple(compact_flags) != (False,):
         extra += (", compact_x="
                   f"{[('on' if f else 'off') for f in compact_flags]}")
+    if tuple(ops) != ("N",):
+        extra += f", ops={list(ops)}"
     title = f"SpMM k-sweep (impl={impl}, k in {ks}{extra})"
     csv = harness.Csv(title)
     for name in names:
@@ -223,11 +247,11 @@ def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
         if devices > 1:
             sweep_distributed(name, coo, ks, devices, reps, csv,
                               chunk_counts=chunk_counts,
-                              compact_flags=compact_flags)
+                              compact_flags=compact_flags, ops=ops)
         if mesh_shapes:
             sweep_mesh2d(name, coo, ks, mesh_shapes, reps, csv,
                          chunk_counts=chunk_counts,
-                         compact_flags=compact_flags)
+                         compact_flags=compact_flags, ops=ops)
 
 
 def main(argv=None) -> None:
@@ -258,6 +282,12 @@ def main(argv=None) -> None:
                          "X gather next to replication — 'on,off' emits a "
                          "cx=on row per cx=off row so smoke_check's "
                          "compact gate has its replicated baseline")
+    ap.add_argument("--op", default="N",
+                    help="comma-separated subset of N,T: sweep the "
+                         "transpose multiply (A^T X) next to the forward "
+                         "one — 'N,T' emits an op=T row per op=N row so "
+                         "smoke_check's transpose gate has its forward "
+                         "baseline")
     args = ap.parse_args(argv)
     try:
         chunk_counts = tuple(int(c) for c in args.chunks.split(",") if c)
@@ -271,6 +301,10 @@ def main(argv=None) -> None:
         raise SystemExit(f"--compact-x must be comma-separated on/off "
                          f"entries, got {args.compact_x!r}")
     compact_flags = tuple(s == "on" for s in cx_entries)
+    ops = tuple(s for s in args.op.split(",") if s)
+    if not ops or any(o not in ("N", "T") for o in ops):
+        raise SystemExit(f"--op must be comma-separated N/T entries, "
+                         f"got {args.op!r}")
     mesh_shapes = ()
     if args.mesh:
         try:
@@ -305,7 +339,7 @@ def main(argv=None) -> None:
         reps=args.reps,
         matrices_only=args.matrices.split(",") if args.matrices else None,
         devices=args.devices, chunk_counts=chunk_counts,
-        mesh_shapes=mesh_shapes, compact_flags=compact_flags)
+        mesh_shapes=mesh_shapes, compact_flags=compact_flags, ops=ops)
     if args.json:
         harness.dump_json(args.json)
 

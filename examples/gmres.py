@@ -1,10 +1,13 @@
 """Restarted GMRES over the sparse core — the paper's §1 motivating workload
 ("iterative methods for sparse linear systems such as GMRES").
 
-Solves (I + 0.05·A_norm) x = b on an RMAT graph with GMRES(20); the operator
-is a repro.core SpMV, so the conversion cost amortizes over all inner
-iterations (the §7 economics again). The autotuner (paper §8 future work)
-picks the format.
+Solves (I + 0.05·A_norm) x = b on an RMAT graph with GMRES(20), then the
+adjoint system (I + 0.05·A_norm^T) y = b — both through ONE
+``repro.spmm.SparseOperator`` handle: the selector picks the plan once,
+``op @ v`` drives the forward solve and ``op.T @ v`` the transposed one
+over the same stored stream (no second conversion, no second partition —
+the operator stats prove it). The conversion cost amortizes over all
+inner iterations of both solves (the §7 economics again).
 
 Run:  PYTHONPATH=src python examples/gmres.py
 """
@@ -13,23 +16,25 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import autotune, convert, spmv, to_coo
+from repro.core import PlanSpec, to_coo
 from repro.data import matrices
+from repro.spmm import SparseOperator
 
 rows, cols, vals, shape = matrices.rmat(scale=12, edge_factor=10, seed=0)
 n = shape[0]
 deg = np.bincount(cols, minlength=n).astype(np.float32)
 coo = to_coo(rows, cols, 1.0 / np.maximum(deg[cols], 1.0), shape)
 
-best, _ = autotune(coo, num_spmvs=500, reps=3)
-print(f"autotuner picked: {best.algorithm} (beta={best.beta})")
-kw = {} if best.beta is None else {"beta": best.beta}
-A = convert(coo, best.algorithm, **kw)
+t0 = time.perf_counter()
+A = SparseOperator.from_coo(coo, PlanSpec(num_devices=1), impl="ref",
+                            k_hint=1, num_spmvs=500)
+print(f"operator plan: {A.plan.label} "
+      f"({(time.perf_counter() - t0) * 1e3:.0f} ms to realize)")
 
 
-def op(v):
-    """(I + 0.05 A) v — diagonally dominant, guaranteed convergence."""
-    return v + 0.05 * spmv(A, v, impl="ref")
+def shifted(op):
+    """(I + 0.05 op) v — diagonally dominant, guaranteed convergence."""
+    return lambda v: v + 0.05 * (op @ v)
 
 
 def gmres(op, b, m=20, restarts=10, tol=1e-8):
@@ -65,9 +70,21 @@ def gmres(op, b, m=20, restarts=10, tol=1e-8):
 b = jnp.asarray(np.random.default_rng(1).standard_normal(n)
                 .astype(np.float32))
 t0 = time.perf_counter()
-x = gmres(op, b)
-res = float(jnp.linalg.norm(b - op(x)) / jnp.linalg.norm(b))
-print(f"GMRES done in {time.perf_counter() - t0:.2f}s, "
+x = gmres(shifted(A), b)
+res = float(jnp.linalg.norm(b - shifted(A)(x)) / jnp.linalg.norm(b))
+print(f"forward GMRES done in {time.perf_counter() - t0:.2f}s, "
       f"relative residual {res:.2e}")
 assert res < 1e-5
+
+# adjoint solve through the SAME plan: op.T shares the realized stream,
+# so the stats show one build total across both solves
+builds_before = A.stats.sellcs_builds
+t0 = time.perf_counter()
+y = gmres(shifted(A.T), b)
+res_t = float(jnp.linalg.norm(b - shifted(A.T)(y)) / jnp.linalg.norm(b))
+print(f"adjoint GMRES done in {time.perf_counter() - t0:.2f}s, "
+      f"relative residual {res_t:.2e}")
+assert res_t < 1e-5
+assert A.stats.sellcs_builds == builds_before, "transpose must not rebuild"
+print(f"operator stats: {A.stats}")
 print("gmres OK")

@@ -9,18 +9,24 @@ Module map
                      the §7 algorithm selector (k-aware ``select``) and the
                      §8 autotuner.
 ``repro.spmm``       the multi-RHS SpMM engine: SELL-C-σ storage
-                     (``sellcs``), pure-jnp oracles (``reference``), tiled
-                     Pallas kernels with a k-tile grid dimension
-                     (``kernels``), request batching for the serve path
-                     (``batching``), the shard_map mesh schedules —
-                     row bands / merge spans over the slice stream
-                     (``distributed``) — and ``SparseOperator``
-                     (``operator``): the stable partition-once/
-                     multiply-many handle whose atomic plan swap carries
-                     the serve path's online format migration, and
-                     ``Fleet`` (``fleet``): the multi-tenant operator
-                     registry — fingerprint-keyed plan cache, device-loss
-                     re-deal via ``redeal_sellcs``. SpMV is the k = 1
+                     (``sellcs``; ``structure="symmetric"`` stores one
+                     triangle + diagonal), pure-jnp oracles
+                     (``reference``), tiled Pallas kernels with a k-tile
+                     grid dimension plus the scatter-accumulate transpose
+                     kernel (``kernels``), request batching for the serve
+                     path (``batching``), the shard_map mesh schedules —
+                     row bands / merge spans over the slice stream, both
+                     op-aware (``op="N"|"T"``, ``distributed``) — and
+                     ``SparseOperator`` (``operator``): the stable
+                     partition-once/multiply-many handle whose atomic plan
+                     swap carries the serve path's online format
+                     migration, with ``rmatmul``/``.T`` running ``A^T X``
+                     over the same stored plan and ``sparse_matmul``
+                     making both ends differentiable, and ``Fleet``
+                     (``fleet``): the multi-tenant operator registry —
+                     fingerprint-keyed plan cache, device-loss re-deal via
+                     ``redeal_sellcs``, LRU eviction under a
+                     ``max_bytes`` storage budget. SpMV is the k = 1
                      special case.
 ``repro.kernels``    Pallas TPU kernels for the single-vector compute
                      paths: blocked SpMV (``bsr_spmv``), merge-path SpMV

@@ -52,6 +52,9 @@ class TuneResult:
     compact_x: Optional[bool] = None  # sparsity-aware X gather picked by
                                       #   the distributed score (sellcs
                                       #   only; None off the mesh)
+    structure: Optional[str] = None   # "symmetric" when one-triangle
+                                      #   storage won the distributed score
+                                      #   (sellcs on A == A^T only)
     residual: Optional[float] = None  # observed/modeled correction the
                                       #   feedback ledger applied to this
                                       #   result's winning distributed
@@ -199,26 +202,38 @@ def _rescore_distributed(r: TuneResult, stats, k: int, num_devices: int,
     if spec is not None and spec.compact_x is not None:
         compacts = ((spec.compact_x,) if r.algorithm == "sellcs"
                     else (False,))
+    # one-triangle storage: executable on sellcs, convertible only when
+    # A == A^T; "general" scored first so symmetry must strictly win
+    structures = ("general",)
+    if r.algorithm == "sellcs" and getattr(stats, "symmetric", False):
+        structures = ("general", "symmetric")
+    if spec is not None and spec.structure is not None:
+        structures = ((spec.structure,) if r.algorithm == "sellcs"
+                      else ("general",))
 
-    def corrected(s, nc, mesh, cf):
+    def corrected(s, nc, mesh, cf, st):
         model_s = spmm_distributed_time(
             stats.m, stats.n, k, mesh[0], s, matrix_bytes=mat_bytes,
             max_row_nnz=stats.max_row_nnz, num_chunks=nc,
-            model_devices=mesh[1], compact_x=cf, nnz=stats.nnz)
+            model_devices=mesh[1], compact_x=cf, nnz=stats.nnz,
+            structure=st)
         corr = 1.0
         if feedback is not None:
             from repro.obs import choice_labels
             corr = feedback.correction(**choice_labels(
-                schedule=s, num_chunks=nc, mesh_shape=mesh, compact_x=cf))
+                schedule=s, num_chunks=nc, mesh_shape=mesh, compact_x=cf,
+                structure=st))
         return model_s * corr, corr
 
-    (schedule, num_chunks, mesh_shape, compact), (model_s, corr) = min(
-        (((s, nc, mesh, cf), corrected(s, nc, mesh, cf))
-         for s, nc, mesh in grid for cf in compacts),
+    ((schedule, num_chunks, mesh_shape, compact, structure),
+     (model_s, corr)) = min(
+        (((s, nc, mesh, cf, st), corrected(s, nc, mesh, cf, st))
+         for s, nc, mesh in grid for cf in compacts for st in structures),
         key=lambda t: t[1][0])
     per_multiply = r.spmv_s * (model_s / max(base_s, 1e-30))
     return dataclasses.replace(
         r, total_s=r.convert_s + num_spmvs * per_multiply,
         num_devices=num_devices, schedule=schedule, dist_model_s=model_s,
         num_chunks=num_chunks, mesh_shape=mesh_shape, compact_x=compact,
+        structure=structure,
         residual=corr if feedback is not None and corr != 1.0 else None)

@@ -27,6 +27,7 @@ class MatrixStats:
     nnz: int
     max_row_nnz: int
     row_var: float
+    symmetric: bool = False    # A == A^T (pattern and values)
 
     @property
     def density(self) -> float:
@@ -40,6 +41,34 @@ class MatrixStats:
                                       max(self.m, 1))
 
 
+def _is_symmetric(coo: COO) -> bool:
+    """Host-side ``A == A^T`` check (pattern exact after summing duplicate
+    coordinates, values to fp-reassociation tolerance) — the same predicate
+    ``coo_to_sellcs(structure='symmetric')`` enforces, so a True here means
+    one-triangle storage is actually convertible."""
+    m, n = coo.shape
+    if m != n:
+        return False
+    rows = np.asarray(coo.rows, np.int64)
+    cols = np.asarray(coo.cols, np.int64)
+    if rows.size == 0:
+        return True
+    vals = np.asarray(coo.data, np.float64)
+
+    def dedup(keys, v):
+        order = np.argsort(keys, kind="stable")
+        kk, vv = keys[order], v[order]
+        uk, start = np.unique(kk, return_index=True)
+        return uk, np.add.reduceat(vv, start)
+
+    ka, va = dedup(rows * n + cols, vals)
+    kb, vb = dedup(cols * n + rows, vals)
+    if ka.shape != kb.shape or not np.array_equal(ka, kb):
+        return False
+    scale = float(np.abs(va).max()) if va.size else 1.0
+    return bool(np.allclose(va, vb, rtol=1e-6, atol=1e-9 * max(scale, 1.0)))
+
+
 def matrix_stats(coo: COO) -> MatrixStats:
     rows = np.asarray(coo.rows)
     counts = np.bincount(rows, minlength=coo.shape[0]) if rows.size else \
@@ -47,7 +76,8 @@ def matrix_stats(coo: COO) -> MatrixStats:
     return MatrixStats(
         m=coo.shape[0], n=coo.shape[1], nnz=int(rows.size),
         max_row_nnz=int(counts.max()) if counts.size else 0,
-        row_var=float(counts.var()) if counts.size else 0.0)
+        row_var=float(counts.var()) if counts.size else 0.0,
+        symmetric=_is_symmetric(coo))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -296,6 +326,7 @@ class PlanSpec:
     compact_x: Optional[bool] = None
     schedule: Optional[str] = None
     algorithm: Optional[str] = None
+    structure: Optional[str] = None     # "general" | "symmetric" | unpinned
 
     def canonical(self) -> "PlanSpec":
         """Validate and normalize: mesh factors must agree with
@@ -326,6 +357,10 @@ class PlanSpec:
         if self.schedule is not None and self.schedule not in SCHEDULES:
             raise ValueError(f"schedule must be one of {SCHEDULES}, got "
                              f"{self.schedule!r}")
+        if self.structure is not None and \
+                self.structure not in ("general", "symmetric"):
+            raise ValueError(f"structure must be 'general' or 'symmetric', "
+                             f"got {self.structure!r}")
         return dataclasses.replace(self, num_devices=nd, mesh_shape=mesh,
                                    num_chunks=nc)
 
@@ -334,6 +369,8 @@ class PlanSpec:
         (``obs.residuals.choice_labels``); unpinned (None) axes are
         omitted, which the ledger treats as wildcards."""
         from repro.obs.residuals import choice_labels
+        if self.structure is not None:
+            extra.setdefault("structure", self.structure)
         return choice_labels(schedule=self.schedule,
                              num_chunks=self.num_chunks,
                              mesh_shape=self.mesh_shape,
@@ -409,16 +446,19 @@ DISTRIBUTED_ALGOS = ("parcrs", "sellcs")
 
 
 class DistributedChoice(NamedTuple):
-    """Winner of the joint (format × schedule × mesh × chunks × gather)
-    grid. Unpacks like the old ``(format, schedule, num_chunks)`` triple
-    with ``mesh_shape`` — the chosen (P_data, P_model) factorization —
-    riding fourth and ``compact_x`` — whether the sparsity-aware X gather
-    beats replication — fifth."""
+    """Winner of the joint (format × schedule × mesh × chunks × gather ×
+    structure) grid. Unpacks like the old ``(format, schedule,
+    num_chunks)`` triple with ``mesh_shape`` — the chosen (P_data, P_model)
+    factorization — riding fourth, ``compact_x`` — whether the
+    sparsity-aware X gather beats replication — fifth, and ``structure`` —
+    ``"symmetric"`` when one-triangle storage wins on a symmetric matrix —
+    sixth."""
     algorithm: str
     schedule: str
     num_chunks: int
     mesh_shape: Tuple[int, int] = (1, 1)
     compact_x: bool = False
+    structure: str = "general"
 
 
 def select_distributed(stats: MatrixStats, *, k: int = 1,
@@ -530,28 +570,42 @@ def select_distributed(stats: MatrixStats, *, k: int = 1,
         compacts = (False, True) if algo == "sellcs" else (False,)
         if spec is not None and spec.compact_x is not None:
             compacts = ((spec.compact_x,) if algo == "sellcs" else (False,))
+        # one-triangle storage is executable only on SELL-C-σ and only
+        # convertible when the matrix actually satisfies A == A^T; the
+        # general candidate is scored first so symmetry must strictly win
+        structures = ("general",)
+        if algo == "sellcs" and stats.symmetric:
+            structures = ("general", "symmetric")
+        if spec is not None and spec.structure is not None:
+            structures = ((spec.structure,) if algo == "sellcs"
+                          else ("general",))
         for schedule, nc, (pd, pm) in grid:
             for compact in compacts:
-                sec = spmm_distributed_time(
-                    stats.m, stats.n, k, pd, schedule,
-                    matrix_bytes=mat_bytes, dtype_bytes=dtype_bytes,
-                    max_row_nnz=stats.max_row_nnz, num_chunks=nc,
-                    model_devices=pm, compact_x=compact, nnz=stats.nnz)
-                if feedback is not None:
-                    sec *= feedback.correction(**choice_labels(
-                        schedule=schedule, num_chunks=nc,
-                        mesh_shape=(pd, pm), compact_x=compact))
-                if thr is None:
-                    per_spmv = sec / max(base_s, 1e-30)
-                else:
-                    per_spmv = measured * sec / max(algo_base_s, 1e-30)
-                cost = conv[algo] + num_spmvs * per_spmv
-                # "or best is None" keeps a valid choice even when every
-                # cost is inf (e.g. all-inf conversion priors); the strict
-                # "<" with compact=False scored first refuses compaction
-                # whenever it ties replication (dense-columns wash)
-                if cost < best_cost or best is None:
-                    best = DistributedChoice(algo, schedule, nc, (pd, pm),
-                                             compact)
-                    best_cost = cost
+                for structure in structures:
+                    sec = spmm_distributed_time(
+                        stats.m, stats.n, k, pd, schedule,
+                        matrix_bytes=mat_bytes, dtype_bytes=dtype_bytes,
+                        max_row_nnz=stats.max_row_nnz, num_chunks=nc,
+                        model_devices=pm, compact_x=compact,
+                        nnz=stats.nnz, structure=structure)
+                    if feedback is not None:
+                        sec *= feedback.correction(**choice_labels(
+                            schedule=schedule, num_chunks=nc,
+                            mesh_shape=(pd, pm), compact_x=compact,
+                            structure=structure))
+                    if thr is None:
+                        per_spmv = sec / max(base_s, 1e-30)
+                    else:
+                        per_spmv = measured * sec / max(algo_base_s, 1e-30)
+                    cost = conv[algo] + num_spmvs * per_spmv
+                    # "or best is None" keeps a valid choice even when
+                    # every cost is inf (e.g. all-inf conversion priors);
+                    # the strict "<" with compact=False / general scored
+                    # first refuses compaction or one-triangle storage
+                    # whenever they tie the plain candidate
+                    if cost < best_cost or best is None:
+                        best = DistributedChoice(algo, schedule, nc,
+                                                 (pd, pm), compact,
+                                                 structure)
+                        best_cost = cost
     return best

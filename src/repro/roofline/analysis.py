@@ -195,7 +195,9 @@ def spmm_distributed_traffic(m: int, n: int, k: int, num_devices: int,
                              nnz: int = 0, dtype_bytes: int = 4,
                              max_row_nnz: int = 0, model_devices: int = 1,
                              compact_x: bool = False,
-                             n_touched: Optional[float] = None
+                             n_touched: Optional[float] = None,
+                             op: str = "N",
+                             structure: str = "general"
                              ) -> Tuple[float, float]:
     """(per-device HBM bytes, per-device collective bytes) of one k-RHS
     distributed SpMM under the two paper schedules.
@@ -238,6 +240,27 @@ def spmm_distributed_traffic(m: int, n: int, k: int, num_devices: int,
     ``ShardedSellCS.storage_bytes``, not per multiply — like the k-tile
     padding, they are below the model's resolution.
 
+    ``op='T'`` prices ``Y = A^T X`` over the same stored stream: X is read
+    in slot space (a dense ``m * kc`` read — the σ-permutation gather was
+    paid when X entered slot order, and ``compact_x`` cannot shrink it),
+    every data shard scatters a full ``[n, kc]`` column partial, and BOTH
+    schedules pay a carry-out collective on it — column ownership is never
+    banded, so the transpose adds ``2 * n * kc`` all-reduce bytes even to
+    "row" (whose normal fixup is free). Under ``compact_x`` the partial
+    lives in the shard's touched-column space instead: ``n`` shrinks to the
+    touched count in the Y and wire terms (the stacked per-shard outputs
+    are gathered and scatter-added once, not all-reduced).
+
+    ``structure='symmetric'`` prices one-triangle storage (``m == n``
+    required): the streamed matrix halves (plus a dense ``m`` diagonal) and
+    the multiply pays the collectives of BOTH passes — the stored triangle
+    must be carried out in row space (the N fixup) and column space (the T
+    scatter fixup). The HBM vector terms are priced once: the model prices
+    the fused one-pass ideal (each stored byte emits both contributions);
+    the executable two-pass combine re-reads X — a gap the residual ledger
+    measures rather than the model hiding the halved stream. ``op`` is
+    moot under symmetry (``A^T == A``).
+
     ``num_devices == 1`` degrades to the single-device stream for both
     (per model shard when ``model_devices > 1``: full matrix stream, a
     ``k / P_model`` column slab, no collective — the psum axis is trivial).
@@ -245,11 +268,50 @@ def spmm_distributed_traffic(m: int, n: int, k: int, num_devices: int,
     if schedule not in ("row", "merge"):
         raise ValueError(f"schedule must be 'row' or 'merge', got "
                          f"{schedule!r}")
+    if op not in ("N", "T"):
+        raise ValueError(f"op must be 'N' or 'T', got {op!r}")
+    if structure not in ("general", "symmetric"):
+        raise ValueError(f"structure must be 'general' or 'symmetric', "
+                         f"got {structure!r}")
     if matrix_bytes is None:
         matrix_bytes = float(csr_stream_bytes(nnz, m, dtype_bytes))
+    if structure == "symmetric":
+        if m != n:
+            raise ValueError(f"structure='symmetric' needs a square "
+                             f"matrix, got {m}x{n}")
+        half = 0.5 * float(matrix_bytes) + float(m) * dtype_bytes
+        hbm, coll_n = spmm_distributed_traffic(
+            m, n, k, num_devices, schedule, matrix_bytes=half, nnz=nnz,
+            dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
+            model_devices=model_devices, compact_x=compact_x,
+            n_touched=n_touched, op="N")
+        _, coll_t = spmm_distributed_traffic(
+            m, n, k, num_devices, schedule, matrix_bytes=half, nnz=nnz,
+            dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
+            model_devices=model_devices, compact_x=compact_x,
+            n_touched=n_touched, op="T")
+        return hbm, coll_n + coll_t
     P = max(int(num_devices), 1)
     Pm = max(int(model_devices), 1)
     kc = float(k) / Pm                   # X/Y columns owned per model shard
+    if op == "T":
+        x_bytes = float(m) * kc * dtype_bytes      # dense slot-space read
+        if P == 1:
+            return (matrix_bytes + x_bytes
+                    + float(n) * kc * dtype_bytes), 0.0
+        stream = matrix_bytes / P
+        if schedule == "row":
+            # banding splits the stream but not column ownership; the
+            # dense-row floor still binds the critical shard's stream
+            stream = max(stream, float(max_row_nnz) * (4 + dtype_bytes))
+        if compact_x:
+            nt = (min(float(n_touched), float(n)) if n_touched is not None
+                  else spmm_touched_fraction(n, nnz, P) * float(n))
+            # touched-space partial, gathered + scatter-added once
+            return stream + x_bytes + nt * kc * dtype_bytes, \
+                nt * kc * dtype_bytes
+        y_bytes = float(n) * kc * dtype_bytes      # full column partial
+        return stream + x_bytes + y_bytes, 2.0 * float(n) * kc * dtype_bytes
     if compact_x:
         nt = (min(float(n_touched), float(n)) if n_touched is not None
               else spmm_touched_fraction(n, nnz, P) * float(n))
@@ -284,8 +346,9 @@ def spmm_distributed_collective_s(m: int, n: int, k: int, num_devices: int,
                                   link_bw: float = ICI_LINK_BW,
                                   model_devices: int = 1,
                                   compact_x: bool = False,
-                                  n_touched: Optional[float] = None
-                                  ) -> float:
+                                  n_touched: Optional[float] = None,
+                                  op: str = "N",
+                                  structure: str = "general") -> float:
     """EXPOSED collective seconds of one distributed multiply — the part of
     the wire time that does not hide under the slice stream.
 
@@ -307,7 +370,7 @@ def spmm_distributed_collective_s(m: int, n: int, k: int, num_devices: int,
         m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
         dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
         model_devices=model_devices, compact_x=compact_x,
-        n_touched=n_touched)
+        n_touched=n_touched, op=op, structure=structure)
     if coll <= 0.0:
         return 0.0                    # "row" / single device: no wire time
     c = int(num_chunks)
@@ -325,7 +388,9 @@ def spmm_distributed_time(m: int, n: int, k: int, num_devices: int,
                           link_bw: float = ICI_LINK_BW,
                           model_devices: int = 1,
                           compact_x: bool = False,
-                          n_touched: Optional[float] = None) -> float:
+                          n_touched: Optional[float] = None,
+                          op: str = "N",
+                          structure: str = "general") -> float:
     """Modelled seconds per distributed multiply: HBM term + the *exposed*
     collective term. ``num_chunks = 1`` keeps the PR-2 no-overlap model
     (both terms on the Y critical path, plus one launch); ``num_chunks > 1``
@@ -333,18 +398,20 @@ def spmm_distributed_time(m: int, n: int, k: int, num_devices: int,
     ``model_devices > 1`` prices the 2-D (data, model) mesh (k-proportional
     terms divide by ``P_model``); ``compact_x=True`` prices the
     sparsity-aware X gather (the X term becomes nnz-proportional —
-    ``n_touched`` supplies a measured per-shard mean)."""
+    ``n_touched`` supplies a measured per-shard mean); ``op='T'`` prices
+    the transpose scatter fixup; ``structure='symmetric'`` the
+    one-triangle stream (see :func:`spmm_distributed_traffic`)."""
     hbm, _ = spmm_distributed_traffic(
         m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
         dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
         model_devices=model_devices, compact_x=compact_x,
-        n_touched=n_touched)
+        n_touched=n_touched, op=op, structure=structure)
     return hbm / hbm_bw + spmm_distributed_collective_s(
         m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
         dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
         num_chunks=num_chunks, hbm_bw=hbm_bw, link_bw=link_bw,
         model_devices=model_devices, compact_x=compact_x,
-        n_touched=n_touched)
+        n_touched=n_touched, op=op, structure=structure)
 
 
 def from_compiled(compiled, chips: int, model_flops: float = 0.0,

@@ -31,31 +31,44 @@ from .distributed import (ShardedSellCS, partition_sellcs_nnz,
                           spmm_row_distributed)
 from .kernels import choose_k_tile, csr_spmm, sellcs_spmm, tiled_spmm
 from .operator import (OperatorStats, RealizedPlan, SparseOperator,
-                       coo_fingerprint)
+                       TransposedOperator, coo_fingerprint, sparse_matmul)
 from .fleet import Fleet, FleetStats
-from .reference import (spmm_blocked, spmm_coo, spmm_csr, spmm_ref,
-                        spmm_sellcs)
+from .reference import (spmm_blocked, spmm_coo, spmm_coo_t, spmm_csr,
+                        spmm_ref, spmm_sellcs, spmm_sellcs_t)
 from .sellcs import SellCS, coo_to_sellcs
 
 
 def spmm(mat, x: jax.Array, *, impl: str = "auto",
-         k_tile: Optional[int] = None) -> jax.Array:
+         k_tile: Optional[int] = None, op: str = "N") -> jax.Array:
     """Multiply ``Y = A @ X`` for any supported format.
 
     impl in {"auto", "ref", "pallas", "pallas_interpret"} — same contract
     as ``core.spmv.spmv``: "auto" takes the Pallas path on TPU for formats
     with a kernel, the XLA reference otherwise.
+
+    ``op='T'`` computes ``Y = A^T X`` over the same stored stream
+    (``X: [m, k]``, ``Y: [n, k]``); the Pallas path supports it on
+    SELL-C-σ (the scatter-accumulate transpose kernel), the reference
+    path on SELL-C-σ and COO. A symmetric one-triangle SELL-C-σ matrix
+    accepts either op (``A^T == A``).
     """
     from repro.kernels.tiling import TiledSparse
+    if op not in ("N", "T"):
+        raise ValueError(f"op must be 'N' or 'T', got {op!r}")
     if impl in ("pallas", "pallas_interpret"):
         interpret = impl == "pallas_interpret"
         x2 = x[:, None] if x.ndim == 1 else x
+        if op == "T" and not isinstance(mat, SellCS):
+            raise TypeError(
+                f"no transpose SpMM kernel for {type(mat).__name__}; "
+                "convert with coo_to_sellcs")
         if isinstance(mat, TiledSparse):
             y = tiled_spmm(mat, x2, k_tile=k_tile, interpret=interpret)
         elif isinstance(mat, CSR):
             y = csr_spmm(mat, x2, k_tile=k_tile, interpret=interpret)
         elif isinstance(mat, SellCS):
-            y = sellcs_spmm(mat, x2, k_tile=k_tile, interpret=interpret)
+            y = sellcs_spmm(mat, x2, k_tile=k_tile, interpret=interpret,
+                            op=op)
         else:
             raise TypeError(
                 f"no SpMM kernel for {type(mat).__name__}; convert with "
@@ -63,21 +76,24 @@ def spmm(mat, x: jax.Array, *, impl: str = "auto",
         return y[:, 0] if x.ndim == 1 else y
     if impl == "auto":
         on_tpu = jax.default_backend() == "tpu"
-        if on_tpu and isinstance(mat, (TiledSparse, CSR, SellCS)):
-            return spmm(mat, x, impl="pallas", k_tile=k_tile)
-    return spmm_ref(mat, x)
+        if on_tpu and isinstance(mat, (TiledSparse, CSR, SellCS)) and \
+                (op == "N" or isinstance(mat, SellCS)):
+            return spmm(mat, x, impl="pallas", k_tile=k_tile, op=op)
+    return spmm_ref(mat, x, op=op)
 
 
 __all__ = [
     "SellCS", "coo_to_sellcs", "spmm", "choose_k_tile",
     "tiled_spmm", "csr_spmm", "sellcs_spmm",
     "spmm_ref", "spmm_coo", "spmm_csr", "spmm_blocked", "spmm_sellcs",
+    "spmm_sellcs_t", "spmm_coo_t",
     "RequestBatcher", "FleetBatcher", "QueueFull", "SpmvRequest",
     "batch_spmv", "reference",
     "ShardedSellCS", "partition_sellcs_rows", "partition_sellcs_nnz",
     "rechunk_sellcs", "redeal_sellcs",
     "spmm_row_distributed", "spmm_merge_distributed",
-    "SparseOperator", "RealizedPlan", "OperatorStats", "coo_fingerprint",
+    "SparseOperator", "TransposedOperator", "RealizedPlan",
+    "OperatorStats", "coo_fingerprint", "sparse_matmul",
     "Fleet", "FleetStats",
     "COO", "CSR", "BlockedSparse",
 ]

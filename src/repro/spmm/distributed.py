@@ -80,8 +80,10 @@ from repro.compat import shard_map
 from repro.core.distributed import _check_devices
 from repro.core.mergepath import balanced_row_bands
 from repro.obs import maybe_block, span
-from .kernels import LANE, choose_k_tile, sellcs_slots, sellcs_slots_chunk
-from .reference import _as_2d, sellcs_slots_chunk_ref, sellcs_slots_ref
+from .kernels import (LANE, choose_k_tile, sellcs_slots, sellcs_slots_chunk,
+                      sellcs_slots_t)
+from .reference import (_as_2d, sellcs_slots_chunk_ref, sellcs_slots_ref,
+                        sellcs_slots_t_ref)
 from .sellcs import SellCS
 
 
@@ -128,6 +130,13 @@ class ShardedSellCS(NamedTuple):
     n_touched: Optional[jax.Array] = None
                              # int32[Pdev] — true distinct-column count per
                              #   shard (the real prefix of each col_map row)
+    structure: str = "general"
+                             # "general" | "symmetric" — symmetric shards
+                             #   carry one stored triangle (row >= col) and
+                             #   the dense diagonal below; the multiply
+                             #   combines the normal and transpose passes
+    diag: Optional[jax.Array] = None
+                             # f32[m] dense diagonal (symmetric mode only)
 
     def storage_bytes(self) -> int:
         """Faithful device-side cost of the partitioned stream: every
@@ -139,7 +148,8 @@ class ShardedSellCS(NamedTuple):
         its gather with, not free metadata."""
         total = (self.data.nbytes + self.cols.nbytes + self.slice_of.nbytes
                  + self.slice_offset.nbytes + self.row_perm.nbytes)
-        for opt in (self.row_counts, self.col_map, self.n_touched):
+        for opt in (self.row_counts, self.col_map, self.n_touched,
+                    self.diag):
             if opt is not None:
                 total += opt.nbytes
         if self.chunk_plan is not None:
@@ -270,7 +280,8 @@ def partition_sellcs_rows(sc: SellCS, num_devices: int, *,
         jnp.asarray(bounds[:-1].astype(np.int32)), sc.row_perm,
         sc.shape, C, S, Sp, sc.nnz, "row",
         row_counts=jnp.asarray(counts.astype(np.int32)),
-        col_map=col_map, n_touched=n_touched)
+        col_map=col_map, n_touched=n_touched,
+        structure=sc.structure, diag=sc.diag)
 
 
 def partition_sellcs_nnz(sc: SellCS, num_devices: int, *,
@@ -303,7 +314,8 @@ def partition_sellcs_nnz(sc: SellCS, num_devices: int, *,
         jnp.asarray(D), jnp.asarray(Cc), jnp.asarray(So),
         jnp.zeros((num_devices,), jnp.int32), sc.row_perm,
         sc.shape, C, S, S, sc.nnz, "merge",
-        row_counts=jnp.asarray(counts.astype(np.int32)))
+        row_counts=jnp.asarray(counts.astype(np.int32)),
+        structure=sc.structure, diag=sc.diag)
     plan = None
     if num_chunks > 1:
         # baked BEFORE the base relabel: the plan needs global column ids
@@ -394,7 +406,8 @@ def redeal_sellcs(sharded: ShardedSellCS, num_devices: int, *,
             jnp.asarray(bounds[:-1].astype(np.int32)), sharded.row_perm,
             sharded.shape, C, S, Sp, sharded.nnz, "row",
             row_counts=jnp.asarray(counts.astype(np.int32)),
-            col_map=col_map, n_touched=n_touched)
+            col_map=col_map, n_touched=n_touched,
+            structure=sharded.structure, diag=sharded.diag)
     nc = (int(num_chunks) if num_chunks is not None
           else (sharded.chunk_plan[0] if sharded.chunk_plan is not None
                 else 1))
@@ -406,7 +419,8 @@ def redeal_sellcs(sharded: ShardedSellCS, num_devices: int, *,
         jnp.asarray(D), jnp.asarray(Cc), jnp.asarray(So),
         jnp.zeros((num_devices,), jnp.int32), sharded.row_perm,
         sharded.shape, C, S, S, sharded.nnz, "merge",
-        row_counts=jnp.asarray(counts.astype(np.int32)))
+        row_counts=jnp.asarray(counts.astype(np.int32)),
+        structure=sharded.structure, diag=sharded.diag)
     plan = None
     if nc > 1:
         # same ordering as partition_sellcs_nnz: plan baked before the base
@@ -443,7 +457,10 @@ def _resolve_model_axis(mesh: Mesh, axis: str,
 
 def _prep(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh, axis: str,
           impl: str, k_tile: Optional[int], expect: str,
-          model_axis: Optional[str], compact_x: Optional[bool] = None):
+          model_axis: Optional[str], compact_x: Optional[bool] = None,
+          op: str = "N"):
+    if op not in ("N", "T"):
+        raise ValueError(f"op must be 'N' or 'T', got {op!r}")
     if sharded.schedule != expect:
         raise ValueError(
             f"sharded matrix was partitioned for the {sharded.schedule!r} "
@@ -468,9 +485,11 @@ def _prep(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh, axis: str,
         raise ValueError(f"impl must be ref|pallas|pallas_interpret, "
                          f"got {impl!r}")
     x2, squeeze = _as_2d(x)
-    n = sharded.shape[1]
-    if x2.shape[0] != n:
-        raise ValueError(f"X rows {x2.shape[0]} != matrix n {n}")
+    m, n = sharded.shape
+    n_in = m if op == "T" else n      # A^T X consumes m-row inputs
+    if x2.shape[0] != n_in:
+        raise ValueError(f"X rows {x2.shape[0]} != expected {n_in} "
+                         f"(op={op!r}, matrix {m}x{n})")
     k = x2.shape[1]
     use_pallas = impl != "ref"
     # kc = X/Y columns owned by ONE model shard. The k-tile (and with it the
@@ -480,14 +499,27 @@ def _prep(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh, axis: str,
     if use_pallas:
         kt = k_tile or choose_k_tile(sharded.shape, kc, nnz=sharded.nnz)
         kc = -(-kc // kt) * kt
-        np_ = -(-max(n, 1) // LANE) * LANE
-        x_pad = jnp.zeros((np_, kc * pm), x2.dtype).at[:n, :k].set(x2)
     else:
         kt = k_tile
-        if kc * pm == k:
-            x_pad = x2
+    kp = kc * pm
+    if op == "T":
+        # permute X into slot space once, ahead of the mesh: every shard's
+        # transpose kernel then reads contiguous C-blocks of it (padding
+        # slots, row_perm == m, read a zero row); the σ-permutation is
+        # consumed here, so the column-space output needs no unpermute
+        xs = jnp.concatenate(
+            [x2, jnp.zeros((1, k), x2.dtype)], axis=0)[sharded.row_perm]
+        if kp != k:
+            x_pad = jnp.zeros((xs.shape[0], kp), x2.dtype).at[:, :k].set(xs)
         else:
-            x_pad = jnp.zeros((n, kc * pm), x2.dtype).at[:, :k].set(x2)
+            x_pad = xs
+    elif use_pallas:
+        np_ = -(-max(n, 1) // LANE) * LANE
+        x_pad = jnp.zeros((np_, kp), x2.dtype).at[:n, :k].set(x2)
+    elif kp == k:
+        x_pad = x2
+    else:
+        x_pad = jnp.zeros((n, kp), x2.dtype).at[:, :k].set(x2)
     return x2, squeeze, k, kt, x_pad, use_pallas, maxis, pm, compact
 
 
@@ -668,6 +700,53 @@ def _local_slots(data, cols, slice_of, x_rep, *, num_slices, chunk,
                             num_slices=num_slices, chunk=chunk)
 
 
+def _local_slots_t(data, cols, slice_of, x_slots, *, n_out, chunk,
+                   use_pallas, k_tile, interpret):
+    """Shard-local transpose compute over one width-row block: the Pallas
+    scatter-accumulate kernel on TPU, its jnp twin off-TPU. ``slice_of``
+    must already be global (the callers globalize "row" shards through
+    ``slice_offset``); ``x_slots`` is the slot-permuted X."""
+    if use_pallas:
+        return sellcs_slots_t(data, cols, slice_of, x_slots, n_out=n_out,
+                              chunk=chunk, k_tile=k_tile,
+                              interpret=interpret)
+    return sellcs_slots_t_ref(data, cols, slice_of, x_slots, n_out=n_out,
+                              chunk=chunk)
+
+
+def _scatter_touched(yb: jax.Array, col_map: jax.Array,
+                     n_touched: jax.Array, n: int, k: int,
+                     squeeze: bool) -> jax.Array:
+    """Post-mesh fixup for ``op='T'`` under ``compact_x``: the relabeled
+    ``cols`` made each shard's transpose output land in its compacted
+    index space ``[0, n_touched)`` — the touched-column map read the
+    paper's gather forward now runs backward as a scatter-add into the
+    global output rows. Padding map entries (past ``n_touched``) dump into
+    row ``n``, which is dropped."""
+    Pdev, ntc = col_map.shape
+    yb = yb.reshape(Pdev, ntc, -1)
+    mask = (jnp.arange(ntc, dtype=jnp.int32)[None]
+            < n_touched[:, None])                               # [P, Ntc]
+    tgt = jnp.where(mask, col_map, n)
+    y = jnp.zeros((n + 1, yb.shape[-1]), yb.dtype).at[tgt].add(
+        jnp.where(mask[..., None], yb, 0))[:n, :k]
+    return y[:, 0] if squeeze else y
+
+
+def _symmetric_combine(multiply, sharded: ShardedSellCS, x: jax.Array,
+                       **kw) -> jax.Array:
+    """One-triangle symmetric multiply: run the normal and transpose
+    passes over the stored triangle and subtract the double-counted
+    diagonal (``A X = N(X) + T(X) - diag * X``). ``op='N'`` and ``op='T'``
+    coincide — ``A == A^T``."""
+    x2, squeeze = _as_2d(x)
+    general = sharded._replace(structure="general")
+    y_n = multiply(general, x2, op="N", **kw)
+    y_t = multiply(general, x2, op="T", **kw)
+    y = y_n + y_t - sharded.diag[:, None] * x2.astype(y_n.dtype)
+    return y[:, 0] if squeeze else y
+
+
 def _unpermute(sharded: ShardedSellCS, y_slots: jax.Array, k: int,
                squeeze: bool) -> jax.Array:
     """Undo the global σ-sort with one scatter (padding slots target row m,
@@ -682,7 +761,8 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
                          axis: str = "data", *, impl: str = "ref",
                          k_tile: Optional[int] = None,
                          model_axis: Optional[str] = None,
-                         compact_x: Optional[bool] = None) -> jax.Array:
+                         compact_x: Optional[bool] = None,
+                         op: str = "N") -> jax.Array:
     """Y = A @ X with slice banding: X replicated along ``axis``, Y
     shard-local slots, zero collectives inside the mesh region.
 
@@ -697,15 +777,70 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     axis next to the slice stream. ``compact_x=`` here only *asserts* the
     partition-time choice (None follows it) — the relabeled stream cannot
     consume a replicated X, nor the reverse.
+
+    ``op='T'`` computes ``Y = A^T X`` (``X: [m, k]``, ``Y: [n, k]``) over
+    the same partition: X is permuted into slot space ahead of the mesh,
+    each shard scatter-accumulates into column space (its local slice ids
+    globalized through ``slice_offset``), and — since column ownership
+    overlaps arbitrarily across shards — the fixup is a psum on the data
+    axis (the zero-collective property is a row-space property; transpose
+    outputs live in column space). Under ``compact_x`` the relabeled cols
+    make each shard's output land in its compacted index space, so the
+    psum is replaced by a per-shard ``[n_touched, kc]`` stack that
+    scatter-adds through the touched-column map after the mesh region —
+    the touched-*column* map becomes a touched-*output-row* map.
+
+    Symmetric one-triangle partitions combine both passes over the stored
+    triangle (``A X = N(X) + T(X) - diag * X``); ``op`` is then moot.
     """
+    if sharded.structure == "symmetric":
+        return _symmetric_combine(
+            lambda s, xx, **kw: spmm_row_distributed(
+                s, xx, mesh, axis, impl=impl, k_tile=k_tile,
+                model_axis=model_axis, compact_x=compact_x, **kw),
+            sharded, x)
     m, n = sharded.shape
     C, S, Sp = sharded.chunk, sharded.num_slices, sharded.slices_per_shard
     ndev = sharded.data.shape[0]
-    x2, squeeze, k, kt, x_pad, use_pallas, maxis, _pm, compact = _prep(
-        sharded, x, mesh, axis, impl, k_tile, "row", model_axis, compact_x)
+    x2, squeeze, k, kt, x_pad, use_pallas, maxis, pm, compact = _prep(
+        sharded, x, mesh, axis, impl, k_tile, "row", model_axis, compact_x,
+        op)
     if sharded.nnz == 0:
-        y = jnp.zeros((m, k), _out_dtype(sharded, x2, use_pallas))
+        y = jnp.zeros((n if op == "T" else m, k),
+                      _out_dtype(sharded, x2, use_pallas))
         return y[:, 0] if squeeze else y
+    interpret = impl == "pallas_interpret"
+    if op == "T":
+        k_keep = k if pm == 1 else x_pad.shape[1] // pm
+        n_eff = int(sharded.col_map.shape[1]) if compact else n
+
+        def local_t(data, cols, slice_of, offs, x_loc):
+            gso = slice_of[0] + offs          # globalize the band's slices
+            with span("spmm/kernel"):
+                y_loc = _local_slots_t(data[0], cols[0], gso, x_loc,
+                                       n_out=n_eff, chunk=C,
+                                       use_pallas=use_pallas, k_tile=kt,
+                                       interpret=interpret)
+            if compact:
+                return y_loc[:, :k_keep]
+            with span("spmm/psum"):
+                return jax.lax.psum(y_loc[:, :k_keep], axis)
+
+        with span("spmm/mesh"):
+            yb = maybe_block(shard_map(
+                local_t, mesh=mesh,
+                in_specs=(P(axis, None, None), P(axis, None, None),
+                          P(axis, None), P(axis), P(None, maxis)),
+                out_specs=P(axis, maxis) if compact else P(None, maxis),
+                check_vma=False if use_pallas else None)(
+                    sharded.data, sharded.cols, sharded.slice_of,
+                    sharded.slice_offset, x_pad))
+        with span("spmm/fixup"):
+            if compact:
+                return maybe_block(_scatter_touched(
+                    yb, sharded.col_map, sharded.n_touched, n, k, squeeze))
+            y = yb[:n, :k]
+            return maybe_block(y[:, 0] if squeeze else y)
     if compact:
         with span("spmm/gather_x"):
             x_feed = maybe_block(_gather_x(x_pad, sharded.col_map,
@@ -753,7 +888,8 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
                            k_tile: Optional[int] = None,
                            num_chunks: int = 1,
                            model_axis: Optional[str] = None,
-                           compact_x: Optional[bool] = None) -> jax.Array:
+                           compact_x: Optional[bool] = None,
+                           op: str = "N") -> jax.Array:
     """Y = A @ X with equal-width spans: per-device slot partials + psum
     carry-out fixup (the only collective). Survives the mawi dense-row
     pathology — the dense slice splits mid-stream.
@@ -790,7 +926,25 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     the re-dealt ownership. The psum is untouched: compaction shrinks
     reads, not the carry-out. ``compact_x=`` only asserts the
     partition-time choice; ``None`` follows it.
+
+    ``op='T'`` computes ``Y = A^T X`` over the same spans: X enters the
+    mesh slot-permuted, each span scatter-accumulates into column space
+    through its global slice ids, and each span's ``[n, kc]`` partial is
+    psum'd on the data axis as soon as it is ready (the same pipelined
+    overlap as the normal fixup) and summed — column ownership overlaps
+    across spans, so partials add instead of concatenating. Under
+    ``compact_x`` the span outputs live in the (plan) touched-column index
+    space: they are summed locally, stacked per shard, and scatter-added
+    through the map after the mesh region (see ``spmm_row_distributed``).
+    Symmetric one-triangle partitions combine both passes; ``op`` is moot.
     """
+    if sharded.structure == "symmetric":
+        return _symmetric_combine(
+            lambda s, xx, **kw: spmm_merge_distributed(
+                s, xx, mesh, axis, impl=impl, k_tile=k_tile,
+                num_chunks=num_chunks, model_axis=model_axis,
+                compact_x=compact_x, **kw),
+            sharded, x)
     m, n = sharded.shape
     C, S = sharded.chunk, sharded.num_slices
     nc = int(num_chunks)
@@ -798,9 +952,10 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
         raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
     x2, squeeze, k, kt, x_pad, use_pallas, maxis, pm, compact = _prep(
         sharded, x, mesh, axis, impl, k_tile, "merge", model_axis,
-        compact_x)
+        compact_x, op)
     if sharded.nnz == 0:
-        y = jnp.zeros((m, k), _out_dtype(sharded, x2, use_pallas))
+        y = jnp.zeros((n if op == "T" else m, k),
+                      _out_dtype(sharded, x2, use_pallas))
         return y[:, 0] if squeeze else y
     interpret = impl == "pallas_interpret"
     # Columns to keep of each local slot block before its psum: with one
@@ -809,6 +964,64 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     # global slab, so all kc local columns ship and the (kp - k) tail
     # padding is dropped after the mesh region by _unpermute.
     k_keep = k if pm == 1 else x_pad.shape[1] // pm
+
+    if op == "T":
+        if nc == 1:
+            spans = None
+            plan_map, plan_nt = sharded.col_map, sharded.n_touched
+        else:
+            if sharded.chunk_plan is not None and \
+                    sharded.chunk_plan[0] == nc:
+                spans, plan_map, plan_nt = (sharded.chunk_plan[1],
+                                            sharded.chunk_plan[2],
+                                            sharded.chunk_plan[3])
+            else:
+                plan = _chunk_substreams(sharded, nc)
+                spans, plan_map, plan_nt = (plan.spans, plan.col_map,
+                                            plan.n_touched)
+        n_eff = int(plan_map.shape[1]) if compact else n
+
+        def local_t(datas, colss, sos, x_loc):
+            # one column-space partial per span; partials ADD (column
+            # ownership overlaps across spans), each psum still issued
+            # right after its span's kernel so it hides under the next
+            total = None
+            for data, cols, slice_of in zip(datas, colss, sos):
+                with span("spmm/kernel"):
+                    y_c = _local_slots_t(data[0], cols[0], slice_of[0],
+                                         x_loc, n_out=n_eff, chunk=C,
+                                         use_pallas=use_pallas, k_tile=kt,
+                                         interpret=interpret)
+                part = y_c[:, :k_keep]
+                if not compact:
+                    with span("spmm/psum"):
+                        part = jax.lax.psum(part, axis)
+                total = part if total is None else total + part
+            return total
+
+        if nc == 1:
+            args = ((sharded.data,), (sharded.cols,), (sharded.slice_of,))
+        else:
+            args = (tuple(sp.data for sp in spans),
+                    tuple(sp.cols for sp in spans),
+                    tuple(sp.slice_of for sp in spans))
+        nspan = len(args[0])
+        blk = tuple(P(axis, None, None) for _ in range(nspan))
+        with span("spmm/mesh"):
+            yb = maybe_block(shard_map(
+                local_t, mesh=mesh,
+                in_specs=(blk, blk,
+                          tuple(P(axis, None) for _ in range(nspan)),
+                          P(None, maxis)),
+                out_specs=P(axis, maxis) if compact else P(None, maxis),
+                check_vma=False if use_pallas else None)(
+                    *args, x_pad))
+        with span("spmm/fixup"):
+            if compact:
+                return maybe_block(_scatter_touched(
+                    yb, plan_map, plan_nt, n, k, squeeze))
+            y = yb[:n, :k]
+            return maybe_block(y[:, 0] if squeeze else y)
 
     if nc == 1:
         if compact:

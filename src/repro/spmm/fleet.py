@@ -48,13 +48,14 @@ class FleetStats:
     """Fleet-level accounting (the per-operator build counters live on
     each operator's ``OperatorStats``)."""
     __slots__ = ("registered", "plan_cache_hits", "plan_cache_misses",
-                 "evictions", "device_losses")
+                 "evictions", "evicted_bytes", "device_losses")
 
     def __init__(self):
         self.registered = 0
         self.plan_cache_hits = 0
         self.plan_cache_misses = 0
         self.evictions = 0
+        self.evicted_bytes = 0
         self.device_losses = 0
 
     def __repr__(self):
@@ -62,6 +63,7 @@ class FleetStats:
                 f"hits={self.plan_cache_hits}, "
                 f"misses={self.plan_cache_misses}, "
                 f"evictions={self.evictions}, "
+                f"evicted_bytes={self.evicted_bytes}, "
                 f"device_losses={self.device_losses})")
 
 
@@ -72,7 +74,7 @@ def _spec_key(spec: Optional[PlanSpec]) -> Tuple:
         return ()
     sp = spec.canonical()
     return (sp.num_devices, sp.mesh_shape, sp.num_chunks, sp.compact_x,
-            sp.schedule, sp.algorithm)
+            sp.schedule, sp.algorithm, sp.structure)
 
 
 class Fleet:
@@ -85,16 +87,25 @@ class Fleet:
         op = fleet.register("tenant-a", coo, PlanSpec(num_devices=8))
         y = op.matmul(x)
         fleet.handle_device_loss([7])      # re-deal onto the survivors
+
+    ``capacity`` bounds the tenant COUNT, ``max_bytes`` the accumulated
+    execution-side plan footprint (``SparseOperator.storage_bytes``);
+    either triggers LRU eviction at register time, and the freed bytes
+    are accounted in ``fleet/evicted_bytes``.
     """
 
     def __init__(self, *, impl: str = "auto", feedback=None,
                  monitor: Optional[StragglerMonitor] = None,
-                 capacity: Optional[int] = None):
+                 capacity: Optional[int] = None,
+                 max_bytes: Optional[int] = None):
         if capacity is not None and capacity < 1:
             raise ValueError("capacity must be >= 1 (or None)")
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError("max_bytes must be >= 1 (or None)")
         self._impl = impl
         self._feedback = feedback
         self._capacity = capacity
+        self._max_bytes = max_bytes
         self._ops: Dict[str, SparseOperator] = {}      # insertion = LRU age
         self._fingerprints: Dict[str, str] = {}        # tenant -> fp
         self._plan_keys: Dict[str, Tuple] = {}         # tenant -> cache key
@@ -157,15 +168,33 @@ class Fleet:
         if self._capacity is not None:
             while len(self._ops) > self._capacity:
                 self.evict(next(iter(self._ops)))
+        if self._max_bytes is not None:
+            # LRU under the memory budget: free oldest tenants until the
+            # accumulated execution-side footprint fits; the newest tenant
+            # itself is never evicted (a single over-budget matrix still
+            # serves — the budget bounds the fleet, not one tenant)
+            while (len(self._ops) > 1
+                   and self.total_storage_bytes() > self._max_bytes):
+                victim = next(t for t in self._ops if t != tenant)
+                self.evict(victim)
         return op
+
+    def total_storage_bytes(self) -> int:
+        """Accumulated execution-side footprint of every resident plan
+        (``SparseOperator.storage_bytes``: the partitioned stream on a
+        mesh, the converted format off one)."""
+        return sum(op.storage_bytes() for op in self._ops.values())
 
     def evict(self, tenant: str) -> None:
         """Drop a tenant; per-fingerprint artifacts are freed with their
-        last user (cached plans for that fingerprint go too)."""
+        last user (cached plans for that fingerprint go too). The freed
+        plan bytes land in ``fleet/evicted_bytes``."""
+        freed = self._ops[tenant].storage_bytes()
         self._ops.pop(tenant)
         fp = self._fingerprints.pop(tenant)
         self._plan_keys.pop(tenant, None)
         self.stats.evictions += 1
+        self.stats.evicted_bytes += freed
         if fp not in self._fingerprints.values():
             self._artifacts.pop(fp, None)
             for key in [k for k in self._plans if k[0] == fp]:
@@ -173,6 +202,7 @@ class Fleet:
         if obs.enabled():
             reg = obs.current_registry()
             reg.counter("fleet/evictions").inc()
+            reg.counter("fleet/evicted_bytes").inc(float(freed))
             reg.gauge("fleet/tenants").set(len(self._ops))
 
     # -- fault tolerance ---------------------------------------------------

@@ -333,15 +333,125 @@ def _sellcs_spmm_slots(sc: SellCS, x_pad: jax.Array, *, k_tile: int,
                         k_tile=k_tile, interpret=interpret)
 
 
+# --------------------------------------------------------------------------
+# SELL-C-σ transpose SpMM (Y = A^T X), k-tiled grid
+# --------------------------------------------------------------------------
+def _sellcs_t_kernel(slice_of_ref,                # scalar prefetch (SMEM)
+                     data_ref, cols_ref, xs_ref,  # VMEM in
+                     y_ref,                       # VMEM out (revisited)
+                     *, w_tile: int, chunk: int, n_pad: int):
+    g = pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    def body(w, _):
+        s = slice_of_ref[g * w_tile + w]
+        # the slot-permuted X makes the read side structured: one
+        # contiguous C-block per width-row, no gather
+        xb = xs_ref[pl.ds(s * chunk, chunk), :]            # (C, KT)
+        prod = (data_ref[w].astype(jnp.float32)[:, None]
+                * xb.astype(jnp.float32))                  # (C, KT)
+        # scatter to columns via one-hot contraction (MXU-friendly — the
+        # same idiom as the merge kernel's per-span row scatter)
+        onehot = (cols_ref[w][:, None] ==
+                  jax.lax.broadcasted_iota(jnp.int32, (1, n_pad), 1)
+                  ).astype(jnp.float32)                    # (C, n_pad)
+        y_ref[...] += jax.lax.dot_general(
+            onehot, prod, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (n_pad, KT)
+        return _
+
+    jax.lax.fori_loop(0, w_tile, body, None)
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "chunk", "k_tile",
+                                             "interpret"))
+def sellcs_slots_t(data: jax.Array, cols: jax.Array, slice_of: jax.Array,
+                   x_slots: jax.Array, *, n_out: int, chunk: int,
+                   k_tile: int, interpret: bool = False) -> jax.Array:
+    """Raw-array transpose pass over a SELL-C-σ width-row stream.
+
+    ``x_slots`` is X permuted into slot space (``reference.sellcs_slot_x``):
+    each width-row then reads a *contiguous* C-block at ``slice_of[w] *
+    chunk`` and scatter-accumulates ``data[w] * x`` into its column
+    indices. The output ``[n_out, Kp]`` is in natural column order — the
+    σ-permutation was consumed by the slot gather, so no unpermute
+    follows. ``slice_of`` must index the slot space ``x_slots`` spans;
+    globalize shard-local slice ids (add ``slice_offset``) before calling.
+    Padding entries carry data == 0, cols == 0 (harmless add into column
+    0); padding width-rows may carry any in-range slice id.
+    """
+    C = chunk
+    W = data.shape[0]
+    Wp = max(-(-W // W_TILE) * W_TILE, W_TILE)
+    if Wp != W:
+        pad = Wp - W
+        data = jnp.concatenate([data, jnp.zeros((pad, C), data.dtype)])
+        cols = jnp.concatenate([cols, jnp.zeros((pad, C), cols.dtype)])
+        slice_of = jnp.concatenate(
+            [slice_of, jnp.zeros((pad,), slice_of.dtype)])
+
+    n_pad = -(-max(n_out, 1) // LANE) * LANE
+    SC, Kp = x_slots.shape
+    nk = Kp // k_tile
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nk, Wp // W_TILE),
+        in_specs=[
+            pl.BlockSpec((W_TILE, C), lambda j, g, *_: (g, 0)),
+            pl.BlockSpec((W_TILE, C), lambda j, g, *_: (g, 0)),
+            pl.BlockSpec((SC, k_tile), lambda j, g, *_: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n_pad, k_tile), lambda j, g, *_: (0, j)),
+    )
+    y = pl.pallas_call(
+        functools.partial(_sellcs_t_kernel, w_tile=W_TILE, chunk=C,
+                          n_pad=n_pad),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pad, Kp), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(slice_of, data, cols, x_slots)
+    return y[:n_out]
+
+
+def _slot_x_pad(row_perm: jax.Array, x: jax.Array, m: int,
+                kt: int) -> jax.Array:
+    """Slot-space X for the transpose pass, k-padded for the k-tile grid.
+    Padding slots (``row_perm == m``) read a zero row."""
+    x_pad = jnp.concatenate(
+        [x, jnp.zeros((1, x.shape[1]), x.dtype)], axis=0)
+    return _pad_k(x_pad[row_perm], kt)
+
+
 def sellcs_spmm(sc: SellCS, x: jax.Array, *, k_tile: Optional[int] = None,
-                interpret: bool = False) -> jax.Array:
+                interpret: bool = False, op: str = "N") -> jax.Array:
     """SELL-C-σ SpMM: each grid step broadcasts W_TILE width-vectors of the
     slice stream against the VMEM-resident X slab — uniform work quanta
     regardless of row-length skew (the σ-sorted answer to the paper's mawi
-    pathology), with the x-gather as the only irregular access."""
+    pathology), with the x-gather as the only irregular access.
+
+    ``op='T'`` computes ``Y = A^T X`` (``X: [m, k]``) via the transpose
+    kernel; symmetric one-triangle storage combines both passes over the
+    stored triangle (``A X = N(X) + T(X) - diag * X``), for which
+    ``op='T'`` and ``op='N'`` coincide.
+    """
+    if op not in ("N", "T"):
+        raise ValueError(f"op must be 'N' or 'T', got {op!r}")
     m, n = sc.shape
     k = x.shape[1]
     kt = k_tile or choose_k_tile(sc.shape, k, nnz=sc.nnz)
+    sym = sc.structure == "symmetric"
+    if op == "T" and not sym:
+        if sc.nnz == 0:
+            return jnp.zeros((n, k), jnp.float32)
+        xs = _slot_x_pad(sc.row_perm, x, m, kt)
+        y = sellcs_slots_t(sc.data, sc.cols, sc.slice_of, xs, n_out=n,
+                           chunk=sc.chunk, k_tile=kt, interpret=interpret)
+        return y[:, :k]
     np_ = -(-max(n, 1) // LANE) * LANE
     x_pad = jnp.zeros((np_, k), x.dtype).at[:n].set(x)
     x_pad = _pad_k(x_pad, kt)
@@ -351,4 +461,11 @@ def sellcs_spmm(sc: SellCS, x: jax.Array, *, k_tile: Optional[int] = None,
                                  interpret=interpret)     # (S*C, Kp)
     Kp = y_slots.shape[1]
     y = jnp.zeros((m + 1, Kp), jnp.float32).at[sc.row_perm].add(y_slots)
+    y = y[:m]
+    if sym:
+        xs = _slot_x_pad(sc.row_perm, x, m, kt)
+        y = (y + sellcs_slots_t(sc.data, sc.cols, sc.slice_of, xs,
+                                n_out=n, chunk=sc.chunk, k_tile=kt,
+                                interpret=interpret)
+             - _pad_k(sc.diag[:, None] * x, kt))
     return y[:m, :k]

@@ -100,6 +100,13 @@ class RealizedPlan(NamedTuple):
                                  #   flush under exactly these knobs
     build_s: float               # measured convert+partition seconds —
                                  #   the numerator of the live break-even
+    multiply_t: Optional[Callable] = None
+                                 # X -> A^T X over the SAME plan artifacts
+                                 #   (jitted where distributed); every plan
+                                 #   carries one — rmatmul never builds a
+                                 #   second partition
+    eager_t: Optional[Callable] = None
+                                 # un-jitted transpose twin of ``eager``
 
     def labels(self, **extra) -> Dict[str, str]:
         """Canonical residual-ledger labels for this plan's knobs; the
@@ -111,7 +118,9 @@ class RealizedPlan(NamedTuple):
             return choice_labels(schedule=sp.schedule,
                                  num_chunks=sp.num_chunks or 1,
                                  mesh_shape=sp.mesh_shape,
-                                 compact_x=bool(sp.compact_x), **extra)
+                                 compact_x=bool(sp.compact_x),
+                                 structure=sp.structure or "general",
+                                 **extra)
         return choice_labels(schedule="single", num_chunks=1,
                              mesh_shape=(1, 1), compact_x=None, **extra)
 
@@ -151,8 +160,10 @@ class _PlanCache:
     re-deal (``rechunk_sellcs``), not a repartition."""
 
     def __init__(self):
-        self.sellcs: Dict[int, object] = {}
-        self.partitions: Dict[Tuple[str, int, bool], object] = {}
+        # sellcs keyed by (slice height, structure); partitions by
+        # (schedule, P_data, compact_x, structure)
+        self.sellcs: Dict[Tuple[int, str], object] = {}
+        self.partitions: Dict[Tuple[str, int, bool, str], object] = {}
 
 
 class SparseOperator:
@@ -240,6 +251,47 @@ class SparseOperator:
 
     __matmul__ = matmul
 
+    def rmatmul(self, x: jax.Array) -> jax.Array:
+        """``Y = A^T X`` (``X: [m, k]``, ``Y: [n, k]``) under the SAME
+        installed plan: both directions share one set of convert-time
+        artifacts — the transpose multiplies the stored stream with the
+        roles of the row permutation and the column scatter exchanged, so
+        no second partition exists to drift out of sync with the forward
+        one. Counts toward the same break-even ``multiplies``."""
+        rp = self._plan
+        if rp.multiply_t is None:
+            raise ValueError(
+                f"plan {rp.label!r} carries no transpose multiply; "
+                "re-realize it (pre-transpose plans cannot rmatmul)")
+        y = rp.multiply_t(x)
+        k = 1 if getattr(x, "ndim", 1) == 1 else int(x.shape[1])
+        with self._lock:
+            self.stats.calls += 1
+            self.stats.multiplies += k
+        return y
+
+    @property
+    def T(self) -> "TransposedOperator":
+        """Transpose view: ``op.T @ x`` is ``op.rmatmul(x)``. A view, not
+        a copy — it reads the operator's current plan at each multiply, so
+        swaps show through and ``op.T.T is op``."""
+        return TransposedOperator(self)
+
+    def storage_bytes(self) -> int:
+        """Execution-side footprint of the installed plan — what the
+        multiply actually keeps resident (the partitioned
+        ``ShardedSellCS`` on a mesh, the converted format off one; the
+        COO triplet estimate only for formats that report no
+        ``storage_bytes``). The fleet's ``max_bytes`` budget sums this."""
+        rp = self._plan
+        for mat in (rp.matrix, rp.local_matrix):
+            fn = getattr(mat, "storage_bytes", None)
+            if fn is not None:
+                return int(fn())
+        coo = self._coo
+        return int(8 * np.asarray(coo.rows).size
+                   + np.asarray(coo.data).nbytes)
+
     # -- write side --------------------------------------------------------
     def realize(self, spec: PlanSpec, feedback=None) -> RealizedPlan:
         """Build an executable plan for ``spec`` WITHOUT installing it —
@@ -300,7 +352,8 @@ class SparseOperator:
             compact = bool(sp.compact_x)
             # survivors' partition replaces the stale artifact so a later
             # chunks-only swap re-deals from the live device count
-            self._cache.partitions[(sp.schedule, pd, compact)] = sharded
+            self._cache.partitions[(sp.schedule, pd, compact,
+                                    sp.structure or "general")] = sharded
             with self._lock:
                 self.stats.partition_builds += 1
             plan = _mesh_plan(sharded, rp.local_matrix, self._mstats, mesh,
@@ -308,6 +361,59 @@ class SparseOperator:
                               compact=compact, impl_r=rp.impl,
                               time_fn=spmm_distributed_time, t0=t0)
         return self.swap(plan)
+
+
+class TransposedOperator:
+    """Zero-copy transpose view over a :class:`SparseOperator` — the
+    ``op.T`` surface. Shares the parent's plan (and therefore its swap
+    atomicity and break-even accounting); only the multiply direction and
+    the reported shape flip."""
+
+    def __init__(self, base: SparseOperator):
+        self._base = base
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        m, n = self._base.shape
+        return n, m
+
+    @property
+    def plan(self) -> RealizedPlan:
+        return self._base.plan
+
+    @property
+    def T(self) -> SparseOperator:
+        return self._base
+
+    def matmul(self, x: jax.Array) -> jax.Array:
+        return self._base.rmatmul(x)
+
+    __matmul__ = matmul
+
+    def rmatmul(self, x: jax.Array) -> jax.Array:
+        return self._base.matmul(x)
+
+
+def sparse_matmul(op: SparseOperator, x: jax.Array) -> jax.Array:
+    """Differentiable ``Y = op @ x``: the forward multiply runs through the
+    operator's realized plan and the backward cotangent through the SAME
+    plan's transpose multiply (``d loss/d x = op.rmatmul(g)``, i.e.
+    ``A^T g`` over the one stored stream). This is the training-surface
+    entry point — drop a fixed sparse mixing matrix inside a loss and
+    ``jax.grad`` flows through both ops of the operator."""
+
+    @jax.custom_vjp
+    def f(x):
+        return op.matmul(x)
+
+    def fwd(x):
+        return op.matmul(x), None
+
+    def bwd(_, g):
+        return (op.rmatmul(g),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
 
 
 def _realize_plan(coo: COO, stats: MatrixStats, spec: PlanSpec, *,
@@ -335,24 +441,48 @@ def _realize_single(coo, stats, spec, *, impl, k_hint, num_spmvs, t0,
     import dataclasses
     algo = spec.algorithm or select(stats, MachineSpec(1),
                                     num_spmvs=num_spmvs, k=k_hint)
-    mat = convert(coo, algo)
+    structure = spec.structure or "general"
+    if structure == "symmetric" and algo != "sellcs":
+        raise ValueError(
+            "structure='symmetric' (one-triangle storage) is executable "
+            f"only on the SELL-C-σ stream, not {algo!r}")
+    if algo == "sellcs" and structure != "general":
+        from repro.spmm import coo_to_sellcs
+        mat = coo_to_sellcs(coo, structure=structure)
+    else:
+        mat = convert(coo, algo)
     mat_bytes = _matrix_bytes_est(algo, stats)
 
     def multiply(X):
         from repro.spmm import spmm
         return spmm(mat, X, impl=impl)
 
+    from repro.spmm.sellcs import SellCS as _SellCS
+    if isinstance(mat, (_SellCS, COO)):
+        def multiply_t(X):
+            from repro.spmm import spmm
+            return spmm(mat, X, impl=impl, op="T")
+    else:
+        # formats without a transpose path fall back to the immutable COO
+        # source the operator already owns — correct, just unamortized
+        def multiply_t(X):
+            from repro.spmm.reference import spmm_ref
+            return spmm_ref(coo, X, op="T")
+
     def model_s(k):
         # the distributed model at P=1 degenerates to the plain
         # streaming-bytes roofline for this format
         return time_fn(stats.m, stats.n, k, 1, "row",
                        matrix_bytes=mat_bytes,
-                       max_row_nnz=stats.max_row_nnz, nnz=stats.nnz)
+                       max_row_nnz=stats.max_row_nnz, nnz=stats.nnz,
+                       structure=structure)
 
-    resolved = dataclasses.replace(spec, algorithm=algo)
+    resolved = dataclasses.replace(spec, algorithm=algo,
+                                   structure=structure)
     return RealizedPlan(resolved, algo, mat, mat, multiply, None,
                         _resolve_impl(impl), None, model_s,
-                        time.perf_counter() - t0)
+                        time.perf_counter() - t0,
+                        multiply_t=multiply_t)
 
 
 def _realize_mesh(coo, stats, spec, *, impl, k_hint, num_spmvs, feedback,
@@ -384,17 +514,20 @@ def _realize_mesh(coo, stats, spec, *, impl, k_hint, num_spmvs, feedback,
         feedback=feedback)
     schedule, chunks = choice.schedule, choice.num_chunks
     (pd, pm), compact = choice.mesh_shape, choice.compact_x
+    structure = choice.structure
     mesh = make_spmm_mesh((pd, pm))
     c = _pick_chunk(stats.m, pd)
-    sc = cache.sellcs.get(c)
+    skey = (c, structure)
+    sc = cache.sellcs.get(skey)
     if sc is None:
-        sc = cache.sellcs.setdefault(c, coo_to_sellcs(coo, c=c))
+        sc = cache.sellcs.setdefault(
+            skey, coo_to_sellcs(coo, c=c, structure=structure))
         if op_stats is not None:
             op_stats.sellcs_builds += 1
     elif op_stats is not None:
         op_stats.plan_cache_hits += 1
     impl_r = _resolve_impl(impl)
-    key = (schedule, pd, compact)
+    key = (schedule, pd, compact, structure)
     base = cache.partitions.get(key)
     if base is None:
         part = (partition_sellcs_rows if schedule == "row"
@@ -422,22 +555,31 @@ def _mesh_plan(sharded, sc, stats, mesh, *, schedule, chunks, pd, pm,
     ``shrink_to`` re-deal (which brings its own survivors' mesh)."""
     from repro.spmm.distributed import (spmm_merge_distributed,
                                         spmm_row_distributed)
+    structure = getattr(sharded, "structure", "general")
     if schedule == "row":
         eager = lambda X: spmm_row_distributed(sharded, X, mesh,
                                                impl=impl_r)
+        eager_t = lambda X: spmm_row_distributed(sharded, X, mesh,
+                                                 impl=impl_r, op="T")
     else:
         eager = lambda X: spmm_merge_distributed(sharded, X, mesh,
                                                  impl=impl_r,
                                                  num_chunks=chunks)
+        eager_t = lambda X: spmm_merge_distributed(sharded, X, mesh,
+                                                   impl=impl_r,
+                                                   num_chunks=chunks,
+                                                   op="T")
     # the jitted closure keeps repeated flushes of one batch shape from
     # retracing the shard_map body
     jitted = jax.jit(eager)
+    jitted_t = jax.jit(eager_t)
     mesh_tag = f"{pd}x{pm}mesh" if pm > 1 else f"{pd}dev"
     cx_tag = "/cx=on" if compact else ""
+    sym_tag = "/sym" if structure == "symmetric" else ""
     if schedule == "row":
-        label = f"sellcs+row@{mesh_tag}{cx_tag}"
+        label = f"sellcs+row@{mesh_tag}{cx_tag}{sym_tag}"
     else:
-        label = f"sellcs+merge@{mesh_tag}/chunks={chunks}{cx_tag}"
+        label = f"sellcs+merge@{mesh_tag}/chunks={chunks}{cx_tag}{sym_tag}"
     # price the gather with the map the multiply EXECUTES: the chunked
     # merge gathers through the chunk plan's re-dealt map, not the base
     # partition's
@@ -453,15 +595,18 @@ def _mesh_plan(sharded, sc, stats, mesh, *, schedule, chunks, pd, pm,
                        matrix_bytes=sellcs_bytes,
                        max_row_nnz=stats.max_row_nnz, num_chunks=chunks,
                        model_devices=pm, compact_x=compact,
-                       n_touched=n_touched, nnz=stats.nnz)
+                       n_touched=n_touched, nnz=stats.nnz,
+                       structure=structure)
 
     resolved = PlanSpec(num_devices=pd * pm, mesh_shape=(pd, pm),
                         num_chunks=chunks, compact_x=compact,
-                        schedule=schedule, algorithm="sellcs")
+                        schedule=schedule, algorithm="sellcs",
+                        structure=structure)
     return RealizedPlan(resolved, label, sharded, sc, jitted, eager,
                         impl_r, n_touched, model_s,
-                        time.perf_counter() - t0)
+                        time.perf_counter() - t0,
+                        multiply_t=jitted_t, eager_t=eager_t)
 
 
-__all__ = ["SparseOperator", "RealizedPlan", "OperatorStats", "PlanSpec",
-           "coo_fingerprint"]
+__all__ = ["SparseOperator", "TransposedOperator", "RealizedPlan",
+           "OperatorStats", "PlanSpec", "coo_fingerprint", "sparse_matmul"]

@@ -96,16 +96,47 @@ def sellcs_slots_chunk_ref(data: Array, cols: Array, slice_of: Array,
                             chunk=chunk)
 
 
+def sellcs_slot_x(row_perm: Array, x2: Array, m: int) -> Array:
+    """Permute X into slot space for the transpose pass: ``x_slots[s] =
+    X[row_perm[s]]``, with padding slots (``row_perm == m``) reading a zero
+    row. After this gather the transpose kernel's X reads are contiguous
+    C-blocks — the structured access moves from X to the output scatter."""
+    x_pad = jnp.concatenate(
+        [x2, jnp.zeros((1, x2.shape[1]), x2.dtype)], axis=0)
+    return x_pad[row_perm]
+
+
+def sellcs_slots_t_ref(data: Array, cols: Array, slice_of: Array,
+                       x_slots: Array, *, n_out: int, chunk: int) -> Array:
+    """Transpose slot pass [n_out, k] — the jnp twin of
+    ``kernels.sellcs_slots_t``: each width-row reads its C-block of the
+    slot-permuted X and scatter-accumulates into per-column slots. Output
+    is in natural column order — the σ-permutation was consumed by the
+    ``sellcs_slot_x`` gather, so no unpermute follows. Padding entries
+    carry data == 0, cols == 0 (a harmless add into column 0). ``slice_of``
+    must index the slot space ``x_slots`` was built over (globalize local
+    slice ids before calling)."""
+    dtype = jnp.promote_types(data.dtype, x_slots.dtype)
+    k = x_slots.shape[1]
+    slot = (slice_of[:, None] * chunk
+            + jnp.arange(chunk, dtype=jnp.int32)[None])  # [W, C]
+    contrib = data[:, :, None] * x_slots[slot]           # [W, C, k]
+    return jnp.zeros((n_out, k), dtype).at[cols].add(contrib)
+
+
 @jax.jit
 def spmm_sellcs(sc: SellCS, x: Array) -> Array:
     """Slice-structured SpMM: one gather + FMA per width-row, then a single
     permutation scatter back to original row order. Padding entries carry
-    data == 0, cols == 0 — they contribute nothing."""
+    data == 0, cols == 0 — they contribute nothing. Symmetric one-triangle
+    storage combines the normal and transpose passes over the stored
+    triangle: ``A X = N(X) + T(X) - diag * X``."""
     x2, squeeze = _as_2d(x)
-    m, _ = sc.shape
+    m, n = sc.shape
     k = x2.shape[1]
     dtype = jnp.promote_types(sc.data.dtype, x2.dtype)
     if sc.nnz == 0 or sc.data.shape[0] == 0:
+        # nnz == 0 stores no diagonal either: the zero answer is exact
         y = jnp.zeros((m, k), dtype)
         return y[:, 0] if squeeze else y
     y_slots = sellcs_slots_ref(sc.data, sc.cols, sc.slice_of, x2,
@@ -113,13 +144,54 @@ def spmm_sellcs(sc: SellCS, x: Array) -> Array:
     # undo the σ-sort permutation; padding slots scatter to row m (dropped)
     y = jnp.zeros((m + 1, k), dtype).at[sc.row_perm].add(y_slots)
     y = y[:m]
+    if sc.structure == "symmetric":
+        xs = sellcs_slot_x(sc.row_perm, x2, m)
+        y = (y + sellcs_slots_t_ref(sc.data, sc.cols, sc.slice_of, xs,
+                                    n_out=n, chunk=sc.chunk)
+             - sc.diag[:, None] * x2)
     return y[:, 0] if squeeze else y
 
 
-def spmm_ref(mat, x: Array) -> Array:
-    """Oracle dispatch over every supported storage format."""
+@jax.jit
+def spmm_sellcs_t(sc: SellCS, x: Array) -> Array:
+    """``Y = A^T X`` over the same stored stream (``X: [m, k]``,
+    ``Y: [n, k]``). For symmetric storage ``A^T == A``, so this is exactly
+    the symmetric forward multiply."""
+    if sc.structure == "symmetric":
+        return spmm_sellcs(sc, x)
+    x2, squeeze = _as_2d(x)
+    m, n = sc.shape
+    k = x2.shape[1]
+    dtype = jnp.promote_types(sc.data.dtype, x2.dtype)
+    if sc.nnz == 0 or sc.data.shape[0] == 0:
+        y = jnp.zeros((n, k), dtype)
+        return y[:, 0] if squeeze else y
+    xs = sellcs_slot_x(sc.row_perm, x2, m)
+    y = sellcs_slots_t_ref(sc.data, sc.cols, sc.slice_of, xs,
+                           n_out=n, chunk=sc.chunk)
+    return y[:, 0] if squeeze else y
+
+
+def spmm_coo_t(coo: COO, x: Array) -> Array:
+    """``Y = A^T X`` oracle on triplets (the transpose is a relabeling)."""
+    m, n = coo.shape
+    return spmm_coo(COO(coo.cols, coo.rows, coo.data, (n, m)), x)
+
+
+def spmm_ref(mat, x: Array, *, op: str = "N") -> Array:
+    """Oracle dispatch over every supported storage format. ``op='T'``
+    computes ``A^T X`` (supported for SellCS and COO)."""
     from repro.kernels.ref import bsr_spmm_ref
     from repro.kernels.tiling import TiledSparse
+    if op not in ("N", "T"):
+        raise ValueError(f"op must be 'N' or 'T', got {op!r}")
+    if op == "T":
+        if isinstance(mat, SellCS):
+            return spmm_sellcs_t(mat, x)
+        if isinstance(mat, COO):
+            return spmm_coo_t(mat, x)
+        raise TypeError(
+            f"no transpose SpMM oracle for {type(mat).__name__}")
     if isinstance(mat, TiledSparse):
         x2, squeeze = _as_2d(x)
         y = bsr_spmm_ref(mat, x2)

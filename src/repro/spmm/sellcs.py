@@ -18,6 +18,16 @@ Layout (width-major, slice-concatenated):
   ``data[w, l]`` / ``cols[w, l]`` — the ``j``-th nonzero of the row in lane
   ``l`` of slice ``slice_of[w]``, where ``j = w - slice_ptr[slice_of[w]]``.
   Padding entries carry ``data == 0`` and ``cols == 0`` (harmless FMA).
+
+Symmetric one-triangle mode (``structure="symmetric"``): for ``A == A^T``
+only the lower triangle (``row >= col``, diagonal included) enters the
+slice stream, halving the streamed bytes of the memory-bound multiply. A
+dense ``diag`` vector rides along so the multiply can combine the normal
+and transpose passes over the one stored triangle:
+``A X = N-pass(X) + T-pass(X) - diag * X`` (the diagonal is counted by
+both passes, so it is subtracted once). ``to_coo`` mirrors the
+off-diagonal entries back out, so the round trip is dense-equivalent to
+the full matrix and every oracle keeps working unchanged.
 """
 from __future__ import annotations
 
@@ -45,10 +55,13 @@ class SellCS:
     row_perm: Array        # int32[S*C] — permuted slot -> original row
                            #   (padding slots point at m, dropped on scatter)
     row_len: Array         # int32[S*C] — true nnz of each permuted slot
+    diag: Optional[Array]  # f32[m] dense diagonal (symmetric mode), else None
     shape: Tuple[int, int] = static_field()
     chunk: int = static_field()          # C — slice height
     sigma: int = static_field()          # σ — sorting window (rows)
-    nnz: int = static_field()            # true nonzeros before padding
+    nnz: int = static_field()            # stored nonzeros before padding
+                                         #   (one triangle in symmetric mode)
+    structure: str = static_field(default="general")   # "general"|"symmetric"
 
     @property
     def num_slices(self) -> int:
@@ -72,14 +85,19 @@ class SellCS:
         ``nbytes`` (asserted in the tests) so conversion-amortization
         comparisons never flatter this format."""
         W = self.data.shape[0]
-        return int(W * self.chunk * (self.data.dtype.itemsize + 4)
-                   + self.slice_ptr.shape[0] * 4
-                   + self.slice_of.shape[0] * 4
-                   + self.row_perm.shape[0] * 4
-                   + self.row_len.shape[0] * 4)
+        b = int(W * self.chunk * (self.data.dtype.itemsize + 4)
+                + self.slice_ptr.shape[0] * 4
+                + self.slice_of.shape[0] * 4
+                + self.row_perm.shape[0] * 4
+                + self.row_len.shape[0] * 4)
+        if self.diag is not None:
+            b += int(self.diag.shape[0] * self.diag.dtype.itemsize)
+        return b
 
     def to_coo(self) -> COO:
-        """Exact round-trip (host-side), including explicit zeros."""
+        """Exact round-trip (host-side), including explicit zeros. In
+        symmetric mode the stored lower triangle is mirrored back out, so
+        the result is dense-equivalent to the full matrix."""
         m, n = self.shape
         C = self.chunk
         data = np.asarray(self.data)
@@ -96,30 +114,87 @@ class SellCS:
         slot = slice_of[:, None] * C + np.arange(C, dtype=np.int64)  # [W, C]
         valid = j[:, None] < row_len[slot]
         rows = row_perm[slot][valid]
+        vals = data[valid]
+        ccols = cols[valid].astype(np.int64)
+        if self.structure == "symmetric":
+            off = rows != ccols                  # strict lower triangle
+            rows, ccols = (np.concatenate([rows, ccols[off]]),
+                           np.concatenate([ccols, rows[off]]))
+            vals = np.concatenate([vals, vals[off]])
         return COO(jnp.asarray(rows.astype(np.int32)),
-                   jnp.asarray(cols[valid].astype(np.int32)),
-                   jnp.asarray(data[valid]), self.shape)
+                   jnp.asarray(ccols.astype(np.int32)),
+                   jnp.asarray(vals), self.shape)
+
+
+def _dedup_sums(keys: np.ndarray, vals: np.ndarray):
+    """Coordinate-summed (key, value) pairs in sorted key order."""
+    order = np.argsort(keys, kind="stable")
+    k, v = keys[order], vals[order].astype(np.float64)
+    uk, start = np.unique(k, return_index=True)
+    return uk, np.add.reduceat(v, start) if v.size else v
+
+
+def _symmetric_lower(coo: COO):
+    """Validate ``A == A^T`` (pattern and values, after summing duplicate
+    coordinates) and return the lower-triangle stream + dense diagonal.
+    Raises ``ValueError`` on a non-square or asymmetric input."""
+    m, n = coo.shape
+    if m != n:
+        raise ValueError(
+            f"structure='symmetric' needs a square matrix, got {m}x{n}")
+    rows = np.asarray(coo.rows, np.int64)
+    cols = np.asarray(coo.cols, np.int64)
+    vals = np.asarray(coo.data)
+    ka, va = _dedup_sums(rows * n + cols, vals)
+    kb, vb = _dedup_sums(cols * n + rows, vals)
+    # pattern must match exactly; summed duplicate values only to fp-sum
+    # reassociation tolerance (the two sides add duplicates in different
+    # orders)
+    scale = float(np.abs(va).max()) if va.size else 1.0
+    if ka.shape != kb.shape or not np.array_equal(ka, kb) \
+            or not np.allclose(va, vb, rtol=1e-6, atol=1e-9 * max(scale, 1.0)):
+        raise ValueError(
+            "structure='symmetric' requires A == A^T (pattern and values); "
+            "store the full matrix with structure='general' instead")
+    keep = rows >= cols                       # one triangle, diagonal kept
+    dtype = np.float32 if vals.size == 0 else vals.dtype
+    diag = np.zeros(m, dtype)
+    on_d = rows == cols
+    np.add.at(diag, rows[on_d], vals[on_d])
+    return rows[keep], cols[keep], vals[keep], diag
 
 
 def coo_to_sellcs(coo: COO, *, c: int = DEFAULT_C,
-                  sigma: Optional[int] = None) -> SellCS:
+                  sigma: Optional[int] = None,
+                  structure: str = "general") -> SellCS:
     """Convert COO -> SELL-C-σ (host-side, like every conversion here).
 
     ``sigma`` is the row-sorting window in rows; it is rounded up to a
     multiple of ``c``. ``sigma=None`` uses ``DEFAULT_SIGMA_SLICES * c``;
     ``sigma >= m`` gives a single global sort (maximal padding reduction,
     maximal permutation scatter); ``sigma = c`` sorts only within slices.
+
+    ``structure="symmetric"`` stores one triangle (``row >= col``) plus a
+    dense diagonal; the input must satisfy ``A == A^T`` exactly (pattern
+    and values) or a ``ValueError`` is raised.
     """
     m, n = coo.shape
     if c < 1:
         raise ValueError(f"slice height C must be >= 1, got {c}")
+    if structure not in ("general", "symmetric"):
+        raise ValueError(f"structure must be 'general' or 'symmetric', "
+                         f"got {structure!r}")
     if sigma is None:
         sigma = DEFAULT_SIGMA_SLICES * c
     sigma = max(-(-sigma // c) * c, c)
 
-    rows = np.asarray(coo.rows, np.int64)
-    cols = np.asarray(coo.cols, np.int64)
-    vals = np.asarray(coo.data)
+    diag = None
+    if structure == "symmetric":
+        rows, cols, vals, diag = _symmetric_lower(coo)
+    else:
+        rows = np.asarray(coo.rows, np.int64)
+        cols = np.asarray(coo.cols, np.int64)
+        vals = np.asarray(coo.data)
 
     row_len_orig = (np.bincount(rows, minlength=m).astype(np.int64)
                     if m else np.zeros(0, np.int64))
@@ -165,5 +240,6 @@ def coo_to_sellcs(coo: COO, *, c: int = DEFAULT_C,
         slice_of=jnp.asarray(slice_of.astype(np.int32)),
         row_perm=jnp.asarray(row_perm.astype(np.int32)),
         row_len=jnp.asarray(row_len.astype(np.int32)),
+        diag=None if diag is None else jnp.asarray(diag),
         shape=coo.shape, chunk=int(c), sigma=int(sigma),
-        nnz=int(rows.size))
+        nnz=int(rows.size), structure=structure)

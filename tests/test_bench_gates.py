@@ -249,3 +249,99 @@ def test_compact_gate_groups_mesh_and_row_schedule_rows():
                _row(f"{MERGE}/chunks=2/cx=off/k=8", 500.0, model_us=6.0)]
     problems = sk.check_chunk_regressions(records, "f.json")
     assert len(problems) == 1 and "/cx=off" in problems[0]
+
+
+# ---------------------------------------------------------------------------
+# transpose gate (spmm_sweep --op N,T rows)
+
+T1 = "mawi_like/sellcs+merge@4dev/chunks=1"
+
+
+def test_transpose_gate_fails_on_regression_where_model_pays():
+    records = [_row(f"{T1}/op=N/k=8", 100.0, model_us=10.0,
+                    backend="tpu"),
+               _row(f"{T1}/op=T/k=8", 500.0, model_us=20.0,
+                    backend="tpu")]
+    # model predicts 2x; measured is 5x > 1.25 * 2x -> flagged
+    problems = sk.check_transpose_regressions(records, "f.json")
+    assert len(problems) == 1
+    assert "op=T" in problems[0] and "5.00x" in problems[0]
+    assert sk.check_records(records, "f.json") == problems
+
+
+def test_transpose_gate_passes_within_predicted_factor():
+    records = [_row(f"{T1}/op=N/k=8", 100.0, model_us=10.0,
+                    backend="tpu"),
+               _row(f"{T1}/op=T/k=8", 240.0, model_us=20.0,
+                    backend="tpu")]
+    # 2.4x measured <= 1.25 * 2x predicted
+    assert sk.check_transpose_regressions(records, "f.json") == []
+    # a model-predicted T *speedup* honoured the same way
+    records = [_row(f"{T1}/op=N/k=8", 100.0, model_us=20.0,
+                    backend="tpu"),
+               _row(f"{T1}/op=T/k=8", 60.0, model_us=10.0,
+                    backend="tpu")]
+    assert sk.check_transpose_regressions(records, "f.json") == []
+
+
+def test_transpose_gate_disarmed_on_host_platform():
+    records = [_row(f"{T1}/op=N/k=8", 100.0, model_us=10.0,
+                    backend="cpu"),
+               _row(f"{T1}/op=T/k=8", 900.0, model_us=20.0,
+                    backend="cpu")]
+    assert sk.check_transpose_regressions(records, "f.json") == []
+    # no backend tag at all -> equally disarmed
+    records = [_row(f"{T1}/op=N/k=8", 100.0, model_us=10.0),
+               _row(f"{T1}/op=T/k=8", 900.0, model_us=20.0)]
+    assert sk.check_transpose_regressions(records, "f.json") == []
+
+
+def test_transpose_gate_needs_both_rows_and_model():
+    assert sk.check_transpose_regressions(
+        [_row(f"{T1}/op=T/k=8", 900.0, model_us=20.0, backend="tpu")],
+        "f") == []
+    assert sk.check_transpose_regressions(
+        [_row(f"{T1}/op=N/k=8", 1.0, model_us=10.0, backend="tpu")],
+        "f") == []
+    assert sk.check_transpose_regressions(
+        [_row(f"{T1}/op=N/k=8", 100.0, backend="tpu"),
+         _row(f"{T1}/op=T/k=8", 900.0, backend="tpu")], "f") == []
+
+
+def test_transpose_gate_groups_by_schedule_chunks_and_k():
+    """op pairs group per (base, k): a row-schedule op=T row never reads a
+    merge op=N baseline, chunks=1 never pairs with chunks=2, k=8 never
+    pairs with k=64."""
+    records = [
+        _row("m/sellcs+row@8dev/op=N/k=8", 100.0, model_us=10.0,
+             backend="tpu"),
+        _row("m/sellcs+row@8dev/op=T/k=8", 210.0, model_us=20.0,
+             backend="tpu"),
+        _row(f"{T1}/op=N/k=8", 100.0, model_us=10.0, backend="tpu"),
+        _row("mawi_like/sellcs+merge@4dev/chunks=2/op=T/k=8", 900.0,
+             model_us=20.0, backend="tpu"),
+        _row(f"{T1}/op=T/k=64", 900.0, model_us=20.0, backend="tpu"),
+    ]
+    assert sk.check_transpose_regressions(records, "f.json") == []
+
+
+def test_existing_gates_group_op_segments_apart():
+    """The chunk/mesh/compact gates keep op=T rows apart from op=N rows:
+    a chunked op=T row is judged against the chunks=1 op=T baseline, not
+    the (faster) op=N one, and vice versa."""
+    records = [_row(f"{MERGE}/chunks=1/op=N/k=8", 100.0, model_us=10.0),
+               _row(f"{MERGE}/chunks=2/op=N/k=8", 101.0, model_us=6.0),
+               _row(f"{MERGE}/chunks=1/op=T/k=8", 300.0, model_us=30.0),
+               _row(f"{MERGE}/chunks=2/op=T/k=8", 900.0, model_us=18.0)]
+    problems = sk.check_chunk_regressions(records, "f.json")
+    assert len(problems) == 1 and "/op=T" in problems[0]
+    records = [
+        _row("m/sellcs+row@8x1mesh/op=T/k=8", 100.0, model_us=10.0,
+             backend="tpu"),
+        _row("m/sellcs+row@4x2mesh/op=T/k=8", 250.0, model_us=6.0,
+             backend="tpu"),
+        _row("m/sellcs+row@4x2mesh/op=N/k=8", 1.0, model_us=1.0,
+             backend="tpu"),
+    ]
+    problems = sk.check_mesh_regressions(records, "f.json")
+    assert len(problems) == 1 and "/op=T" in problems[0]

@@ -307,6 +307,47 @@ def test_fleet_eviction_and_capacity():
         Fleet(capacity=0)
 
 
+def test_fleet_memory_budget_eviction():
+    """ISSUE 9 satellite: max_bytes= evicts by accumulated plan
+    storage_bytes (LRU), counts the freed bytes, and never evicts the
+    tenant being registered (one over-budget matrix still serves)."""
+    from repro import obs
+    from repro.obs import MetricRegistry
+    from repro.spmm import Fleet
+    coo_a, coo_b, coo_c = _coo(seed=1), _coo(seed=2), _coo(seed=3)
+    # budget of 1 byte: every arrival busts it, yet the newest survives
+    reg = obs.install(MetricRegistry())
+    try:
+        tiny = Fleet(impl="ref", max_bytes=1)
+        tiny.register("a", coo_a)
+        assert tiny.tenants() == ["a"]
+        tiny.register("b", coo_b)
+        assert tiny.tenants() == ["b"]         # LRU "a" evicted
+        assert tiny.stats.evictions == 1
+        assert tiny.stats.evicted_bytes > 0
+        assert reg.counter("fleet/evicted_bytes").value == \
+            tiny.stats.evicted_bytes
+    finally:
+        obs.uninstall()
+    # a budget that fits two of three: registering the third evicts
+    # exactly the oldest
+    roomy = Fleet(impl="ref")
+    roomy.register("a", _coo(seed=1))
+    roomy.register("b", _coo(seed=2))
+    budget = roomy.total_storage_bytes()
+    fleet = Fleet(impl="ref", max_bytes=budget)
+    fleet.register("a", coo_a)
+    fleet.register("b", coo_b)
+    assert set(fleet.tenants()) == {"a", "b"}  # fits, nothing evicted
+    assert fleet.stats.evictions == 0
+    fleet.register("c", coo_c)
+    assert "a" not in fleet and "c" in fleet
+    assert fleet.total_storage_bytes() <= budget
+    assert fleet.stats.evicted_bytes > 0
+    with pytest.raises(ValueError):
+        Fleet(max_bytes=0)
+
+
 # -------------------------------------------------------------------------
 # runtime.elastic: reshard flattens once and rejects stale specs
 # -------------------------------------------------------------------------

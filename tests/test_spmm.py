@@ -289,8 +289,9 @@ def test_select_distributed_records_num_chunks():
     assert isinstance(choice, DistributedChoice)
     assert choice.schedule == "merge" and choice.num_chunks in \
         CHUNK_CANDIDATES and choice.num_chunks > 1
-    algo, sched, nc, mesh, cx = choice        # unpacks like a tuple
-    assert (algo, sched, nc, mesh, cx) == tuple(choice)
+    algo, sched, nc, mesh, cx, st = choice    # unpacks like a tuple
+    assert (algo, sched, nc, mesh, cx, st) == tuple(choice)
+    assert st == "general"                    # nothing symmetric here
     assert mesh[0] * mesh[1] == 8
     assert select_distributed(uni, k=8, num_devices=8).num_chunks == 1
 

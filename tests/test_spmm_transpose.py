@@ -1,0 +1,461 @@
+"""Op-aware SpMM (ISSUE 9): transpose (``A^T X``) and symmetric
+one-triangle storage, locked down against the ``to_coo`` dense oracle on
+8 host-platform devices — k in {1, 8, 64} × both schedules × compact on
+and off × meshes (8,1)/(4,2) × num_chunks {1, 4}; the ``SparseOperator``
+``rmatmul``/``.T`` surface sharing one plan for both ops; symmetric
+storage at ≤ 55% of the general stream; the differentiable
+``sparse_matmul`` backward; a GMRES convergence run through the operator
+(forward and adjoint solves on one plan); and the degenerate corners
+(nnz == 0 shard, asymmetric-input raises, explicit-zero width-rows).
+
+Device-backed tests run in SUBPROCESSES (the device-count flag must be
+set before jax initializes; the rest of the suite keeps seeing 1 device).
+Storage accounting, validation, and single-device autodiff run
+in-process.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def _sym_coo_np(m, nnz_half, seed):
+    r = np.random.default_rng(seed)
+    rows = r.integers(0, m, nnz_half)
+    cols = r.integers(0, m, nnz_half)
+    vals = r.standard_normal(nnz_half).astype(np.float32)
+    return (np.concatenate([rows, cols]).astype(np.int32),
+            np.concatenate([cols, rows]).astype(np.int32),
+            np.concatenate([vals, vals]), (m, m))
+
+
+def test_transpose_matches_to_coo_oracle_distributed():
+    """ISSUE 9 acceptance: op='T' through both schedules × chunks × 2-D
+    mesh × compact_x equals the ``to_coo`` dense oracle for k in
+    {1, 8, 64}; the Pallas kernel body (interpret mode) rides one cell."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.data import matrices
+from repro.launch.mesh import make_spmm_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, spmm_coo_t,
+                        spmm_merge_distributed, spmm_row_distributed)
+coo = to_coo(*matrices.mawi_like(500, 430, 4000, 0.4, 0))
+sc = coo_to_sellcs(coo, c=16, sigma=64)
+m = coo.shape[0]
+for k in (1, 8, 64):
+    X = jnp.asarray(np.random.default_rng(k).standard_normal(
+        (m, k)).astype(np.float32))
+    yo = np.asarray(spmm_coo_t(sc.to_coo(), X))
+    for pd, pm in [(8, 1), (4, 2)]:
+        mesh = make_spmm_mesh((pd, pm))
+        for compact in (False, True):
+            row = partition_sellcs_rows(sc, pd, compact_x=compact)
+            np.testing.assert_allclose(
+                np.asarray(spmm_row_distributed(row, X, mesh, op="T")),
+                yo, rtol=1e-5, atol=1e-4,
+                err_msg=f"row {pd}x{pm} k={k} compact={compact}")
+            for nc in (1, 4):
+                mrg = partition_sellcs_nnz(sc, pd, num_chunks=nc,
+                                           compact_x=compact)
+                np.testing.assert_allclose(
+                    np.asarray(spmm_merge_distributed(
+                        mrg, X, mesh, op="T", num_chunks=nc)),
+                    yo, rtol=1e-5, atol=1e-4,
+                    err_msg=f"merge {pd}x{pm} k={k} nc={nc} "
+                            f"compact={compact}")
+    # kernel body in interpret mode, one cell per k
+    row = partition_sellcs_rows(sc, 8, compact_x=True)
+    np.testing.assert_allclose(
+        np.asarray(spmm_row_distributed(
+            row, X, make_spmm_mesh((8, 1)), op="T",
+            impl="pallas_interpret", k_tile=4)),
+        yo, rtol=1e-5, atol=1e-4, err_msg=f"row interpret k={k}")
+# SpMV transpose rides along as k = 1 squeezed
+x = jnp.asarray(np.random.default_rng(9).standard_normal(m)
+                .astype(np.float32))
+mesh = make_spmm_mesh((8, 1))
+y = spmm_row_distributed(partition_sellcs_rows(sc, 8), x, mesh, op="T")
+assert y.ndim == 1
+np.testing.assert_allclose(np.asarray(y),
+                           np.asarray(spmm_coo_t(sc.to_coo(), x)),
+                           rtol=1e-5, atol=1e-4)
+print("transpose oracle OK")
+"""))
+
+
+def test_symmetric_one_triangle_distributed_and_roundtrip():
+    """Symmetric one-triangle storage answers identically under op='N'
+    and op='T' (A == A^T) through both schedules, chunks, the 2-D mesh,
+    and compaction, against the full-matrix ``to_coo`` oracle."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core.formats import COO
+from repro.launch.mesh import make_spmm_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, spmm_coo,
+                        spmm_merge_distributed, spmm_row_distributed)
+r = np.random.default_rng(5)
+m, nh = 300, 2500
+rows = r.integers(0, m, nh); cols = r.integers(0, m, nh)
+vals = r.standard_normal(nh).astype(np.float32)
+coo = COO(jnp.asarray(np.concatenate([rows, cols]).astype(np.int32)),
+          jnp.asarray(np.concatenate([cols, rows]).astype(np.int32)),
+          jnp.asarray(np.concatenate([vals, vals])), (m, m))
+sym = coo_to_sellcs(coo, c=16, sigma=64, structure="symmetric")
+full = sym.to_coo()
+assert full.nnz > sym.row_len.sum()        # the mirror really unfolds
+for k in (1, 8):
+    X = jnp.asarray(r.standard_normal((m, k)).astype(np.float32))
+    yo = np.asarray(spmm_coo(full, X))
+    for pd, pm in [(8, 1), (4, 2)]:
+        mesh = make_spmm_mesh((pd, pm))
+        for compact in (False, True):
+            row = partition_sellcs_rows(sym, pd, compact_x=compact)
+            for op in ("N", "T"):
+                np.testing.assert_allclose(
+                    np.asarray(spmm_row_distributed(row, X, mesh, op=op)),
+                    yo, rtol=1e-5, atol=1e-4,
+                    err_msg=f"sym row {pd}x{pm} k={k} op={op} "
+                            f"compact={compact}")
+            for nc in (1, 4):
+                mrg = partition_sellcs_nnz(sym, pd, num_chunks=nc,
+                                           compact_x=compact)
+                for op in ("N", "T"):
+                    np.testing.assert_allclose(
+                        np.asarray(spmm_merge_distributed(
+                            mrg, X, mesh, op=op, num_chunks=nc)),
+                        yo, rtol=1e-5, atol=1e-4,
+                        err_msg=f"sym merge {pd}x{pm} k={k} nc={nc} "
+                                f"op={op} compact={compact}")
+print("symmetric distributed OK")
+"""))
+
+
+def test_operator_rmatmul_and_T_share_one_plan():
+    """ISSUE 9 acceptance: SparseOperator.rmatmul equals the ``to_coo``
+    dense oracle on the mesh under both schedules × compaction × 2-D mesh
+    × chunks; ``op.T`` is a zero-copy view (``.T.T is op``), and the
+    transpose multiply never rebuilds (stats prove one plan)."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import PlanSpec, to_coo
+from repro.core.formats import COO
+from repro.data import matrices
+from repro.spmm import (SparseOperator, TransposedOperator, spmm_coo,
+                        spmm_coo_t)
+coo = to_coo(*matrices.uniform(300, 250, 2500, 5))
+X = jnp.asarray(np.random.default_rng(0).standard_normal(
+    (300, 8)).astype(np.float32))
+ref_t = np.asarray(spmm_coo_t(coo, X))
+for sched in ("row", "merge"):
+    for compact in (False, True):
+        op = SparseOperator(coo, PlanSpec(num_devices=8,
+                                          algorithm="sellcs",
+                                          schedule=sched,
+                                          compact_x=compact),
+                            impl="ref", k_hint=8)
+        builds = op.stats.sellcs_builds
+        np.testing.assert_allclose(np.asarray(op.rmatmul(X)), ref_t,
+                                   rtol=1e-5, atol=1e-4,
+                                   err_msg=f"{sched} compact={compact}")
+        tv = op.T
+        assert isinstance(tv, TransposedOperator)
+        assert tv.T is op and tv.shape == (250, 300)
+        np.testing.assert_allclose(np.asarray(tv @ X), ref_t,
+                                   rtol=1e-5, atol=1e-4)
+        assert op.stats.sellcs_builds == builds  # no rebuild for T
+# 2-D mesh + chunked merge through the operator
+op = SparseOperator(coo, PlanSpec(num_devices=8, mesh_shape=(4, 2),
+                                  algorithm="sellcs", schedule="merge",
+                                  num_chunks=2), impl="ref", k_hint=8)
+np.testing.assert_allclose(np.asarray(op.rmatmul(X)), ref_t,
+                           rtol=1e-5, atol=1e-4, err_msg="4x2 chunked")
+# symmetric structure end-to-end: matmul == rmatmul == dense oracle
+r = np.random.default_rng(6)
+m, nh = 256, 2000
+rows = r.integers(0, m, nh); cols = r.integers(0, m, nh)
+vals = r.standard_normal(nh).astype(np.float32)
+scoo = COO(jnp.asarray(np.concatenate([rows, cols]).astype(np.int32)),
+           jnp.asarray(np.concatenate([cols, rows]).astype(np.int32)),
+           jnp.asarray(np.concatenate([vals, vals])), (m, m))
+ops = SparseOperator(scoo, PlanSpec(num_devices=8, algorithm="sellcs",
+                                    structure="symmetric"),
+                     impl="ref", k_hint=8)
+assert ops.plan.spec.structure == "symmetric"
+Xs = jnp.asarray(r.standard_normal((m, 8)).astype(np.float32))
+ys = np.asarray(spmm_coo(scoo, Xs))
+np.testing.assert_allclose(np.asarray(ops.matmul(Xs)), ys,
+                           rtol=1e-5, atol=1e-4)
+np.testing.assert_allclose(np.asarray(ops.rmatmul(Xs)), ys,
+                           rtol=1e-5, atol=1e-4)
+print("operator rmatmul OK")
+"""))
+
+
+def test_transpose_degenerate_cases():
+    """Degenerates: an nnz == 0 shard answers zeros at the right shape
+    under op='T'; explicit-zero width-rows (all-zero values, real column
+    indices) stay harmless through the transpose scatter and the chunked
+    re-deal."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import to_coo
+from repro.launch.mesh import make_spmm_mesh
+from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
+                        partition_sellcs_rows, spmm_coo_t,
+                        spmm_merge_distributed, spmm_row_distributed)
+mesh = make_spmm_mesh((8, 1))
+z = np.zeros(0, np.int32)
+empty = to_coo(z, z, np.zeros(0, np.float32), (64, 48))
+se = coo_to_sellcs(empty, c=16, sigma=16)
+X = jnp.ones((64, 4), jnp.float32)
+y = spmm_row_distributed(partition_sellcs_rows(se, 8), X, mesh, op="T")
+assert y.shape == (48, 4) and float(np.abs(np.asarray(y)).max()) == 0
+y = spmm_merge_distributed(partition_sellcs_nnz(se, 8), X, mesh, op="T")
+assert y.shape == (48, 4) and float(np.abs(np.asarray(y)).max()) == 0
+
+# explicit-zero width-rows: zero values with real column indices must
+# contribute nothing to the scattered columns, under every chunking
+rows = np.array([0, 0, 0] + list(range(1, 16)), np.int32)
+cols = np.array([0, 2, 3] + [r % 4 for r in range(1, 16)], np.int32)
+vals = np.array([1.0, 0.0, 0.0] + [float(r) for r in range(1, 16)],
+                np.float32)
+coo = to_coo(rows, cols, vals, (16, 4))
+sc = coo_to_sellcs(coo, c=4, sigma=16)
+X = jnp.asarray(np.random.default_rng(0).standard_normal(
+    (16, 8)).astype(np.float32))
+yo = np.asarray(spmm_coo_t(sc.to_coo(), X))
+for compact in (False, True):
+    mrg = partition_sellcs_nnz(sc, 8, compact_x=compact)
+    for nc in (1, 2, 3, 9):
+        yc = np.asarray(spmm_merge_distributed(mrg, X, mesh, op="T",
+                                               num_chunks=nc))
+        np.testing.assert_allclose(yc, yo, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"nc={nc} compact={compact}")
+    np.testing.assert_allclose(
+        np.asarray(spmm_row_distributed(
+            partition_sellcs_rows(sc, 8, compact_x=compact), X, mesh,
+            op="T")),
+        yo, rtol=1e-5, atol=1e-5, err_msg=f"row compact={compact}")
+print("transpose degenerates OK")
+"""))
+
+
+def test_gmres_converges_through_operator():
+    """Satellite (a): restarted GMRES over ``(I + 0.05 A)`` driven by a
+    SparseOperator converges below 1e-5 relative residual, and so does
+    the adjoint system through ``op.T`` — both on the one realized plan
+    (8-device mesh)."""
+    print(run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import PlanSpec, to_coo
+from repro.data import matrices
+from repro.spmm import SparseOperator
+rows, cols, vals, shape = matrices.rmat(scale=9, edge_factor=8, seed=0)
+n = shape[0]
+deg = np.bincount(cols, minlength=n).astype(np.float32)
+coo = to_coo(rows, cols, 1.0 / np.maximum(deg[cols], 1.0), shape)
+A = SparseOperator.from_coo(
+    coo, PlanSpec(num_devices=8, algorithm="sellcs"), impl="ref",
+    k_hint=1, num_spmvs=500)
+
+def gmres(op, b, m=20, restarts=10, tol=1e-8):
+    x = jnp.zeros_like(b)
+    for outer in range(restarts):
+        r = b - op(x)
+        beta = float(jnp.linalg.norm(r))
+        if beta < tol:
+            break
+        V = [r / beta]
+        H = np.zeros((m + 1, m))
+        mm = m
+        for j in range(mm):
+            w = op(V[j])
+            for i in range(j + 1):
+                H[i, j] = float(jnp.vdot(V[i], w))
+                w = w - H[i, j] * V[i]
+            H[j + 1, j] = float(jnp.linalg.norm(w))
+            if H[j + 1, j] < 1e-12:
+                mm = j + 1
+                break
+            V.append(w / H[j + 1, j])
+        e1 = np.zeros(mm + 1); e1[0] = beta
+        y, *_ = np.linalg.lstsq(H[: mm + 1, :mm], e1, rcond=None)
+        x = x + jnp.stack(V[:mm], axis=1) @ jnp.asarray(y, jnp.float32)
+        if float(jnp.linalg.norm(b - op(x))) < tol:
+            break
+    return x
+
+b = jnp.asarray(np.random.default_rng(1).standard_normal(n)
+                .astype(np.float32))
+for tag, op in [("forward", A), ("adjoint", A.T)]:
+    f = lambda v: v + 0.05 * (op @ v)
+    x = gmres(f, b)
+    res = float(jnp.linalg.norm(b - f(x)) / jnp.linalg.norm(b))
+    assert res < 1e-5, (tag, res)
+    print(tag, "residual", res)
+assert A.stats.sellcs_builds <= 1          # one plan serves both solves
+print("gmres operator OK")
+"""))
+
+
+# --------------------------------------------------------------------------
+# Host-side (1 device): storage accounting, validation, autodiff surface
+# --------------------------------------------------------------------------
+def test_symmetric_storage_at_most_55_percent():
+    """ISSUE 9 acceptance: one-triangle storage reports <= ~55% of the
+    general-format ``storage_bytes()`` on a (dense-ish) symmetric test
+    matrix, and the SellCS ``to_coo`` round-trip is exact."""
+    import jax.numpy as jnp
+    from repro.core.formats import COO
+    from repro.spmm import coo_to_sellcs, spmm_ref
+    ar, ac, av, shape = _sym_coo_np(512, 40000, seed=0)
+    coo = COO(jnp.asarray(ar), jnp.asarray(ac), jnp.asarray(av), shape)
+    gen = coo_to_sellcs(coo, c=32, structure="general")
+    sym = coo_to_sellcs(coo, c=32, structure="symmetric")
+    ratio = sym.storage_bytes() / gen.storage_bytes()
+    assert ratio <= 0.55, f"one-triangle ratio {ratio:.3f} > 0.55"
+    # the mirror round-trips: both formats multiply identically
+    X = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (512, 4)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(spmm_ref(sym, X)),
+                               np.asarray(spmm_ref(gen, X)),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_symmetric_requires_symmetric_input():
+    """Asymmetric input + structure='symmetric' raises at conversion and
+    at the operator surface; rectangular input raises on shape alone."""
+    import jax.numpy as jnp
+    from repro.core import PlanSpec
+    from repro.core.formats import COO
+    from repro.spmm import SparseOperator, coo_to_sellcs
+    r = np.random.default_rng(2)
+    rows = jnp.asarray(r.integers(0, 50, 300).astype(np.int32))
+    cols = jnp.asarray(r.integers(0, 50, 300).astype(np.int32))
+    vals = jnp.asarray(r.standard_normal(300).astype(np.float32))
+    asym = COO(rows, cols, vals, (50, 50))
+    with pytest.raises(ValueError):
+        coo_to_sellcs(asym, structure="symmetric")
+    with pytest.raises(ValueError):
+        SparseOperator(asym, PlanSpec(num_devices=1, algorithm="sellcs",
+                                      structure="symmetric"), impl="ref")
+    rect = COO(rows, cols, vals, (50, 60))
+    with pytest.raises(ValueError):
+        coo_to_sellcs(rect, structure="symmetric")
+    # symmetric structure is a sellcs capability only
+    ar, ac, av, shape = _sym_coo_np(50, 200, seed=3)
+    sym = COO(jnp.asarray(ar), jnp.asarray(ac), jnp.asarray(av), shape)
+    with pytest.raises(ValueError):
+        SparseOperator(sym, PlanSpec(num_devices=1, algorithm="parcrs",
+                                     structure="symmetric"), impl="ref")
+
+
+def test_selector_picks_symmetric_structure():
+    """matrix_stats detects A == A^T; select_distributed only offers the
+    one-triangle axis for sellcs on symmetric inputs, and a PlanSpec pin
+    is respected."""
+    import jax.numpy as jnp
+    from repro.core.formats import COO
+    from repro.core.selector import (PlanSpec, matrix_stats,
+                                     select_distributed)
+    ar, ac, av, shape = _sym_coo_np(200, 900, seed=4)
+    sym = COO(jnp.asarray(ar), jnp.asarray(ac), jnp.asarray(av), shape)
+    r = np.random.default_rng(5)
+    gen = COO(jnp.asarray(r.integers(0, 200, 1500).astype(np.int32)),
+              jnp.asarray(r.integers(0, 200, 1500).astype(np.int32)),
+              jnp.asarray(r.standard_normal(1500).astype(np.float32)),
+              (200, 200))
+    assert matrix_stats(sym).symmetric is True
+    assert matrix_stats(gen).symmetric is False
+    ch = select_distributed(matrix_stats(gen), k=32, num_devices=8)
+    assert ch.structure == "general"
+    ch = select_distributed(
+        matrix_stats(sym), k=32, num_devices=8,
+        spec=PlanSpec(num_devices=8, algorithm="sellcs",
+                      structure="symmetric"))
+    assert ch.structure == "symmetric"
+    with pytest.raises(ValueError):
+        PlanSpec(structure="banded").canonical()
+
+
+def test_sparse_matmul_backward_through_operator():
+    """The differentiable surface: jax.grad through ``sparse_matmul``
+    equals the dense-matrix gradient (forward = matmul, cotangent =
+    rmatmul over the one plan)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import PlanSpec
+    from repro.core.formats import COO
+    from repro.spmm import SparseOperator, sparse_matmul
+    r = np.random.default_rng(7)
+    m, n, nnz = 60, 40, 500
+    rows = r.integers(0, m, nnz).astype(np.int32)
+    cols = r.integers(0, n, nnz).astype(np.int32)
+    vals = r.standard_normal(nnz).astype(np.float32)
+    coo = COO(jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals),
+              (m, n))
+    dense = np.zeros((m, n), np.float32)
+    np.add.at(dense, (rows, cols), vals)
+    op = SparseOperator(coo, PlanSpec(num_devices=1, algorithm="sellcs"),
+                        impl="ref", k_hint=4)
+    X = jnp.asarray(r.standard_normal((n, 4)).astype(np.float32))
+    T = jnp.asarray(r.standard_normal((m, 4)).astype(np.float32))
+
+    def loss(x):
+        return jnp.sum((sparse_matmul(op, x) - T) ** 2)
+
+    def loss_dense(x):
+        return jnp.sum((jnp.asarray(dense) @ x - T) ** 2)
+
+    np.testing.assert_allclose(np.asarray(jax.grad(loss)(X)),
+                               np.asarray(jax.grad(loss_dense)(X)),
+                               rtol=1e-4, atol=1e-3)
+    # pre-transpose plans cannot rmatmul: the error names the fix
+    from repro.spmm.operator import RealizedPlan
+    rp = op.plan._replace(multiply_t=None)
+    op2 = SparseOperator(coo, rp, impl="ref")
+    with pytest.raises(ValueError, match="re-realize"):
+        op2.rmatmul(T)
+
+
+def test_spmm_dispatcher_op_validation():
+    """The one-call surface: bad op rejected; op='T' on a kernel-less
+    format raises under impl='pallas'; the reference path covers COO."""
+    import jax.numpy as jnp
+    from repro.core.formats import COO
+    from repro.spmm import coo_to_sellcs, spmm, spmm_coo_t
+    r = np.random.default_rng(8)
+    coo = COO(jnp.asarray(r.integers(0, 30, 200).astype(np.int32)),
+              jnp.asarray(r.integers(0, 20, 200).astype(np.int32)),
+              jnp.asarray(r.standard_normal(200).astype(np.float32)),
+              (30, 20))
+    X = jnp.asarray(r.standard_normal((30, 4)).astype(np.float32))
+    with pytest.raises(ValueError, match="op"):
+        spmm(coo, X, op="X")
+    with pytest.raises(TypeError, match="transpose"):
+        spmm(coo, X, impl="pallas_interpret", op="T")
+    yo = np.asarray(spmm_coo_t(coo, X))
+    np.testing.assert_allclose(np.asarray(spmm(coo, X, op="T")), yo,
+                               rtol=1e-5, atol=1e-4)
+    sc = coo_to_sellcs(coo, c=8, sigma=16)
+    np.testing.assert_allclose(
+        np.asarray(spmm(sc, X, impl="pallas_interpret", op="T")),
+        np.asarray(spmm_coo_t(sc.to_coo(), X)), rtol=1e-5, atol=1e-4)
