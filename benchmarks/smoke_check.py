@@ -57,6 +57,21 @@ tie-refusal; and — like the mesh gate — so are ``backend=cpu`` rows: a
 host-platform mesh keeps X as one shared buffer, so the gather's byte
 saving is physically unobservable there.
 
+Fifth cross-row rule (the gather-overlap gate): for every compacted row
+group differing only in the ``gx=<mode>`` segment emitted by
+``benchmarks.spmm_sweep --gather`` (the up-front baseline keeps its
+unsuffixed name), IF the exposed-gather roofline term (the
+``exposed_gather_us`` derived field) says some hidden-gather schedule
+(``overlap``'s per-span double-buffer, ``fused``'s in-kernel prefetch)
+strictly shrinks the exposed gather time, the best measured hidden row
+must not run more than ``GATHER_REGRESSION_TOLERANCE`` slower than the
+up-front row — where the model says hiding the gather pays, hiding it
+must never cost real time. Groups where the model prices the schedules
+equally (row schedule, single chunk — overlap degenerates to up-front)
+are recorded but not gated, and — like the mesh/compact gates — so are
+``backend=cpu`` rows: a host-platform mesh shares one X buffer, so the
+hidden bytes cannot show up in wall time.
+
 Fourth cross-row rule (the transpose gate): for every
 ``.../op=N|T/k=<k>`` pair emitted by ``benchmarks.spmm_sweep --op N,T``,
 the measured ``op=T`` row must stay within
@@ -140,6 +155,10 @@ MESH_REGRESSION_TOLERANCE = 1.10
 # cx=off twin, where the model says the gather pays
 COMPACT_REGRESSION_TOLERANCE = 1.10
 
+# the best hidden-gather (gx=overlap|fused) row may be at most 10% slower
+# than its up-front twin, where the exposed-gather model says hiding pays
+GATHER_REGRESSION_TOLERANCE = 1.10
+
 # observed/modeled residuals outside [1/10, 10] flag the model as broken —
 # on backends where the model claims to apply (never on cpu, where the
 # traffic model prices memory systems the host platform does not have)
@@ -153,20 +172,30 @@ TRANSPOSE_REGRESSION_TOLERANCE = 1.25
 
 _CHUNK_ROW_RE = re.compile(
     r"^(?P<base>.*sellcs\+merge@\d+dev)/chunks=(?P<c>\d+)"
-    r"(?P<cx>/cx=(?:on|off))?(?P<op>/op=[NT])?/k=(?P<k>\d+)$")
+    r"(?P<cx>/cx=(?:on|off))?(?P<gx>/gx=(?:upfront|overlap|fused))?"
+    r"(?P<op>/op=[NT])?/k=(?P<k>\d+)$")
 
 _MESH_ROW_RE = re.compile(
     r"^(?P<base>.*sellcs\+(?:row|merge))@(?P<pd>\d+)x(?P<pm>\d+)mesh"
     r"(?P<chunks>/chunks=\d+)?(?P<cx>/cx=(?:on|off))?"
+    r"(?P<gx>/gx=(?:upfront|overlap|fused))?"
     r"(?P<op>/op=[NT])?/k=(?P<k>\d+)$")
 
 _COMPACT_ROW_RE = re.compile(
     r"^(?P<base>.*sellcs\+(?:row|merge)@(?:\d+dev|\d+x\d+mesh)"
-    r"(?:/chunks=\d+)?)/cx=(?P<cx>on|off)(?P<op>/op=[NT])?/k=(?P<k>\d+)$")
+    r"(?:/chunks=\d+)?)/cx=(?P<cx>on|off)"
+    r"(?P<gx>/gx=(?:upfront|overlap|fused))?"
+    r"(?P<op>/op=[NT])?/k=(?P<k>\d+)$")
 
 _TRANSPOSE_ROW_RE = re.compile(
     r"^(?P<base>.*sellcs\+(?:row|merge)@(?:\d+dev|\d+x\d+mesh)"
-    r"(?:/chunks=\d+)?(?:/cx=(?:on|off))?)/op=(?P<op>[NT])/k=(?P<k>\d+)$")
+    r"(?:/chunks=\d+)?(?:/cx=(?:on|off))?"
+    r"(?:/gx=(?:upfront|overlap|fused))?)/op=(?P<op>[NT])/k=(?P<k>\d+)$")
+
+_GATHER_ROW_RE = re.compile(
+    r"^(?P<base>.*sellcs\+(?:row|merge)@(?:\d+dev|\d+x\d+mesh)"
+    r"(?:/chunks=\d+)?/cx=on)(?P<gx>/gx=(?:upfront|overlap|fused))?"
+    r"(?P<op>/op=[NT])?/k=(?P<k>\d+)$")
 
 
 def _derived_fields(derived: str) -> Iterator[Tuple[str, str]]:
@@ -176,15 +205,23 @@ def _derived_fields(derived: str) -> Iterator[Tuple[str, str]]:
             yield key.strip(), val.strip()
 
 
-def _model_us(rec: dict) -> Optional[float]:
+def _derived_float(rec: dict, want: str) -> Optional[float]:
     for key, val in _derived_fields(str(rec.get("derived", ""))):
-        if key == "model_us":
+        if key == want:
             try:
                 v = float(val)
             except ValueError:
                 return None
             return v if math.isfinite(v) else None
     return None
+
+
+def _model_us(rec: dict) -> Optional[float]:
+    return _derived_float(rec, "model_us")
+
+
+def _exposed_gather_us(rec: dict) -> Optional[float]:
+    return _derived_float(rec, "exposed_gather_us")
 
 
 def _backend(rec: dict) -> Optional[str]:
@@ -440,13 +477,15 @@ def check_chunk_regressions(records: List[dict], origin: str) -> List[str]:
                 math.isfinite(us) or us <= 0:
             continue
         # a cx=on row only compares against chunked cx=on rows (and off
-        # against off, op=T against op=T) — compaction changes the X bytes
-        # under the stream and the transpose changes the fixup direction
-        groups.setdefault((m["base"], m["cx"] or "", m["op"] or "",
-                           m["k"]),
+        # against off, gx against the same gx, op=T against op=T) —
+        # compaction changes the X bytes under the stream, the gather
+        # schedule moves them, and the transpose changes the fixup
+        # direction
+        groups.setdefault((m["base"], m["cx"] or "", m["gx"] or "",
+                           m["op"] or "", m["k"]),
                           {})[int(m["c"])] = (float(us), _model_us(rec))
     problems = []
-    for (base, cx, opseg, k), rows in sorted(groups.items()):
+    for (base, cx, gxseg, opseg, k), rows in sorted(groups.items()):
         mono = rows.get(1)
         chunked = {c: r for c, r in rows.items() if c > 1}
         if mono is None or not chunked:
@@ -460,7 +499,8 @@ def check_chunk_regressions(records: List[dict], origin: str) -> List[str]:
         best_c, (best_us, _) = min(chunked.items(), key=lambda t: t[1][0])
         if best_us > CHUNK_REGRESSION_TOLERANCE * mono[0]:
             problems.append(
-                f"{origin}:{base}{cx}{opseg}/k={k}: best chunked merge row "
+                f"{origin}:{base}{cx}{gxseg}{opseg}/k={k}: "
+                f"best chunked merge row "
                 f"(chunks={best_c}, {best_us:.4g} us) regresses "
                 f"{best_us / mono[0]:.2f}x over the monolithic chunks=1 "
                 f"row ({mono[0]:.4g} us) although the model predicts "
@@ -489,10 +529,11 @@ def check_mesh_regressions(records: List[dict], origin: str) -> List[str]:
             continue            # no per-device memory -> nothing to gate
         pd, pm = int(m["pd"]), int(m["pm"])
         key = (m["base"], pd * pm, m["chunks"] or "", m["cx"] or "",
-               m["op"] or "", m["k"])
+               m["gx"] or "", m["op"] or "", m["k"])
         groups.setdefault(key, {})[(pd, pm)] = (float(us), _model_us(rec))
     problems = []
-    for (base, total, chunks, cx, opseg, k), rows in sorted(groups.items()):
+    for (base, total, chunks, cx, gxseg, opseg, k), rows in \
+            sorted(groups.items()):
         pure = next((r for (pd, pm), r in rows.items() if pm == 1), None)
         sharded = {s: r for s, r in rows.items() if s[1] > 1}
         if pure is None or not sharded:
@@ -507,7 +548,8 @@ def check_mesh_regressions(records: List[dict], origin: str) -> List[str]:
                                        key=lambda t: t[1][0])
         if best_us > MESH_REGRESSION_TOLERANCE * pure[0]:
             problems.append(
-                f"{origin}:{base}@{total}dev{chunks}{cx}{opseg}/k={k}: best "
+                f"{origin}:{base}@{total}dev{chunks}{cx}{gxseg}{opseg}"
+                f"/k={k}: best "
                 f"model-sharded mesh row ({bpd}x{bpm}, {best_us:.4g} us) "
                 f"regresses {best_us / pure[0]:.2f}x over the pure-data "
                 f"row ({pure[0]:.4g} us) although the model predicts the "
@@ -539,10 +581,15 @@ def check_compact_regressions(records: List[dict], origin: str
             continue
         if _backend(rec) in (None, "cpu"):
             continue            # shared X buffer -> nothing to gate
-        groups.setdefault((m["base"], m["op"] or "", m["k"]),
+        # a gx=overlap|fused row pairs with nothing here: the replicated
+        # baseline has no gather to schedule, so only the up-front
+        # (unsuffixed) cx=on row gets an off twin — hidden-gather rows
+        # land in gx-keyed groups that never complete and are skipped
+        groups.setdefault((m["base"], m["gx"] or "", m["op"] or "",
+                           m["k"]),
                           {})[m["cx"]] = (float(us), _model_us(rec))
     problems = []
-    for (base, opseg, k), rows in sorted(groups.items()):
+    for (base, gxseg, opseg, k), rows in sorted(groups.items()):
         off, on = rows.get("off"), rows.get("on")
         if off is None or on is None:
             continue                    # nothing to compare against
@@ -556,11 +603,64 @@ def check_compact_regressions(records: List[dict], origin: str
             continue
         if on[0] > COMPACT_REGRESSION_TOLERANCE * off[0]:
             problems.append(
-                f"{origin}:{base}{opseg}/k={k}: compacted-gather row (cx=on, "
+                f"{origin}:{base}{gxseg}{opseg}/k={k}: "
+                f"compacted-gather row (cx=on, "
                 f"{on[0]:.4g} us) regresses {on[0] / off[0]:.2f}x over "
                 f"the replicated-X row ({off[0]:.4g} us) although the "
                 f"model predicts the gather pays here; tolerance is "
                 f"{COMPACT_REGRESSION_TOLERANCE:.2f}x")
+    return problems
+
+
+def check_gather_overlap(records: List[dict], origin: str) -> List[str]:
+    """The gather-overlap gate: per compacted row group differing only in
+    the ``gx=<mode>`` segment (``benchmarks.spmm_sweep --gather``), if the
+    exposed-gather roofline term (the ``exposed_gather_us`` derived field)
+    says some hidden-gather schedule STRICTLY shrinks the exposed gather
+    time, the best measured hidden row must stay within
+    GATHER_REGRESSION_TOLERANCE of the up-front baseline — hiding the
+    gather may only move bytes off the critical path, never add wall
+    time. A modelled tie never arms the gate (the row schedule and the
+    single-chunk merge degenerate overlap back to up-front, so the term
+    is identical and a measured loss there is double-buffer overhead on
+    zero upside), and neither do ``backend=cpu`` rows — a host-platform
+    mesh shares one X buffer, so the hidden bytes cannot show up in wall
+    time."""
+    groups: Dict[Tuple[str, str, str],
+                 Dict[str, Tuple[float, Optional[float]]]] = {}
+    for rec in records:
+        m = _GATHER_ROW_RE.match(str(rec.get("name", "")))
+        us = rec.get("us_per_call")
+        if not m or not isinstance(us, (int, float)) or not \
+                math.isfinite(us) or us <= 0:
+            continue
+        if _backend(rec) in (None, "cpu"):
+            continue            # shared X buffer -> nothing to gate
+        mode = m["gx"][len("/gx="):] if m["gx"] else "upfront"
+        groups.setdefault((m["base"], m["op"] or "", m["k"]),
+                          {})[mode] = (float(us), _exposed_gather_us(rec))
+    problems = []
+    for (base, opseg, k), rows in sorted(groups.items()):
+        up = rows.get("upfront")
+        hidden = {g: r for g, r in rows.items() if g != "upfront"}
+        if up is None or not hidden:
+            continue                    # nothing to compare against
+        # arm the gate only where the model predicts hiding STRICTLY
+        # pays at THIS size (the degenerate schedules price identically
+        # and a measured loss there is physics, not a regression)
+        exposed = [r[1] for r in hidden.values()]
+        if up[1] is None or any(e is None for e in exposed) or \
+                min(exposed) >= up[1]:
+            continue
+        best_g, (best_us, _) = min(hidden.items(), key=lambda t: t[1][0])
+        if best_us > GATHER_REGRESSION_TOLERANCE * up[0]:
+            problems.append(
+                f"{origin}:{base}{opseg}/k={k}: best hidden-gather row "
+                f"(gx={best_g}, {best_us:.4g} us) regresses "
+                f"{best_us / up[0]:.2f}x over the up-front gather row "
+                f"({up[0]:.4g} us) although the model predicts hiding "
+                f"pays here; tolerance is "
+                f"{GATHER_REGRESSION_TOLERANCE:.2f}x")
     return problems
 
 
@@ -635,6 +735,7 @@ def check_records(records: List[dict], origin: str) -> List[str]:
     problems.extend(check_chunk_regressions(records, origin))
     problems.extend(check_mesh_regressions(records, origin))
     problems.extend(check_compact_regressions(records, origin))
+    problems.extend(check_gather_overlap(records, origin))
     problems.extend(check_transpose_regressions(records, origin))
     problems.extend(check_residuals(records, origin))
     return problems

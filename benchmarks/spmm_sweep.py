@@ -31,6 +31,17 @@ partitioner's *measured* mean ``n_touched``, so
 wherever the model says the gather pays (disarmed on ``backend=cpu``
 like the mesh gate — a host-platform mesh shares one X buffer).
 
+``--gather upfront,overlap`` sweeps the compact-X gather schedule next to
+the up-front one: each compacted (``cx=on``) row grows a ``gx=<mode>``
+sibling per non-default mode (``overlap`` double-buffers the per-span
+gather against the merge chunk stream, ``fused`` folds the indirection
+into the Pallas kernel's scalar prefetch), each priced by the
+exposed-gather roofline term (``spmm_distributed_gather_s``) and stamped
+with ``exposed_gather_us=`` so ``smoke_check.check_gather_overlap`` can
+gate the hidden-gather rows against their up-front baseline wherever the
+model says hiding pays (disarmed on ``backend=cpu`` like the other mesh
+gates).
+
 ``--op N,T`` adds the transpose multiply (``A^T X``, X read at [m, k])
 next to each forward row of every distributed group: one ``op=T`` row per
 ``op=N`` row, each priced by the op-aware traffic model (dense slot-space
@@ -85,7 +96,7 @@ def sweep_matrix(name: str, coo, ks, impl: str, reps: int, csv) -> None:
 
 def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
                   chunk_counts, tag_of, compact_flags=(False,),
-                  ops=("N",)) -> None:
+                  ops=("N",), gathers=("upfront",)) -> None:
     """Shared measurement core of ``sweep_distributed`` / ``sweep_mesh2d``:
     both schedules per (P_data, P_model) shape (ref impl bodies — the
     host-platform mesh has no TPU cores to feed the Pallas path), the
@@ -97,12 +108,17 @@ def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
     ``("N",)`` appends an ``/op=N|T`` segment — the transpose rows read X
     at [m, k] and are priced by the op-aware traffic model, giving
     ``smoke_check.check_transpose_regressions`` its same-config op=N
-    baseline.
+    baseline; sweeping ``gathers`` beyond ``("upfront",)`` appends a
+    ``/gx=<mode>`` segment to the non-default compacted rows (the
+    up-front baseline keeps its unsuffixed name) so
+    ``smoke_check.check_gather_overlap`` can pair them.
     """
     import jax
     import jax.numpy as jnp
     from repro.launch.mesh import make_spmm_mesh
-    from repro.roofline import spmm_distributed_time, spmm_distributed_traffic
+    from repro.roofline import (spmm_distributed_gather_s,
+                                spmm_distributed_time,
+                                spmm_distributed_traffic)
     from repro.spmm import (coo_to_sellcs, partition_sellcs_nnz,
                             partition_sellcs_rows, spmm_merge_distributed,
                             spmm_row_distributed)
@@ -141,28 +157,38 @@ def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
             # instead — its re-dealt col_map is what the multiply gathers
             # through, and the model must price THAT map's n_touched
             mrg_sharded = partition_sellcs_nnz(sc, pd, compact_x=cf)
+            # the gather schedule is a compact-only knob: replicated-X
+            # rows have no X gather to hide, so they sweep "upfront" only
+            gs = tuple(gathers) if cf else ("upfront",)
             variants = []
             for opv in ops:
-                variants.append(
-                    ("row", None, mean_nt(row_sharded), opv,
-                     jax.jit(lambda X, rs=row_sharded, me=mesh, o=opv:
-                             spmm_row_distributed(rs, X, me, op=o))))
+                for g in gs:
+                    variants.append(
+                        ("row", None, mean_nt(row_sharded), opv, g,
+                         jax.jit(lambda X, rs=row_sharded, me=mesh, o=opv,
+                                 g=g:
+                                 spmm_row_distributed(rs, X, me, op=o,
+                                                      gather=g))))
                 for c in chunk_counts:
                     ms = mrg_sharded
                     if cf and int(c) > 1:
                         ms = partition_sellcs_nnz(sc, pd, num_chunks=int(c),
                                                   compact_x=True)
-                    variants.append(
-                        ("merge", int(c), mean_nt(ms), opv,
-                         jax.jit(lambda X, ms=ms, me=mesh, c=int(c), o=opv:
-                                 spmm_merge_distributed(ms, X, me,
-                                                        num_chunks=c,
-                                                        op=o))))
+                    for g in gs:
+                        variants.append(
+                            ("merge", int(c), mean_nt(ms), opv, g,
+                             jax.jit(lambda X, ms=ms, me=mesh, c=int(c),
+                                     o=opv, g=g:
+                                     spmm_merge_distributed(ms, X, me,
+                                                            num_chunks=c,
+                                                            op=o,
+                                                            gather=g))))
             cx = f"/cx={'on' if cf else 'off'}" if tag_cx else ""
-            for sched, nc, n_touched, opv, jitted in variants:
+            for sched, nc, n_touched, opv, g, jitted in variants:
+                gx = f"/gx={g}" if g != "upfront" else ""
                 tag = f"{name}/sellcs+{sched}{tag_of(pd, pm)}" + \
                     (f"/chunks={nc}" if nc is not None else "") + cx + \
-                    (f"/op={opv}" if tag_op else "")
+                    gx + (f"/op={opv}" if tag_op else "")
                 for k in ks:
                     X = jnp.asarray(rng.standard_normal(
                         (m if opv == "T" else n, k)).astype(np.float32))
@@ -176,7 +202,8 @@ def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
                     model_s = spmm_distributed_time(
                         m, n, k, pd, sched, nnz=nnz, max_row_nnz=max_row,
                         num_chunks=nc or 1, model_devices=pm,
-                        compact_x=cf, n_touched=n_touched, op=opv)
+                        compact_x=cf, n_touched=n_touched, op=opv,
+                        gather=g)
                     # residual = observed/modeled — the same quantity the
                     # serve-path ResidualLedger records, stamped per row
                     # so smoke_check's residual gate reads sweep JSON and
@@ -188,35 +215,42 @@ def _sweep_shapes(name: str, coo, ks, mesh_shapes, reps: int, csv,
                                f"residual={sec / model_s:.4g};"
                                f"backend={backend}")
                     if cf:
-                        derived += f";n_touched={n_touched:.4g}"
+                        exposed_s = spmm_distributed_gather_s(
+                            m, n, k, pd, sched, nnz=nnz,
+                            max_row_nnz=max_row, num_chunks=nc or 1,
+                            model_devices=pm, compact_x=cf,
+                            n_touched=n_touched, op=opv, gather=g)
+                        derived += (f";n_touched={n_touched:.4g}"
+                                    f";exposed_gather_us="
+                                    f"{exposed_s * 1e6:.4g}")
                     csv.row(f"{tag}/k={k}", sec, derived)
 
 
 def sweep_distributed(name: str, coo, ks, devices: int, reps: int,
                       csv, chunk_counts=(1,), compact_flags=(False,),
-                      ops=("N",)) -> None:
+                      ops=("N",), gathers=("upfront",)) -> None:
     """Distributed schedules on a 1-D `devices`-wide data mesh: the
     ``@{P}dev`` row family ``smoke_check``'s chunk gate consumes."""
     _sweep_shapes(name, coo, ks, ((devices, 1),), reps, csv, chunk_counts,
                   lambda pd, pm: f"@{pd}dev", compact_flags=compact_flags,
-                  ops=ops)
+                  ops=ops, gathers=gathers)
 
 
 def sweep_mesh2d(name: str, coo, ks, mesh_shapes, reps: int, csv,
                  chunk_counts=(1,), compact_flags=(False,),
-                 ops=("N",)) -> None:
+                 ops=("N",), gathers=("upfront",)) -> None:
     """Both schedules over 2-D (data, model) mesh factorizations: the
     ``@{Pd}x{Pm}mesh`` row family — include a ``Pm = 1`` shape to give
     ``smoke_check``'s model-axis gate its pure-data baseline."""
     _sweep_shapes(name, coo, ks, mesh_shapes, reps, csv, chunk_counts,
                   lambda pd, pm: f"@{pd}x{pm}mesh",
-                  compact_flags=compact_flags, ops=ops)
+                  compact_flags=compact_flags, ops=ops, gathers=gathers)
 
 
 def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
         reps: int = 3, matrices_only=None, devices: int = 1,
         chunk_counts=(1,), mesh_shapes=(), compact_flags=(False,),
-        ops=("N",)) -> None:
+        ops=("N",), gathers=("upfront",)) -> None:
     from repro.data import matrices
     from . import harness
 
@@ -237,6 +271,8 @@ def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
                   f"{[('on' if f else 'off') for f in compact_flags]}")
     if tuple(ops) != ("N",):
         extra += f", ops={list(ops)}"
+    if tuple(gathers) != ("upfront",):
+        extra += f", gathers={list(gathers)}"
     title = f"SpMM k-sweep (impl={impl}, k in {ks}{extra})"
     csv = harness.Csv(title)
     for name in names:
@@ -247,11 +283,13 @@ def run(suite_scale: float = 0.02, kmax: int = 256, impl: str = "ref",
         if devices > 1:
             sweep_distributed(name, coo, ks, devices, reps, csv,
                               chunk_counts=chunk_counts,
-                              compact_flags=compact_flags, ops=ops)
+                              compact_flags=compact_flags, ops=ops,
+                              gathers=gathers)
         if mesh_shapes:
             sweep_mesh2d(name, coo, ks, mesh_shapes, reps, csv,
                          chunk_counts=chunk_counts,
-                         compact_flags=compact_flags, ops=ops)
+                         compact_flags=compact_flags, ops=ops,
+                         gathers=gathers)
 
 
 def main(argv=None) -> None:
@@ -282,6 +320,12 @@ def main(argv=None) -> None:
                          "X gather next to replication — 'on,off' emits a "
                          "cx=on row per cx=off row so smoke_check's "
                          "compact gate has its replicated baseline")
+    ap.add_argument("--gather", default="upfront",
+                    help="comma-separated subset of upfront,overlap,fused: "
+                         "sweep the compact-X gather schedule (needs "
+                         "--compact-x on) — 'upfront,overlap' emits a "
+                         "gx=overlap row per compacted baseline row so "
+                         "smoke_check's gather gate can pair them")
     ap.add_argument("--op", default="N",
                     help="comma-separated subset of N,T: sweep the "
                          "transpose multiply (A^T X) next to the forward "
@@ -305,6 +349,16 @@ def main(argv=None) -> None:
     if not ops or any(o not in ("N", "T") for o in ops):
         raise SystemExit(f"--op must be comma-separated N/T entries, "
                          f"got {args.op!r}")
+    gathers = tuple(s for s in args.gather.split(",") if s)
+    if not gathers or any(g not in ("upfront", "overlap", "fused")
+                          for g in gathers):
+        raise SystemExit(f"--gather must be comma-separated "
+                         f"upfront/overlap/fused entries, got "
+                         f"{args.gather!r}")
+    if gathers != ("upfront",) and True not in compact_flags:
+        raise SystemExit("--gather beyond 'upfront' needs --compact-x on "
+                         "rows — a replicated-X stream has no X gather "
+                         "to hide")
     mesh_shapes = ()
     if args.mesh:
         try:
@@ -339,7 +393,8 @@ def main(argv=None) -> None:
         reps=args.reps,
         matrices_only=args.matrices.split(",") if args.matrices else None,
         devices=args.devices, chunk_counts=chunk_counts,
-        mesh_shapes=mesh_shapes, compact_flags=compact_flags, ops=ops)
+        mesh_shapes=mesh_shapes, compact_flags=compact_flags, ops=ops,
+        gathers=gathers)
     if args.json:
         harness.dump_json(args.json)
 

@@ -13,11 +13,11 @@ from .curves import (curve_key, hilbert_decode, hilbert_key, hilbert_key_np,
 from .mergepath import (MergePartition, balanced_row_bands,
                         merge_path_partition, merge_path_partition_np,
                         span_block_aligned)
-from .selector import (CHUNK_CANDIDATES, SCHEDULES, DistributedChoice,
-                       MachineSpec, MatrixStats, PlanSpec, amortized_cost,
-                       break_even_spmvs, matrix_stats, mesh_factorizations,
-                       select, select_algorithm, select_distributed,
-                       spmm_cost_scale)
+from .selector import (CHUNK_CANDIDATES, GATHER_CANDIDATES, SCHEDULES,
+                       DistributedChoice, MachineSpec, MatrixStats, PlanSpec,
+                       amortized_cost, break_even_spmvs, matrix_stats,
+                       mesh_factorizations, select, select_algorithm,
+                       select_distributed, spmm_cost_scale)
 from .autotune import TuneResult, autotune
 from .spmv import (spmv, spmv_blocked, spmv_coo, spmv_csr, spmv_dense_oracle,
                    spmv_incremental)
@@ -32,7 +32,7 @@ __all__ = [
     "morton_key", "MergePartition", "balanced_row_bands",
     "merge_path_partition", "merge_path_partition_np", "span_block_aligned",
     "MachineSpec", "MatrixStats", "PlanSpec", "SCHEDULES",
-    "CHUNK_CANDIDATES",
+    "CHUNK_CANDIDATES", "GATHER_CANDIDATES",
     "DistributedChoice", "amortized_cost", "mesh_factorizations",
     "break_even_spmvs", "matrix_stats", "select", "select_algorithm",
     "select_distributed", "spmm_cost_scale", "autotune",

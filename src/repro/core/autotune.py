@@ -55,6 +55,10 @@ class TuneResult:
     structure: Optional[str] = None   # "symmetric" when one-triangle
                                       #   storage won the distributed score
                                       #   (sellcs on A == A^T only)
+    gather: Optional[str] = None      # compact-X gather schedule the
+                                      #   distributed score picked
+                                      #   ("upfront"|"overlap"|"fused";
+                                      #   None off the mesh)
     residual: Optional[float] = None  # observed/modeled correction the
                                       #   feedback ledger applied to this
                                       #   result's winning distributed
@@ -193,7 +197,8 @@ def _rescore_distributed(r: TuneResult, stats, k: int, num_devices: int,
     measurement exists. The winning candidate's correction lands in
     ``TuneResult.residual``."""
     from repro.roofline.analysis import spmm_distributed_time
-    from .selector import _matrix_bytes_est, distributed_schedule_grid
+    from .selector import (GATHER_CANDIDATES, _matrix_bytes_est,
+                           distributed_schedule_grid)
     mat_bytes = _matrix_bytes_est(r.algorithm, stats)
     base_s = spmm_distributed_time(stats.m, stats.n, k, 1, "row",
                                    matrix_bytes=mat_bytes)
@@ -211,29 +216,40 @@ def _rescore_distributed(r: TuneResult, stats, k: int, num_devices: int,
         structures = ((spec.structure,) if r.algorithm == "sellcs"
                       else ("general",))
 
-    def corrected(s, nc, mesh, cf, st):
+    def gathers_for(cf):
+        # the gather schedule only exists on the compact SELL-C-σ path;
+        # "upfront" first so min()'s first-wins tie-break refuses hiding
+        # that buys nothing
+        if not (cf and r.algorithm == "sellcs"):
+            return ("upfront",)
+        if spec is not None and spec.gather is not None:
+            return (spec.gather,)
+        return GATHER_CANDIDATES
+
+    def corrected(s, nc, mesh, cf, st, gm):
         model_s = spmm_distributed_time(
             stats.m, stats.n, k, mesh[0], s, matrix_bytes=mat_bytes,
             max_row_nnz=stats.max_row_nnz, num_chunks=nc,
             model_devices=mesh[1], compact_x=cf, nnz=stats.nnz,
-            structure=st)
+            structure=st, gather=gm)
         corr = 1.0
         if feedback is not None:
             from repro.obs import choice_labels
             corr = feedback.correction(**choice_labels(
                 schedule=s, num_chunks=nc, mesh_shape=mesh, compact_x=cf,
-                structure=st))
+                structure=st, gather=gm))
         return model_s * corr, corr
 
-    ((schedule, num_chunks, mesh_shape, compact, structure),
+    ((schedule, num_chunks, mesh_shape, compact, structure, gmode),
      (model_s, corr)) = min(
-        (((s, nc, mesh, cf, st), corrected(s, nc, mesh, cf, st))
-         for s, nc, mesh in grid for cf in compacts for st in structures),
+        (((s, nc, mesh, cf, st, gm), corrected(s, nc, mesh, cf, st, gm))
+         for s, nc, mesh in grid for cf in compacts for st in structures
+         for gm in gathers_for(cf)),
         key=lambda t: t[1][0])
     per_multiply = r.spmv_s * (model_s / max(base_s, 1e-30))
     return dataclasses.replace(
         r, total_s=r.convert_s + num_spmvs * per_multiply,
         num_devices=num_devices, schedule=schedule, dist_model_s=model_s,
         num_chunks=num_chunks, mesh_shape=mesh_shape, compact_x=compact,
-        structure=structure,
+        structure=structure, gather=gmode if compact else None,
         residual=corr if feedback is not None and corr != 1.0 else None)

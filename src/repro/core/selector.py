@@ -303,6 +303,13 @@ SCHEDULES = ("row", "merge")
 # monolithic fixup). "row" has no collective, so its depth is always 1.
 CHUNK_CANDIDATES = (1, 2, 4, 8)
 
+# Candidate compact-X gather schedules (repro.spmm.distributed.GATHER_MODES):
+# "upfront" materializes the slab ahead of the mesh region, "overlap" hides
+# per-span slab rebuilds under the chunked merge span loop, "fused" rides
+# col_map on the kernel's scalar prefetch. Executable only with
+# compact_x=True on the SELL-C-σ stream.
+GATHER_CANDIDATES = ("upfront", "overlap", "fused")
+
 
 @dataclasses.dataclass(frozen=True)
 class PlanSpec:
@@ -327,6 +334,7 @@ class PlanSpec:
     schedule: Optional[str] = None
     algorithm: Optional[str] = None
     structure: Optional[str] = None     # "general" | "symmetric" | unpinned
+    gather: Optional[str] = None        # "upfront"|"overlap"|"fused"|unpinned
 
     def canonical(self) -> "PlanSpec":
         """Validate and normalize: mesh factors must agree with
@@ -361,6 +369,12 @@ class PlanSpec:
                 self.structure not in ("general", "symmetric"):
             raise ValueError(f"structure must be 'general' or 'symmetric', "
                              f"got {self.structure!r}")
+        if self.gather is not None and self.gather not in GATHER_CANDIDATES:
+            raise ValueError(f"gather must be one of {GATHER_CANDIDATES}, "
+                             f"got {self.gather!r}")
+        if self.gather not in (None, "upfront") and self.compact_x is False:
+            raise ValueError(f"gather={self.gather!r} needs compact_x — "
+                             f"a replicated-X plan has no X gather to hide")
         return dataclasses.replace(self, num_devices=nd, mesh_shape=mesh,
                                    num_chunks=nc)
 
@@ -374,7 +388,8 @@ class PlanSpec:
         return choice_labels(schedule=self.schedule,
                              num_chunks=self.num_chunks,
                              mesh_shape=self.mesh_shape,
-                             compact_x=self.compact_x, **extra)
+                             compact_x=self.compact_x,
+                             gather=self.gather, **extra)
 
 
 def mesh_factorizations(num_devices: int) -> list:
@@ -446,19 +461,22 @@ DISTRIBUTED_ALGOS = ("parcrs", "sellcs")
 
 
 class DistributedChoice(NamedTuple):
-    """Winner of the joint (format × schedule × mesh × chunks × gather ×
-    structure) grid. Unpacks like the old ``(format, schedule,
+    """Winner of the joint (format × schedule × mesh × chunks × compact ×
+    structure × gather) grid. Unpacks like the old ``(format, schedule,
     num_chunks)`` triple with ``mesh_shape`` — the chosen (P_data, P_model)
     factorization — riding fourth, ``compact_x`` — whether the
-    sparsity-aware X gather beats replication — fifth, and ``structure`` —
+    sparsity-aware X gather beats replication — fifth, ``structure`` —
     ``"symmetric"`` when one-triangle storage wins on a symmetric matrix —
-    sixth."""
+    sixth, and ``gather`` — how the compact-X slab build is scheduled
+    (up-front / overlapped with the span loop / fused into the kernel) —
+    seventh."""
     algorithm: str
     schedule: str
     num_chunks: int
     mesh_shape: Tuple[int, int] = (1, 1)
     compact_x: bool = False
     structure: str = "general"
+    gather: str = "upfront"
 
 
 def select_distributed(stats: MatrixStats, *, k: int = 1,
@@ -469,7 +487,9 @@ def select_distributed(stats: MatrixStats, *, k: int = 1,
                        mesh_shape: Optional[Tuple[int, int]] = None,
                        throughput: Optional[Dict[str, float]] = None,
                        spec: Optional[PlanSpec] = None,
-                       feedback=None) -> DistributedChoice:
+                       feedback=None,
+                       n_touched: Optional[float] = None
+                       ) -> DistributedChoice:
     """Joint (format, cross-device schedule, mesh shape, psum chunking)
     choice for ``num_devices`` devices multiplying a ``[n, k]`` block
     ``num_spmvs`` times.
@@ -519,6 +539,16 @@ def select_distributed(stats: MatrixStats, *, k: int = 1,
     geometric-mean observed/modeled residual for its labels before the
     argmin — measured reality outvotes the streaming-bytes story wherever
     a measurement exists, exactly as in ``autotune(feedback=)``.
+
+    For SELL-C-σ compact candidates the grid also scores the gather
+    schedule (:data:`GATHER_CANDIDATES`): the exposed-gather-seconds term
+    (:func:`repro.roofline.analysis.spmm_distributed_gather_s`) is fully
+    paid up-front, partially hidden by the chunked span loop, or zero when
+    fused into the kernel prefetch — strict-< keeps ``upfront`` whenever
+    hiding buys nothing (row schedule, one chunk). ``n_touched`` is a
+    measured per-shard mean touched-column count from a live plan (e.g.
+    the serve path's ``chunk_plan``); without it the model falls back to
+    the nnz-proportional bound.
     """
     from repro.roofline.analysis import spmm_distributed_time
     if spec is not None:
@@ -581,31 +611,46 @@ def select_distributed(stats: MatrixStats, *, k: int = 1,
                           else ("general",))
         for schedule, nc, (pd, pm) in grid:
             for compact in compacts:
+                # the gather schedule only exists where there is a gather:
+                # compact SELL-C-σ. "upfront" is scored first so an
+                # overlapped/fused candidate must strictly beat it.
+                gathers = (GATHER_CANDIDATES
+                           if compact and algo == "sellcs"
+                           else ("upfront",))
+                if spec is not None and spec.gather is not None:
+                    gathers = ((spec.gather,)
+                               if compact and algo == "sellcs"
+                               else ("upfront",))
                 for structure in structures:
-                    sec = spmm_distributed_time(
-                        stats.m, stats.n, k, pd, schedule,
-                        matrix_bytes=mat_bytes, dtype_bytes=dtype_bytes,
-                        max_row_nnz=stats.max_row_nnz, num_chunks=nc,
-                        model_devices=pm, compact_x=compact,
-                        nnz=stats.nnz, structure=structure)
-                    if feedback is not None:
-                        sec *= feedback.correction(**choice_labels(
-                            schedule=schedule, num_chunks=nc,
-                            mesh_shape=(pd, pm), compact_x=compact,
-                            structure=structure))
-                    if thr is None:
-                        per_spmv = sec / max(base_s, 1e-30)
-                    else:
-                        per_spmv = measured * sec / max(algo_base_s, 1e-30)
-                    cost = conv[algo] + num_spmvs * per_spmv
-                    # "or best is None" keeps a valid choice even when
-                    # every cost is inf (e.g. all-inf conversion priors);
-                    # the strict "<" with compact=False / general scored
-                    # first refuses compaction or one-triangle storage
-                    # whenever they tie the plain candidate
-                    if cost < best_cost or best is None:
-                        best = DistributedChoice(algo, schedule, nc,
-                                                 (pd, pm), compact,
-                                                 structure)
-                        best_cost = cost
+                    for gmode in gathers:
+                        sec = spmm_distributed_time(
+                            stats.m, stats.n, k, pd, schedule,
+                            matrix_bytes=mat_bytes, dtype_bytes=dtype_bytes,
+                            max_row_nnz=stats.max_row_nnz, num_chunks=nc,
+                            model_devices=pm, compact_x=compact,
+                            nnz=stats.nnz, structure=structure,
+                            n_touched=n_touched if compact else None,
+                            gather=gmode)
+                        if feedback is not None:
+                            sec *= feedback.correction(**choice_labels(
+                                schedule=schedule, num_chunks=nc,
+                                mesh_shape=(pd, pm), compact_x=compact,
+                                structure=structure, gather=gmode))
+                        if thr is None:
+                            per_spmv = sec / max(base_s, 1e-30)
+                        else:
+                            per_spmv = (measured * sec
+                                        / max(algo_base_s, 1e-30))
+                        cost = conv[algo] + num_spmvs * per_spmv
+                        # "or best is None" keeps a valid choice even when
+                        # every cost is inf (e.g. all-inf conversion
+                        # priors); the strict "<" with compact=False /
+                        # general / upfront scored first refuses
+                        # compaction, one-triangle storage or gather
+                        # hiding whenever they tie the plain candidate
+                        if cost < best_cost or best is None:
+                            best = DistributedChoice(algo, schedule, nc,
+                                                     (pd, pm), compact,
+                                                     structure, gmode)
+                            best_cost = cost
     return best

@@ -20,7 +20,11 @@ axis column-shards the X/Y k-slabs so per-device psum and replicated-X
 bytes drop by Pm — the k ≫ 128 scaling axis. ``--compact-x on`` partitions
 with per-shard column compaction (each data shard gathers only the X rows
 its nonzeros touch instead of reading the replicated slab; ``auto`` asks
-the traffic model whether the gather pays). On CPU, force host-platform
+the traffic model whether the gather pays). ``--gather
+upfront|overlap|fused`` schedules that gather's exposed latency — up-front
+ahead of the mesh region, hidden under the chunked merge span loop, or
+fused into the Pallas kernel's scalar prefetch (``auto`` lets the
+exposed-gather-seconds roofline term pick). On CPU, force host-platform
 devices first:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --mode spmv --matrix mawi_like \
@@ -187,20 +191,28 @@ class _MigrationController:
         from repro.obs import choice_labels
         from repro.roofline import spmm_distributed_time
         st, kb = self.stats, self.max_batch
+        # the current plan's measured per-shard touched-column mean (None
+        # when it has no compact plan) replaces the nnz-proportional bound
+        # in the target's score — the same matrix, so the measurement
+        # carries
+        nt = rp.n_touched
         ch = select_distributed(st, k=kb,
                                 num_spmvs=max(self.projected_total, 1),
                                 spec=self.target_spec,
-                                feedback=self.ledger)
+                                feedback=self.ledger, n_touched=nt)
         self._target_choice = ch
         pd, pm = ch.mesh_shape
+        gx = ch.gather if ch.compact_x else "upfront"
         t_model = spmm_distributed_time(
             st.m, st.n, kb, pd, ch.schedule,
             matrix_bytes=_matrix_bytes_est(ch.algorithm, st),
             max_row_nnz=st.max_row_nnz, num_chunks=ch.num_chunks,
-            model_devices=pm, compact_x=ch.compact_x, nnz=st.nnz)
+            model_devices=pm, compact_x=ch.compact_x, nnz=st.nnz,
+            n_touched=nt if ch.compact_x else None, gather=gx)
         t_corr = self.ledger.correction(**choice_labels(
             schedule=ch.schedule, num_chunks=ch.num_chunks,
-            mesh_shape=ch.mesh_shape, compact_x=ch.compact_x))
+            mesh_shape=ch.mesh_shape, compact_x=ch.compact_x,
+            gather=gx if ch.compact_x else None))
         c_model = rp.model_s(kb) * self.ledger.correction(**rp.labels())
         per_now = self._min_per_mul
         per_target = per_now * (t_model * t_corr) / max(c_model, 1e-30)
@@ -230,7 +242,8 @@ class _MigrationController:
                             mesh_shape=ch.mesh_shape,
                             num_chunks=ch.num_chunks,
                             compact_x=ch.compact_x, schedule=ch.schedule,
-                            algorithm=ch.algorithm)
+                            algorithm=ch.algorithm,
+                            gather=ch.gather if ch.compact_x else None)
 
         def build():
             try:
@@ -393,12 +406,13 @@ def serve_spmv(args):
     # directly): SELL-C-σ over the requested mesh, with --mesh / --chunks
     # / --compact-x pinning knobs the selector would otherwise sweep
     compact = {"auto": None, "on": True, "off": False}[args.compact_x]
+    gather = None if args.gather == "auto" else args.gather
     if args.devices > 1:
         target_spec = PlanSpec(
             num_devices=args.devices,
             mesh_shape=mesh_shape or (args.devices, 1),
             num_chunks=args.chunks if args.chunks > 0 else None,
-            compact_x=compact, algorithm="sellcs")
+            compact_x=compact, algorithm="sellcs", gather=gather)
     else:
         target_spec = PlanSpec(num_devices=1, algorithm="sellcs")
     if args.migrate != "off":
@@ -496,9 +510,11 @@ def _print_traffic_model(sp, n_touched, stats, args):
     if (sp.num_devices or 1) <= 1:
         return
     from repro.roofline import (spmm_distributed_collective_s,
+                                spmm_distributed_gather_s,
                                 spmm_distributed_traffic)
     sched, chunks = sp.schedule, sp.num_chunks or 1
     compact = bool(sp.compact_x)
+    gx = (sp.gather or "upfront") if compact else "upfront"
     pd, pm = sp.mesh_shape
     hbm, coll = spmm_distributed_traffic(
         stats.m, stats.n, args.max_batch, pd, sched,
@@ -507,7 +523,8 @@ def _print_traffic_model(sp, n_touched, stats, args):
     print(f"[serve-spmv] modelled per-device traffic: {hbm / 1e6:.2f} MB "
           f"HBM + {coll / 1e6:.2f} MB collective per flush "
           f"(mesh=({pd},{pm}), schedule={sched}, chunks={chunks}, "
-          f"compact_x={'on' if compact else 'off'})")
+          f"compact_x={'on' if compact else 'off'}"
+          + (f", gather={gx}" if compact else "") + ")")
     if compact:
         hbm_rep, _ = spmm_distributed_traffic(
             stats.m, stats.n, args.max_batch, pd, sched,
@@ -517,6 +534,14 @@ def _print_traffic_model(sp, n_touched, stats, args):
               f"{n_touched:.0f} of n={stats.n} rows per shard — "
               f"{(hbm_rep - hbm) / 1e6:.2f} MB HBM saved vs "
               "replicated X per flush")
+        up, here = (spmm_distributed_gather_s(
+            stats.m, stats.n, args.max_batch, pd, sched,
+            nnz=stats.nnz, max_row_nnz=stats.max_row_nnz,
+            num_chunks=chunks, model_devices=pm, compact_x=True,
+            n_touched=n_touched, gather=g)
+            for g in ("upfront", gx))
+        print(f"[serve-spmv] exposed gather_s: {up * 1e6:.2f} us up-front "
+              f"-> {here * 1e6:.2f} us with gather={gx}")
     if sched == "merge":
         mono, over = (spmm_distributed_collective_s(
             stats.m, stats.n, args.max_batch, pd, sched,
@@ -533,11 +558,13 @@ def _fleet_target_spec(args, mesh_shape):
     tenant registration."""
     from repro.core import PlanSpec
     compact = {"auto": None, "on": True, "off": False}[args.compact_x]
+    gather = None if args.gather == "auto" else args.gather
     if args.devices > 1:
         return PlanSpec(num_devices=args.devices,
                         mesh_shape=mesh_shape or (args.devices, 1),
                         num_chunks=args.chunks if args.chunks > 0 else None,
-                        compact_x=compact, algorithm="sellcs")
+                        compact_x=compact, algorithm="sellcs",
+                        gather=gather)
     return PlanSpec(num_devices=1, algorithm="sellcs")
 
 
@@ -727,6 +754,14 @@ def main(argv=None):
                          "each data shard gathers only the X rows its "
                          "nonzeros touch (auto = let the traffic model "
                          "decide when the gather beats replication)")
+    ap.add_argument("--gather", default="auto",
+                    choices=("auto", "upfront", "overlap", "fused"),
+                    help="compact-X gather schedule: materialize the slab "
+                         "up-front ahead of the mesh region, hide per-span "
+                         "rebuilds under the chunked merge span loop "
+                         "(overlap), or fuse the gather into the Pallas "
+                         "kernel's scalar prefetch (fused); auto = let the "
+                         "exposed-gather-seconds roofline term pick")
     ap.add_argument("--impl", default="auto",
                     choices=("auto", "ref", "pallas", "pallas_interpret"))
     ap.add_argument("--migrate", default="off",

@@ -38,12 +38,14 @@ def choice_labels(schedule: Optional[str] = None,
                   num_chunks: Optional[int] = None,
                   mesh_shape: Optional[Tuple[int, int]] = None,
                   compact_x: Optional[bool] = None,
+                  gather: Optional[str] = None,
                   **extra) -> Dict[str, str]:
     """Canonical label dict for a ``DistributedChoice``-shaped config, so
     the serve path (which *records*) and autotune (which *queries*) key
     residuals identically: ``schedule``, ``num_chunks``, ``mesh``
-    (``"PdxPm"``), ``compact_x`` (``"on"``/``"off"``), plus any extras
-    (matrix name, k, backend)."""
+    (``"PdxPm"``), ``compact_x`` (``"on"``/``"off"``), ``gather``
+    (``"upfront"``/``"overlap"``/``"fused"``), plus any extras (matrix
+    name, k, backend)."""
     labels: Dict[str, str] = {}
     if schedule is not None:
         labels["schedule"] = str(schedule)
@@ -53,6 +55,8 @@ def choice_labels(schedule: Optional[str] = None,
         labels["mesh"] = f"{int(mesh_shape[0])}x{int(mesh_shape[1])}"
     if compact_x is not None:
         labels["compact_x"] = "on" if compact_x else "off"
+    if gather is not None:
+        labels["gather"] = str(gather)
     for k, v in extra.items():
         labels[str(k)] = str(v)
     return labels

@@ -3,7 +3,8 @@ from . import analysis
 from .analysis import (Roofline, collective_bytes_total, csr_stream_bytes,
                        from_compiled, parse_collective_bytes,
                        ridge_intensity, spmm_arithmetic_intensity,
-                       spmm_distributed_collective_s, spmm_distributed_time,
+                       spmm_distributed_collective_s,
+                       spmm_distributed_gather_s, spmm_distributed_time,
                        spmm_distributed_traffic, spmm_roofline_gflops,
                        spmm_touched_fraction)
 
@@ -12,4 +13,5 @@ __all__ = ["analysis", "Roofline", "from_compiled",
            "csr_stream_bytes", "ridge_intensity",
            "spmm_arithmetic_intensity", "spmm_roofline_gflops",
            "spmm_distributed_traffic", "spmm_distributed_time",
-           "spmm_distributed_collective_s", "spmm_touched_fraction"]
+           "spmm_distributed_collective_s", "spmm_distributed_gather_s",
+           "spmm_touched_fraction"]

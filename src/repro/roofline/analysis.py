@@ -379,6 +379,67 @@ def spmm_distributed_collective_s(m: int, n: int, k: int, num_devices: int,
     return (c - 1) * max(0.0, tl - tc) + tl
 
 
+def spmm_distributed_gather_s(m: int, n: int, k: int, num_devices: int,
+                              schedule: str,
+                              matrix_bytes: Optional[float] = None,
+                              nnz: int = 0, dtype_bytes: int = 4,
+                              max_row_nnz: int = 0, num_chunks: int = 1,
+                              hbm_bw: float = HBM_BW,
+                              model_devices: int = 1,
+                              compact_x: bool = False,
+                              n_touched: Optional[float] = None,
+                              op: str = "N",
+                              structure: str = "general",
+                              gather: str = "upfront") -> float:
+    """EXPOSED gather seconds of one distributed multiply — the serialized
+    latency of building the compact-X ``[n_touched, kc]`` slab that does
+    not hide under the slice stream.
+
+    The slab build reads the touched X rows and writes them back
+    (``t_g = 2 * n_touched * kc * dtype_bytes / hbm_bw``); how much of it
+    lands on the critical path depends on the schedule:
+
+    * ``"upfront"``: one monolithic ``x_pad[col_map]`` ahead of the mesh
+      region — fully exposed before the first kernel launch.
+    * ``"overlap"`` (chunked merge only): each span rebuilds its own piece
+      of the slab inside the span loop, so span i+1's gather hides under
+      span i's kernel — exposed is span 0's share plus whatever per-span
+      compute cannot cover: ``t_g/c + (c-1) * max(0, t_g/c - tc)`` with
+      ``tc = (hbm_s)/c``, mirroring the psum pipeline model of
+      :func:`spmm_distributed_collective_s`. Where the executable
+      degenerates to up-front (row schedule, ``num_chunks == 1``), so does
+      the price.
+    * ``"fused"``: ``col_map`` rides the kernel's scalar prefetch and the
+      stream indexes the full X directly — no slab, nothing exposed.
+
+    Zero when the partition is not compact or ``op='T'`` (the transpose
+    path has no X gather: X enters slot-permuted). By construction
+    ``fused <= overlap <= upfront`` for any inputs, so a strict-< selector
+    keeps ``upfront`` on ties.
+    """
+    if gather not in ("upfront", "overlap", "fused"):
+        raise ValueError(f"gather must be 'upfront', 'overlap' or 'fused', "
+                         f"got {gather!r}")
+    if not compact_x or op == "T" or gather == "fused":
+        return 0.0
+    P = max(int(num_devices), 1)
+    Pm = max(int(model_devices), 1)
+    kc = float(k) / Pm
+    nt = (min(float(n_touched), float(n)) if n_touched is not None
+          else spmm_touched_fraction(n, nnz, P) * float(n))
+    t_g = 2.0 * nt * kc * dtype_bytes / hbm_bw
+    c = int(num_chunks)
+    if gather == "overlap" and schedule == "merge" and c > 1:
+        hbm, _ = spmm_distributed_traffic(
+            m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes,
+            nnz=nnz, dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
+            model_devices=model_devices, compact_x=compact_x,
+            n_touched=n_touched, op=op, structure=structure)
+        tc = (hbm / hbm_bw) / c
+        return t_g / c + (c - 1) * max(0.0, t_g / c - tc)
+    return t_g
+
+
 def spmm_distributed_time(m: int, n: int, k: int, num_devices: int,
                           schedule: str,
                           matrix_bytes: Optional[float] = None,
@@ -390,17 +451,20 @@ def spmm_distributed_time(m: int, n: int, k: int, num_devices: int,
                           compact_x: bool = False,
                           n_touched: Optional[float] = None,
                           op: str = "N",
-                          structure: str = "general") -> float:
+                          structure: str = "general",
+                          gather: str = "upfront") -> float:
     """Modelled seconds per distributed multiply: HBM term + the *exposed*
-    collective term. ``num_chunks = 1`` keeps the PR-2 no-overlap model
-    (both terms on the Y critical path, plus one launch); ``num_chunks > 1``
-    prices the pipelined fixup of ``spmm_merge_distributed(num_chunks=)``;
-    ``model_devices > 1`` prices the 2-D (data, model) mesh (k-proportional
-    terms divide by ``P_model``); ``compact_x=True`` prices the
-    sparsity-aware X gather (the X term becomes nnz-proportional —
-    ``n_touched`` supplies a measured per-shard mean); ``op='T'`` prices
-    the transpose scatter fixup; ``structure='symmetric'`` the
-    one-triangle stream (see :func:`spmm_distributed_traffic`)."""
+    collective term + the *exposed* gather term. ``num_chunks = 1`` keeps
+    the PR-2 no-overlap model (both terms on the Y critical path, plus one
+    launch); ``num_chunks > 1`` prices the pipelined fixup of
+    ``spmm_merge_distributed(num_chunks=)``; ``model_devices > 1`` prices
+    the 2-D (data, model) mesh (k-proportional terms divide by
+    ``P_model``); ``compact_x=True`` prices the sparsity-aware X gather
+    (the X term becomes nnz-proportional — ``n_touched`` supplies a
+    measured per-shard mean) with ``gather=`` scheduling its exposed
+    latency (see :func:`spmm_distributed_gather_s`); ``op='T'`` prices the
+    transpose scatter fixup; ``structure='symmetric'`` the one-triangle
+    stream (see :func:`spmm_distributed_traffic`)."""
     hbm, _ = spmm_distributed_traffic(
         m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
         dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
@@ -411,7 +475,13 @@ def spmm_distributed_time(m: int, n: int, k: int, num_devices: int,
         dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
         num_chunks=num_chunks, hbm_bw=hbm_bw, link_bw=link_bw,
         model_devices=model_devices, compact_x=compact_x,
-        n_touched=n_touched, op=op, structure=structure)
+        n_touched=n_touched, op=op, structure=structure
+    ) + spmm_distributed_gather_s(
+        m, n, k, num_devices, schedule, matrix_bytes=matrix_bytes, nnz=nnz,
+        dtype_bytes=dtype_bytes, max_row_nnz=max_row_nnz,
+        num_chunks=num_chunks, hbm_bw=hbm_bw,
+        model_devices=model_devices, compact_x=compact_x,
+        n_touched=n_touched, op=op, structure=structure, gather=gather)
 
 
 def from_compiled(compiled, chips: int, model_flops: float = 0.0,

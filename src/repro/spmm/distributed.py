@@ -56,9 +56,22 @@ span re-deal builds its own touched map over the re-dealt rows) and costs
 one int32 map per shard, priced by ``ShardedSellCS.storage_bytes`` and
 ``roofline.spmm_distributed_traffic(compact_x=True)``.
 
+Gather scheduling (``gather=``) — hiding the compact-X gather: the
+up-front ``x_pad[col_map]`` slab build is one XLA gather serialized on
+the critical path before the first kernel launch. ``gather="overlap"``
+(chunked merge) rebuilds each span's piece of the slab inside the mesh
+region from the plan's per-span touched split, so span ``i+1``'s gather
+hides under span ``i``'s kernel/psum; ``gather="fused"`` skips the slab
+entirely — ``col_map`` rides the Pallas scalar prefetch next to
+``slice_of`` and the kernel indexes the full X directly. All modes are
+bitwise-identical; ``roofline.spmm_distributed_gather_s`` prices the
+exposed seconds of each so the selector can choose.
+
 Phase tracing (``repro.obs``): both multiplies carry ``span()`` markers at
 the phase boundaries the structure already has — ``spmm/gather_x`` (the
-compact-X gather ahead of the mesh region), ``spmm/mesh`` (the whole
+compact-X gather ahead of the mesh region; under ``gather="overlap"`` it
+splits into per-span ``spmm/gather_x/span<i>`` sub-spans inside the mesh
+body), ``spmm/mesh`` (the whole
 shard_map region), ``spmm/kernel`` / ``spmm/psum`` (inside the mesh body
 — host time there is trace time, but the names ride into compiled HLO
 via ``jax.named_scope`` so device profiles show them), and
@@ -155,6 +168,9 @@ class ShardedSellCS(NamedTuple):
         if self.chunk_plan is not None:
             for sp in self.chunk_plan[1]:
                 total += sp.data.nbytes + sp.cols.nbytes + sp.slice_of.nbytes
+                for opt in (sp.sub, sp.col_map, sp.n_touched):
+                    if opt is not None:
+                        total += opt.nbytes
             for opt in self.chunk_plan[2:]:
                 if opt is not None:
                     total += opt.nbytes
@@ -189,12 +205,22 @@ def _pack_maps(touched):
     """Stack per-device sorted touched sets into the dense
     ``(col_map int64[P, Ntc], n_touched int64[P])`` pair (zero-padded to
     the widest shard; Ntc >= 1 so an all-empty mesh still gathers a
-    1-row slab)."""
+    1-row slab).
+
+    Ntc is rounded up to the Pallas lane width HERE, at bake time, so the
+    multiply-time gather is a single ``x_pad[col_map]`` — no per-call
+    ``jnp.concatenate`` pad inside the jitted hot path. Padding entries
+    point at row 0 (the harmless-FMA convention: only data == 0 lanes ever
+    index them); the invariant is asserted host-side once, where it is
+    cheap, instead of trusted inside every trace."""
     n_touched = np.array([t.size for t in touched], np.int64)
     Ntc = max(int(n_touched.max()) if len(touched) else 0, 1)
+    Ntc = -(-Ntc // LANE) * LANE
     col_map = np.zeros((len(touched), Ntc), np.int64)
     for p, t in enumerate(touched):
         col_map[p, :t.size] = t
+        assert not col_map[p, t.size:].any(), \
+            "col_map padding must point at row 0"
     return col_map, n_touched
 
 
@@ -523,19 +549,13 @@ def _prep(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh, axis: str,
     return x2, squeeze, k, kt, x_pad, use_pallas, maxis, pm, compact
 
 
-def _gather_x(x_pad: jax.Array, col_map: jax.Array,
-              use_pallas: bool) -> jax.Array:
+def _gather_x(x_pad: jax.Array, col_map: jax.Array) -> jax.Array:
     """The sparsity-aware X gather: one ``x_pad[col_map]`` per multiply
     builds the per-shard ``[Ntc, kp]`` compacted slabs, stacked on the
     device axis — each data shard reads only the X rows its relabeled
-    ``cols`` name. Slab height is padded to the Pallas lane width (padding
-    map entries point at row 0; only data==0 lanes ever index the pad)."""
-    ntc = col_map.shape[1]
-    ntp = (-(-max(ntc, 1) // LANE) * LANE) if use_pallas else max(ntc, 1)
-    if ntp != ntc:
-        col_map = jnp.concatenate(
-            [col_map, jnp.zeros((col_map.shape[0], ntp - ntc),
-                                col_map.dtype)], axis=1)
+    ``cols`` name. The slab height was padded to the Pallas lane width at
+    bake time (``_pack_maps``; padding map entries point at row 0 and only
+    data==0 lanes ever index them), so the hot path is this one gather."""
     return x_pad[col_map]
 
 
@@ -551,12 +571,33 @@ class _ChunkSpan(NamedTuple):
     """One pipelined span of the slice stream: the merge partitioning
     applied to a slice range (every device holds an equal share of THIS
     span's width-rows, so all devices finish a span together and its psum
-    overlaps the next span's compute)."""
+    overlaps the next span's compute).
+
+    For a ``compact_x`` plan each span additionally carries its own
+    touched-column split (the overlapped-gather feed): ``sub`` holds the
+    sorted plan-space positions this span's re-dealt rows touch on each
+    device, ``col_map`` the matching GLOBAL column ids
+    (``col_map == plan col_map[sub]`` row-wise), and ``n_touched`` the true
+    per-device count. The overlapped multiply rebuilds span ``i``'s piece
+    of the gathered slab *inside* the mesh region —
+    ``slab.at[sub].set(x[col_map])`` — so XLA can run span ``i+1``'s
+    gather under span ``i``'s kernel/psum instead of serializing one
+    monolithic gather ahead of the first launch. Padding entries carry the
+    consistent pair (``sub == 0``, ``col_map == plan col_map[:, 0]``):
+    duplicate scatter writes then all carry the identical value, keeping
+    the slab deterministic and bitwise-equal to the up-front gather."""
     slice_start: int         # first global slice of the span
     num_slices: int          # slices in the span (> 0)
     data: jax.Array          # [P, Wc, C] — zero-padded equal shares
     cols: jax.Array          # int32[P, Wc, C]
     slice_of: jax.Array      # int32[P, Wc] — GLOBAL slice ids
+    sub: Optional[jax.Array] = None
+                             # int32[P, Nsub] — plan-space positions this
+                             #   span touches (compact plans only)
+    col_map: Optional[jax.Array] = None
+                             # int32[P, Nsub] — their global column ids
+    n_touched: Optional[jax.Array] = None
+                             # int32[P] — true touched count per device
 
 
 class _ChunkPlan(NamedTuple):
@@ -564,7 +605,9 @@ class _ChunkPlan(NamedTuple):
     touched-column map of the RE-DEALT ownership: the span deal gives each
     device different width-rows than the base partition, so the base
     ``col_map`` does not cover them; one map per device spans all its rows
-    across every span (one gathered slab per multiply, not one per span)."""
+    across every span (one gathered slab per multiply, not one per span).
+    Each span also carries its own per-span split of that map (see
+    ``_ChunkSpan``) so the gather can be overlapped with the span loop."""
     spans: Tuple[_ChunkSpan, ...]
     col_map: Optional[jax.Array]     # int32[P, Ntc'] — None when uncompacted
     n_touched: Optional[jax.Array]   # int32[P]
@@ -662,6 +705,7 @@ def _chunk_substreams(sharded: ShardedSellCS, num_chunks: int, *,
                 So[p, :ln] = g_so[a + db[p]:a + db[p + 1]].astype(np.int32)
         raw.append((s0, s1 - s0, D, Cc, So, np.diff(db)))
     plan_map = plan_nt = None
+    span_maps = [() for _ in raw]
     if compact:
         # touched set of the RE-DEALT ownership: device p's rows across all
         # spans, then one searchsorted relabel per (span, device) block
@@ -679,25 +723,71 @@ def _chunk_substreams(sharded: ShardedSellCS, num_chunks: int, *,
                     Cc[p, :ln] = np.searchsorted(touched[p], Cc[p, :ln])
         plan_map = jnp.asarray(cm.astype(np.int32))
         plan_nt = jnp.asarray(nt.astype(np.int32))
+        # per-span touched split for the overlapped gather: the sorted
+        # plan-space positions span i's rows touch on each device, plus
+        # their global ids. Padding rows carry the consistent pair
+        # (sub == 0, col_map == cm[p, 0]) so every duplicate scatter write
+        # lands the same value (deterministic slab; see _ChunkSpan).
+        span_maps = []
+        for _, _, _, Cc, _, lens in raw:
+            subs = [np.unique(Cc[p, :int(lens[p])].ravel())
+                    if int(lens[p]) else np.zeros(0, np.int64)
+                    for p in range(Pdev)]
+            ns = np.array([s.size for s in subs], np.int64)
+            Wsub = max(int(ns.max()), 1)
+            sub = np.zeros((Pdev, Wsub), np.int64)
+            gcm = np.zeros((Pdev, Wsub), np.int64)
+            for p, s in enumerate(subs):
+                sub[p, :s.size] = s
+                gcm[p, :s.size] = cm[p][s]
+                gcm[p, s.size:] = cm[p, 0]
+            span_maps.append((jnp.asarray(sub.astype(np.int32)),
+                              jnp.asarray(gcm.astype(np.int32)),
+                              jnp.asarray(ns.astype(np.int32))))
     spans = tuple(
         _ChunkSpan(s0, ns, jnp.asarray(D), jnp.asarray(Cc.astype(np.int32)),
-                   jnp.asarray(So))
-        for s0, ns, D, Cc, So, _ in raw)
+                   jnp.asarray(So), *sm)
+        for (s0, ns, D, Cc, So, _), sm in zip(raw, span_maps))
     # spans nonempty: bounds pin [0, S] and S >= 1
     return _ChunkPlan(spans, plan_map, plan_nt)
 
 
 
+GATHER_MODES = ("upfront", "overlap", "fused")
+
+
+def _resolve_gather(gather: Optional[str], compact: bool) -> str:
+    """Validate the gather-scheduling knob. ``None`` (the default) is the
+    up-front gather — byte-identical to the pre-knob behavior. The
+    overlapped and fused modes only exist where a gather exists: a
+    replicated-X stream has nothing to hide."""
+    if gather is None:
+        return "upfront"
+    if gather not in GATHER_MODES:
+        raise ValueError(
+            f"gather must be one of {GATHER_MODES} or None, got {gather!r}")
+    if gather != "upfront" and not compact:
+        raise ValueError(
+            f"gather={gather!r} needs a compact_x partition — a "
+            "replicated-X stream has no X gather to hide; repartition "
+            "with compact_x=True")
+    return gather
+
+
 def _local_slots(data, cols, slice_of, x_rep, *, num_slices, chunk,
-                 use_pallas, k_tile, interpret):
+                 use_pallas, k_tile, interpret, col_map=None):
     """Shard-local compute: the PR-1 k-tiled Pallas kernel, or its jnp twin
-    off-TPU. Inputs carry a leading length-1 device-block axis."""
+    off-TPU. Inputs carry a leading length-1 device-block axis. With
+    ``col_map`` the gather is fused into the kernel: ``x_rep`` is the full
+    (ungathered) X and the kernel indexes it through the map."""
     if use_pallas:
         return sellcs_slots(data[0], cols[0], slice_of[0], x_rep,
                             num_slices=num_slices, chunk=chunk,
-                            k_tile=k_tile, interpret=interpret)
+                            k_tile=k_tile, interpret=interpret,
+                            col_map=col_map)
     return sellcs_slots_ref(data[0], cols[0], slice_of[0], x_rep,
-                            num_slices=num_slices, chunk=chunk)
+                            num_slices=num_slices, chunk=chunk,
+                            col_map=col_map)
 
 
 def _local_slots_t(data, cols, slice_of, x_slots, *, n_out, chunk,
@@ -738,12 +828,18 @@ def _symmetric_combine(multiply, sharded: ShardedSellCS, x: jax.Array,
     """One-triangle symmetric multiply: run the normal and transpose
     passes over the stored triangle and subtract the double-counted
     diagonal (``A X = N(X) + T(X) - diag * X``). ``op='N'`` and ``op='T'``
-    coincide — ``A == A^T``."""
+    coincide — ``A == A^T``.
+
+    The diag term is cast to the kernel-path output dtype BEFORE the
+    multiply: a wider stored diagonal (e.g. f64 diag over an f32 pallas
+    result) must not out-promote the combine and silently hand back a
+    different dtype than the general path would."""
     x2, squeeze = _as_2d(x)
     general = sharded._replace(structure="general")
     y_n = multiply(general, x2, op="N", **kw)
     y_t = multiply(general, x2, op="T", **kw)
-    y = y_n + y_t - sharded.diag[:, None] * x2.astype(y_n.dtype)
+    y = y_n + y_t - (sharded.diag.astype(y_n.dtype)[:, None]
+                     * x2.astype(y_n.dtype))
     return y[:, 0] if squeeze else y
 
 
@@ -762,7 +858,8 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
                          k_tile: Optional[int] = None,
                          model_axis: Optional[str] = None,
                          compact_x: Optional[bool] = None,
-                         op: str = "N") -> jax.Array:
+                         op: str = "N",
+                         gather: Optional[str] = None) -> jax.Array:
     """Y = A @ X with slice banding: X replicated along ``axis``, Y
     shard-local slots, zero collectives inside the mesh region.
 
@@ -790,6 +887,15 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     scatter-adds through the touched-column map after the mesh region —
     the touched-*column* map becomes a touched-*output-row* map.
 
+    ``gather=`` schedules the compact-X gather: ``"upfront"`` (default)
+    materializes the slab ahead of the mesh region, ``"fused"`` feeds the
+    full X and lets the kernel index it through ``col_map`` directly (the
+    map rides the Pallas scalar prefetch next to ``slice_of``), and
+    ``"overlap"`` degenerates to up-front here — the row schedule has no
+    span loop to hide the gather under. All modes are bitwise-identical;
+    the knob only moves WHEN the touched rows are read. ``op='T'`` has no
+    gather (X enters slot-permuted), so the knob is validated and ignored.
+
     Symmetric one-triangle partitions combine both passes over the stored
     triangle (``A X = N(X) + T(X) - diag * X``); ``op`` is then moot.
     """
@@ -797,7 +903,8 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
         return _symmetric_combine(
             lambda s, xx, **kw: spmm_row_distributed(
                 s, xx, mesh, axis, impl=impl, k_tile=k_tile,
-                model_axis=model_axis, compact_x=compact_x, **kw),
+                model_axis=model_axis, compact_x=compact_x, gather=gather,
+                **kw),
             sharded, x)
     m, n = sharded.shape
     C, S, Sp = sharded.chunk, sharded.num_slices, sharded.slices_per_shard
@@ -805,6 +912,7 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     x2, squeeze, k, kt, x_pad, use_pallas, maxis, pm, compact = _prep(
         sharded, x, mesh, axis, impl, k_tile, "row", model_axis, compact_x,
         op)
+    gmode = _resolve_gather(gather, compact)
     if sharded.nnz == 0:
         y = jnp.zeros((n if op == "T" else m, k),
                       _out_dtype(sharded, x2, use_pallas))
@@ -841,31 +949,48 @@ def spmm_row_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
                     yb, sharded.col_map, sharded.n_touched, n, k, squeeze))
             y = yb[:n, :k]
             return maybe_block(y[:, 0] if squeeze else y)
-    if compact:
-        with span("spmm/gather_x"):
-            x_feed = maybe_block(_gather_x(x_pad, sharded.col_map,
-                                           use_pallas))
-        x_spec = P(axis, None, maxis)
-    else:
-        x_feed, x_spec = x_pad, P(None, maxis)
+    if compact and gmode == "fused":
+        # the full X rides the mesh replicated and the kernel gathers
+        # through col_map in its own prefetch — no slab materializes
+        def local(data, cols, slice_of, cmap, x_loc):
+            with span("spmm/kernel"):
+                return _local_slots(data, cols, slice_of, x_loc,
+                                    num_slices=Sp, chunk=C,
+                                    use_pallas=use_pallas, k_tile=kt,
+                                    interpret=interpret, col_map=cmap[0])
 
-    def local(data, cols, slice_of, x_loc):
-        with span("spmm/kernel"):
-            return _local_slots(data, cols, slice_of,
-                                x_loc[0] if compact else x_loc,
-                                num_slices=Sp, chunk=C,
-                                use_pallas=use_pallas, k_tile=kt,
-                                interpret=impl == "pallas_interpret")
+        in_specs = (P(axis, None, None), P(axis, None, None),
+                    P(axis, None), P(axis, None), P(None, maxis))
+        args = (sharded.data, sharded.cols, sharded.slice_of,
+                sharded.col_map, x_pad)
+    else:
+        if compact:
+            # up-front gather ("overlap" degenerates here: no span loop)
+            with span("spmm/gather_x"):
+                x_feed = maybe_block(_gather_x(x_pad, sharded.col_map))
+            x_spec = P(axis, None, maxis)
+        else:
+            x_feed, x_spec = x_pad, P(None, maxis)
+
+        def local(data, cols, slice_of, x_loc):
+            with span("spmm/kernel"):
+                return _local_slots(data, cols, slice_of,
+                                    x_loc[0] if compact else x_loc,
+                                    num_slices=Sp, chunk=C,
+                                    use_pallas=use_pallas, k_tile=kt,
+                                    interpret=interpret)
+
+        in_specs = (P(axis, None, None), P(axis, None, None),
+                    P(axis, None), x_spec)
+        args = (sharded.data, sharded.cols, sharded.slice_of, x_feed)
 
     # pallas_call has no replication rule inside shard_map — skip the check
     with span("spmm/mesh"):
         yb = maybe_block(shard_map(
             local, mesh=mesh,
-            in_specs=(P(axis, None, None), P(axis, None, None),
-                      P(axis, None), x_spec),
+            in_specs=in_specs,
             out_specs=P(axis, maxis),
-            check_vma=False if use_pallas else None)(
-                sharded.data, sharded.cols, sharded.slice_of, x_feed))
+            check_vma=False if use_pallas else None)(*args))
     with span("spmm/fixup"):
         yb = yb.reshape(ndev, Sp * C, -1)
         # shard p owns global slices [slice_offset[p], slice_offset[p+1]);
@@ -889,7 +1014,8 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
                            num_chunks: int = 1,
                            model_axis: Optional[str] = None,
                            compact_x: Optional[bool] = None,
-                           op: str = "N") -> jax.Array:
+                           op: str = "N",
+                           gather: Optional[str] = None) -> jax.Array:
     """Y = A @ X with equal-width spans: per-device slot partials + psum
     carry-out fixup (the only collective). Survives the mawi dense-row
     pathology — the dense slice splits mid-stream.
@@ -937,13 +1063,30 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     space: they are summed locally, stacked per shard, and scatter-added
     through the map after the mesh region (see ``spmm_row_distributed``).
     Symmetric one-triangle partitions combine both passes; ``op`` is moot.
+
+    ``gather=`` schedules the compact-X gather: ``"upfront"`` (default)
+    materializes the per-shard slab ahead of the mesh region — one XLA
+    gather serialized before the first kernel launch. ``"overlap"``
+    (``num_chunks > 1`` only; degenerates to up-front otherwise) rebuilds
+    each span's piece of the slab INSIDE the mesh region from the plan's
+    per-span touched split (``_ChunkSpan.sub``/``col_map``) — the span
+    slabs have no cross-span data dependency, so span ``i+1``'s gather
+    runs under span ``i``'s kernel/psum, the same overlap the pipelined
+    fixup already exploits. ``"fused"`` feeds the full X and lets the
+    kernel index it through ``col_map`` in its scalar prefetch — no slab
+    at all. All modes are bitwise-identical (the gather only re-indexes X
+    rows; untouched slab positions are read only by data == 0 padding
+    lanes); the knob moves WHEN the touched rows are read, and the
+    roofline prices the exposed seconds of each choice
+    (``spmm_distributed_gather_s``). ``op='T'`` has no gather, so the
+    knob is validated and ignored.
     """
     if sharded.structure == "symmetric":
         return _symmetric_combine(
             lambda s, xx, **kw: spmm_merge_distributed(
                 s, xx, mesh, axis, impl=impl, k_tile=k_tile,
                 num_chunks=num_chunks, model_axis=model_axis,
-                compact_x=compact_x, **kw),
+                compact_x=compact_x, gather=gather, **kw),
             sharded, x)
     m, n = sharded.shape
     C, S = sharded.chunk, sharded.num_slices
@@ -953,6 +1096,7 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
     x2, squeeze, k, kt, x_pad, use_pallas, maxis, pm, compact = _prep(
         sharded, x, mesh, axis, impl, k_tile, "merge", model_axis,
         compact_x, op)
+    gmode = _resolve_gather(gather, compact)
     if sharded.nnz == 0:
         y = jnp.zeros((n if op == "T" else m, k),
                       _out_dtype(sharded, x2, use_pallas))
@@ -1024,34 +1168,52 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
             return maybe_block(y[:, 0] if squeeze else y)
 
     if nc == 1:
-        if compact:
-            with span("spmm/gather_x"):
-                x_feed = maybe_block(_gather_x(x_pad, sharded.col_map,
-                                               use_pallas))
-            x_spec = P(axis, None, maxis)
-        else:
-            x_feed, x_spec = x_pad, P(None, maxis)
+        if compact and gmode == "fused":
+            def local(data, cols, slice_of, cmap, x_loc):
+                with span("spmm/kernel"):
+                    y_loc = _local_slots(data, cols, slice_of, x_loc,
+                                         num_slices=S, chunk=C,
+                                         use_pallas=use_pallas, k_tile=kt,
+                                         interpret=interpret,
+                                         col_map=cmap[0])
+                with span("spmm/psum"):
+                    return jax.lax.psum(y_loc[:, :k_keep], axis)
 
-        def local(data, cols, slice_of, x_loc):
-            with span("spmm/kernel"):
-                y_loc = _local_slots(data, cols, slice_of,
-                                     x_loc[0] if compact else x_loc,
-                                     num_slices=S, chunk=C,
-                                     use_pallas=use_pallas, k_tile=kt,
-                                     interpret=interpret)
-            # carry-out fixup on the data axis ONLY: model shards own
-            # disjoint Y columns and never enter the collective
-            with span("spmm/psum"):
-                return jax.lax.psum(y_loc[:, :k_keep], axis)
+            in_specs = (P(axis, None, None), P(axis, None, None),
+                        P(axis, None), P(axis, None), P(None, maxis))
+            args = (sharded.data, sharded.cols, sharded.slice_of,
+                    sharded.col_map, x_pad)
+        else:
+            if compact:
+                # up-front gather ("overlap" degenerates: no span loop)
+                with span("spmm/gather_x"):
+                    x_feed = maybe_block(_gather_x(x_pad, sharded.col_map))
+                x_spec = P(axis, None, maxis)
+            else:
+                x_feed, x_spec = x_pad, P(None, maxis)
+
+            def local(data, cols, slice_of, x_loc):
+                with span("spmm/kernel"):
+                    y_loc = _local_slots(data, cols, slice_of,
+                                         x_loc[0] if compact else x_loc,
+                                         num_slices=S, chunk=C,
+                                         use_pallas=use_pallas, k_tile=kt,
+                                         interpret=interpret)
+                # carry-out fixup on the data axis ONLY: model shards own
+                # disjoint Y columns and never enter the collective
+                with span("spmm/psum"):
+                    return jax.lax.psum(y_loc[:, :k_keep], axis)
+
+            in_specs = (P(axis, None, None), P(axis, None, None),
+                        P(axis, None), x_spec)
+            args = (sharded.data, sharded.cols, sharded.slice_of, x_feed)
 
         with span("spmm/mesh"):
             y_slots = maybe_block(shard_map(
                 local, mesh=mesh,
-                in_specs=(P(axis, None, None), P(axis, None, None),
-                          P(axis, None), x_spec),
+                in_specs=in_specs,
                 out_specs=P(None, maxis),
-                check_vma=False if use_pallas else None)(
-                    sharded.data, sharded.cols, sharded.slice_of, x_feed))
+                check_vma=False if use_pallas else None)(*args))
         with span("spmm/fixup"):
             return maybe_block(_unpermute(sharded, y_slots, k, squeeze))
 
@@ -1062,48 +1224,103 @@ def spmm_merge_distributed(sharded: ShardedSellCS, x: jax.Array, mesh: Mesh,
         plan = _chunk_substreams(sharded, nc)
         spans, plan_map = plan.spans, plan.col_map
     meta = [(sp.slice_start, sp.num_slices) for sp in spans]
-    if compact:
-        # the spans' cols live in the chunk plan's index space, not the
-        # base partition's — gather through the plan map
-        with span("spmm/gather_x"):
-            x_feed = maybe_block(_gather_x(x_pad, plan_map, use_pallas))
-        x_spec = P(axis, None, maxis)
-    else:
-        x_feed, x_spec = x_pad, P(None, maxis)
-
-    def local(datas, colss, sos, x_loc):
-        # one (kernel -> psum) pair per span with no cross-span data
-        # dependency: the span-i all-reduce-start can run under the
-        # span-(i+1) kernel.
-        x_loc = x_loc[0] if compact else x_loc
-        outs = []
-        for (s0, ns), data, cols, slice_of in zip(meta, datas, colss, sos):
-            with span("spmm/kernel"):
-                if use_pallas:
-                    y_c = sellcs_slots_chunk(
-                        data[0], cols[0], slice_of[0], x_loc,
-                        slice_start=s0, num_slices=ns, chunk=C, k_tile=kt,
-                        interpret=interpret)
-                else:
-                    y_c = sellcs_slots_chunk_ref(
-                        data[0], cols[0], slice_of[0], x_loc,
-                        slice_start=s0, num_slices=ns, chunk=C)
-            with span("spmm/psum"):
-                outs.append(jax.lax.psum(y_c[:, :k_keep], axis))
-        # span i's rows sit at global slots [s0*C, (s0 + ns)*C); the spans
-        # tile [0, S) in order, so concatenation IS the slot array
-        return jnp.concatenate(outs, axis=0)
-
     span_spec = tuple(P(axis, None, None) for _ in spans)
+    so_spec = tuple(P(axis, None) for _ in spans)
+    span_args = (tuple(sp.data for sp in spans),
+                 tuple(sp.cols for sp in spans),
+                 tuple(sp.slice_of for sp in spans))
+
+    def _span_kernel(data, cols, slice_of, x_loc, s0, ns, col_map=None):
+        if use_pallas:
+            return sellcs_slots_chunk(
+                data[0], cols[0], slice_of[0], x_loc,
+                slice_start=s0, num_slices=ns, chunk=C, k_tile=kt,
+                interpret=interpret, col_map=col_map)
+        return sellcs_slots_chunk_ref(
+            data[0], cols[0], slice_of[0], x_loc,
+            slice_start=s0, num_slices=ns, chunk=C, col_map=col_map)
+
+    if compact and gmode == "overlap" and \
+            all(sp.sub is not None for sp in spans):
+        # the overlapped gather: each span rebuilds its own piece of the
+        # plan-space slab inside the mesh region — no data dependency
+        # between span slabs, so XLA runs span i+1's gather (and its
+        # kernel) under span i's psum, exactly like the pipelined fixup.
+        # Untouched slab positions stay 0 and are only ever read by
+        # data == 0 padding lanes, so the answer is bitwise-identical to
+        # the up-front gather.
+        ntc_plan = int(plan_map.shape[1])
+
+        def local(datas, colss, sos, subs, cmaps, x_loc):
+            outs = []
+            for i, ((s0, ns), data, cols, slice_of, sub, cmap) in \
+                    enumerate(zip(meta, datas, colss, sos, subs, cmaps)):
+                with span(f"spmm/gather_x/span{i}"):
+                    slab = jnp.zeros(
+                        (ntc_plan, x_loc.shape[1]), x_loc.dtype
+                    ).at[sub[0]].set(x_loc[cmap[0]])
+                with span("spmm/kernel"):
+                    y_c = _span_kernel(data, cols, slice_of, slab, s0, ns)
+                with span("spmm/psum"):
+                    outs.append(jax.lax.psum(y_c[:, :k_keep], axis))
+            return jnp.concatenate(outs, axis=0)
+
+        map_spec = tuple(P(axis, None) for _ in spans)
+        in_specs = (span_spec, span_spec, so_spec, map_spec, map_spec,
+                    P(None, maxis))
+        args = span_args + (tuple(sp.sub for sp in spans),
+                            tuple(sp.col_map for sp in spans), x_pad)
+    elif compact and gmode == "fused":
+        def local(datas, colss, sos, cmap, x_loc):
+            cm0 = cmap[0]
+            outs = []
+            for (s0, ns), data, cols, slice_of in zip(meta, datas, colss,
+                                                      sos):
+                with span("spmm/kernel"):
+                    y_c = _span_kernel(data, cols, slice_of, x_loc, s0, ns,
+                                       col_map=cm0)
+                with span("spmm/psum"):
+                    outs.append(jax.lax.psum(y_c[:, :k_keep], axis))
+            return jnp.concatenate(outs, axis=0)
+
+        in_specs = (span_spec, span_spec, so_spec, P(axis, None),
+                    P(None, maxis))
+        args = span_args + (plan_map, x_pad)
+    else:
+        if compact:
+            # the spans' cols live in the chunk plan's index space, not
+            # the base partition's — gather through the plan map
+            with span("spmm/gather_x"):
+                x_feed = maybe_block(_gather_x(x_pad, plan_map))
+            x_spec = P(axis, None, maxis)
+        else:
+            x_feed, x_spec = x_pad, P(None, maxis)
+
+        def local(datas, colss, sos, x_loc):
+            # one (kernel -> psum) pair per span with no cross-span data
+            # dependency: the span-i all-reduce-start can run under the
+            # span-(i+1) kernel.
+            x_loc = x_loc[0] if compact else x_loc
+            outs = []
+            for (s0, ns), data, cols, slice_of in zip(meta, datas, colss,
+                                                      sos):
+                with span("spmm/kernel"):
+                    y_c = _span_kernel(data, cols, slice_of, x_loc, s0, ns)
+                with span("spmm/psum"):
+                    outs.append(jax.lax.psum(y_c[:, :k_keep], axis))
+            # span i's rows sit at global slots [s0*C, (s0 + ns)*C); the
+            # spans tile [0, S) in order, so concatenation IS the slot
+            # array
+            return jnp.concatenate(outs, axis=0)
+
+        in_specs = (span_spec, span_spec, so_spec, x_spec)
+        args = span_args + (x_feed,)
+
     with span("spmm/mesh"):
         y_slots = maybe_block(shard_map(
             local, mesh=mesh,
-            in_specs=(span_spec, span_spec,
-                      tuple(P(axis, None) for _ in spans), x_spec),
+            in_specs=in_specs,
             out_specs=P(None, maxis),
-            check_vma=False if use_pallas else None)(
-                tuple(sp.data for sp in spans),
-                tuple(sp.cols for sp in spans),
-                tuple(sp.slice_of for sp in spans), x_feed))
+            check_vma=False if use_pallas else None)(*args))
     with span("spmm/fixup"):
         return maybe_block(_unpermute(sharded, y_slots, k, squeeze))

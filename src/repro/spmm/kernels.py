@@ -257,11 +257,44 @@ def _sellcs_kernel(slice_of_ref,                  # scalar prefetch (SMEM)
     jax.lax.fori_loop(0, w_tile, body, None)
 
 
+def _sellcs_fused_kernel(slice_of_ref, col_map_ref,  # scalar prefetch (SMEM)
+                         data_ref, cols_ref, x_ref,  # VMEM in
+                         y_ref,                      # VMEM out (revisited)
+                         *, w_tile: int, chunk: int):
+    """``_sellcs_kernel`` with the compact-X gather fused into the stream:
+    stored ``cols`` are compact ids, ``col_map`` (riding the scalar prefetch
+    next to ``slice_of``) maps them to rows of the full padded X, so no
+    up-front slab materialization happens outside the kernel."""
+    g = pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    cols = cols_ref[...]                                       # (WT, C)
+    gcols = jnp.take(col_map_ref[...], cols.reshape(-1),
+                     mode="clip")                              # (WT*C,)
+    xs = jnp.take(x_ref[...], gcols, axis=0, mode="clip")      # (WT*C, KT)
+    kt = xs.shape[1]
+    contrib = (data_ref[...].astype(jnp.float32).reshape(-1)[:, None]
+               * xs.astype(jnp.float32)
+               ).reshape(w_tile, chunk, kt)                    # (WT, C, KT)
+
+    def body(w, _):
+        s = slice_of_ref[g * w_tile + w]
+        cur = y_ref[pl.ds(s * chunk, chunk), :]
+        y_ref[pl.ds(s * chunk, chunk), :] = cur + contrib[w]
+        return _
+
+    jax.lax.fori_loop(0, w_tile, body, None)
+
+
 @functools.partial(jax.jit, static_argnames=("num_slices", "chunk",
                                              "k_tile", "interpret"))
 def sellcs_slots(data: jax.Array, cols: jax.Array, slice_of: jax.Array,
                  x_pad: jax.Array, *, num_slices: int, chunk: int,
-                 k_tile: int, interpret: bool = False) -> jax.Array:
+                 k_tile: int, interpret: bool = False,
+                 col_map: jax.Array | None = None) -> jax.Array:
     """Raw-array slot-space SpMM over a SELL-C-σ width-row stream.
 
     Accumulates into row slots ``[num_slices * chunk, Kp]`` without applying
@@ -269,6 +302,11 @@ def sellcs_slots(data: jax.Array, cols: jax.Array, slice_of: jax.Array,
     schedules (``repro.spmm.distributed``): a shard's slice stream is just a
     shorter width-row stream with its own ``slice_of``/``num_slices``, so
     the same k-tiled Pallas kernel serves one device or a mesh body.
+
+    With ``col_map`` (int32[Ntc], LANE-padded, padding pointing at row 0)
+    the stored ``cols`` are compact ids and the gather into the full
+    ``x_pad`` fuses into the kernel via a second scalar-prefetch operand —
+    the ``gather="fused"`` mode of the distributed multiplies.
     """
     C = chunk
     S = num_slices
@@ -285,7 +323,7 @@ def sellcs_slots(data: jax.Array, cols: jax.Array, slice_of: jax.Array,
     np_, Kp = x_pad.shape
     nk = Kp // k_tile
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2 if col_map is not None else 1,
         grid=(nk, Wp // W_TILE),
         in_specs=[
             pl.BlockSpec((W_TILE, C), lambda j, g, *_: (g, 0)),
@@ -294,20 +332,28 @@ def sellcs_slots(data: jax.Array, cols: jax.Array, slice_of: jax.Array,
         ],
         out_specs=pl.BlockSpec((S * C, k_tile), lambda j, g, *_: (0, j)),
     )
+    if col_map is not None:
+        kernel = functools.partial(_sellcs_fused_kernel,
+                                   w_tile=W_TILE, chunk=C)
+        operands = (slice_of, col_map, data, cols, x_pad)
+    else:
+        kernel = functools.partial(_sellcs_kernel, w_tile=W_TILE, chunk=C)
+        operands = (slice_of, data, cols, x_pad)
     return pl.pallas_call(
-        functools.partial(_sellcs_kernel, w_tile=W_TILE, chunk=C),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((S * C, Kp), jnp.float32),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(slice_of, data, cols, x_pad)
+    )(*operands)
 
 
 def sellcs_slots_chunk(data: jax.Array, cols: jax.Array,
                        slice_of: jax.Array, x_pad: jax.Array, *,
                        slice_start: int, num_slices: int, chunk: int,
-                       k_tile: int, interpret: bool = False) -> jax.Array:
+                       k_tile: int, interpret: bool = False,
+                       col_map: jax.Array | None = None) -> jax.Array:
     """``sellcs_slots`` over one *chunk sub-stream* of the slice stream.
 
     The chunked distributed merge schedule (``repro.spmm.distributed``)
@@ -321,7 +367,8 @@ def sellcs_slots_chunk(data: jax.Array, cols: jax.Array,
     local = jnp.clip(slice_of.astype(jnp.int32) - slice_start, 0,
                      max(num_slices - 1, 0))
     return sellcs_slots(data, cols, local, x_pad, num_slices=num_slices,
-                        chunk=chunk, k_tile=k_tile, interpret=interpret)
+                        chunk=chunk, k_tile=k_tile, interpret=interpret,
+                        col_map=col_map)
 
 
 def _sellcs_spmm_slots(sc: SellCS, x_pad: jax.Array, *, k_tile: int,

@@ -120,6 +120,8 @@ class RealizedPlan(NamedTuple):
                                  mesh_shape=sp.mesh_shape,
                                  compact_x=bool(sp.compact_x),
                                  structure=sp.structure or "general",
+                                 gather=((sp.gather or "upfront")
+                                         if sp.compact_x else None),
                                  **extra)
         return choice_labels(schedule="single", num_chunks=1,
                              mesh_shape=(1, 1), compact_x=None, **extra)
@@ -359,7 +361,9 @@ class SparseOperator:
             plan = _mesh_plan(sharded, rp.local_matrix, self._mstats, mesh,
                               schedule=sp.schedule, chunks=nc, pd=pd, pm=pm,
                               compact=compact, impl_r=rp.impl,
-                              time_fn=spmm_distributed_time, t0=t0)
+                              time_fn=spmm_distributed_time, t0=t0,
+                              gather=((sp.gather or "upfront") if compact
+                                      else "upfront"))
         return self.swap(plan)
 
 
@@ -515,6 +519,7 @@ def _realize_mesh(coo, stats, spec, *, impl, k_hint, num_spmvs, feedback,
     schedule, chunks = choice.schedule, choice.num_chunks
     (pd, pm), compact = choice.mesh_shape, choice.compact_x
     structure = choice.structure
+    gather = choice.gather if compact else "upfront"
     mesh = make_spmm_mesh((pd, pm))
     c = _pick_chunk(stats.m, pd)
     skey = (c, structure)
@@ -545,41 +550,46 @@ def _realize_mesh(coo, stats, spec, *, impl, k_hint, num_spmvs, feedback,
         sharded = rechunk_sellcs(base, chunks)
     return _mesh_plan(sharded, sc, stats, mesh, schedule=schedule,
                       chunks=chunks, pd=pd, pm=pm, compact=compact,
-                      impl_r=impl_r, time_fn=time_fn, t0=t0)
+                      impl_r=impl_r, time_fn=time_fn, t0=t0, gather=gather)
 
 
 def _mesh_plan(sharded, sc, stats, mesh, *, schedule, chunks, pd, pm,
-               compact, impl_r, time_fn, t0):
+               compact, impl_r, time_fn, t0, gather="upfront"):
     """Close a :class:`RealizedPlan` over an already-partitioned stream —
     the shared tail of the convert-time realize and the device-loss
     ``shrink_to`` re-deal (which brings its own survivors' mesh)."""
     from repro.spmm.distributed import (spmm_merge_distributed,
                                         spmm_row_distributed)
     structure = getattr(sharded, "structure", "general")
+    gx = gather if compact else None
     if schedule == "row":
         eager = lambda X: spmm_row_distributed(sharded, X, mesh,
-                                               impl=impl_r)
+                                               impl=impl_r, gather=gx)
         eager_t = lambda X: spmm_row_distributed(sharded, X, mesh,
-                                                 impl=impl_r, op="T")
+                                                 impl=impl_r, op="T",
+                                                 gather=gx)
     else:
         eager = lambda X: spmm_merge_distributed(sharded, X, mesh,
                                                  impl=impl_r,
-                                                 num_chunks=chunks)
+                                                 num_chunks=chunks,
+                                                 gather=gx)
         eager_t = lambda X: spmm_merge_distributed(sharded, X, mesh,
                                                    impl=impl_r,
                                                    num_chunks=chunks,
-                                                   op="T")
+                                                   op="T", gather=gx)
     # the jitted closure keeps repeated flushes of one batch shape from
     # retracing the shard_map body
     jitted = jax.jit(eager)
     jitted_t = jax.jit(eager_t)
     mesh_tag = f"{pd}x{pm}mesh" if pm > 1 else f"{pd}dev"
     cx_tag = "/cx=on" if compact else ""
+    gx_tag = f"/gx={gather}" if compact and gather != "upfront" else ""
     sym_tag = "/sym" if structure == "symmetric" else ""
     if schedule == "row":
-        label = f"sellcs+row@{mesh_tag}{cx_tag}{sym_tag}"
+        label = f"sellcs+row@{mesh_tag}{cx_tag}{gx_tag}{sym_tag}"
     else:
-        label = f"sellcs+merge@{mesh_tag}/chunks={chunks}{cx_tag}{sym_tag}"
+        label = (f"sellcs+merge@{mesh_tag}/chunks={chunks}"
+                 f"{cx_tag}{gx_tag}{sym_tag}")
     # price the gather with the map the multiply EXECUTES: the chunked
     # merge gathers through the chunk plan's re-dealt map, not the base
     # partition's
@@ -596,12 +606,14 @@ def _mesh_plan(sharded, sc, stats, mesh, *, schedule, chunks, pd, pm,
                        max_row_nnz=stats.max_row_nnz, num_chunks=chunks,
                        model_devices=pm, compact_x=compact,
                        n_touched=n_touched, nnz=stats.nnz,
-                       structure=structure)
+                       structure=structure,
+                       gather=gather if compact else "upfront")
 
     resolved = PlanSpec(num_devices=pd * pm, mesh_shape=(pd, pm),
                         num_chunks=chunks, compact_x=compact,
                         schedule=schedule, algorithm="sellcs",
-                        structure=structure)
+                        structure=structure,
+                        gather=gather if compact else None)
     return RealizedPlan(resolved, label, sharded, sc, jitted, eager,
                         impl_r, n_touched, model_s,
                         time.perf_counter() - t0,

@@ -289,9 +289,10 @@ def test_select_distributed_records_num_chunks():
     assert isinstance(choice, DistributedChoice)
     assert choice.schedule == "merge" and choice.num_chunks in \
         CHUNK_CANDIDATES and choice.num_chunks > 1
-    algo, sched, nc, mesh, cx, st = choice    # unpacks like a tuple
-    assert (algo, sched, nc, mesh, cx, st) == tuple(choice)
+    algo, sched, nc, mesh, cx, st, gx = choice   # unpacks like a tuple
+    assert (algo, sched, nc, mesh, cx, st, gx) == tuple(choice)
     assert st == "general"                    # nothing symmetric here
+    assert gx in ("upfront", "overlap", "fused")
     assert mesh[0] * mesh[1] == 8
     assert select_distributed(uni, k=8, num_devices=8).num_chunks == 1
 
@@ -444,6 +445,9 @@ def test_sharded_sellcs_storage_bytes_counts_col_map():
             for sp in sh.chunk_plan[1]:
                 total += (sp.data.nbytes + sp.cols.nbytes
                           + sp.slice_of.nbytes)
+                for opt in (sp.sub, sp.col_map, sp.n_touched):
+                    if opt is not None:
+                        total += opt.nbytes
             for opt in sh.chunk_plan[2:]:
                 if opt is not None:
                     total += opt.nbytes
